@@ -1,0 +1,82 @@
+"""Figure 6 reproduction: weighted Jaccard under binary / logarithmic /
+raw-count / squared TF weights -- partition size, partition time, query
+latency vs n and vs f (MonoActive; k scaled down for CPU).
+
+Paper claims: size(binary) < size(log) < size(raw) < size(squared);
+binary ~O(n), log ~O(n log log f), raw/squared ~O(n log f) (Lemma 13).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ICWS, mono_active_icws
+from repro.core.index import WeightedScheme
+from repro.core.query import query
+from repro.core import AlignmentIndex
+from repro.core.weights import WeightFn
+
+from .common import controlled_f_text, print_table, save_result, timed, \
+    zipf_text
+
+TFS = ("binary", "log", "raw", "squared")
+
+
+def run(quick: bool = True) -> dict:
+    icws = ICWS.from_seed(11, 2)
+    rows_n, rows_f, rows_q = [], [], []
+
+    ns = [1000, 3000, 10000] if quick else [1000, 3000, 10000, 30000]
+    for n in ns:
+        text = zipf_text(n, seed=4)
+        row = {"n": n}
+        for tf in TFS:
+            w = WeightFn(tf=tf, idf="unary")
+            parts, t = timed(lambda: [mono_active_icws(text, h, w)
+                                      for h in icws])
+            row[f"{tf}_windows"] = sum(len(p) for p in parts)
+            row[f"{tf}_s"] = t
+        rows_n.append(row)
+
+    n = 5000
+    fs = [10, 100, 500] if quick else [10, 100, 500, 1500]
+    for f in fs:
+        text = controlled_f_text(n, f, seed=5)
+        row = {"f": f}
+        for tf in TFS:
+            w = WeightFn(tf=tf, idf="unary")
+            parts, t = timed(lambda: [mono_active_icws(text, h, w)
+                                      for h in icws])
+            row[f"{tf}_windows"] = sum(len(p) for p in parts)
+            row[f"{tf}_s"] = t
+        rows_f.append(row)
+
+    # query latency per weight function (small corpus)
+    k = 8
+    rng = np.random.default_rng(6)
+    docs = [zipf_text(1500, seed=100 + i) for i in range(6)]
+    qtext = docs[2][200:300].copy()
+    for tf in TFS:
+        scheme = WeightedScheme(weight=WeightFn(tf=tf, idf="unary"),
+                                seed=3, k=k)
+        idx = AlignmentIndex(scheme=scheme).build(docs)
+        res, t = timed(lambda: query(idx, qtext, 0.6), repeat=3)
+        rows_q.append({"tf": tf, "windows": idx.num_windows,
+                       "query_s": t, "hits": len(res)})
+
+    print_table("Fig6(a-d): partition size/time vs n (k=2)", rows_n)
+    print_table("Fig6(g-j): partition size/time vs f (n=5000)", rows_f)
+    print_table("Fig6(e,f,k,l): query latency by weight fn (k=8)", rows_q)
+
+    last = rows_f[-1]
+    claims = {
+        "size_order_binary<log<raw<squared": bool(
+            last["binary_windows"] <= last["log_windows"]
+            <= last["raw_windows"] <= last["squared_windows"]),
+        "binary_flat_in_f": bool(
+            rows_f[-1]["binary_windows"] < 1.15 * rows_f[0]["binary_windows"]),
+        "every_query_finds_planted_hit": all(r["hits"] >= 1 for r in rows_q),
+    }
+    rec = {"vs_n": rows_n, "vs_f": rows_f, "query": rows_q, "claims": claims}
+    save_result("weights", rec)
+    return rec

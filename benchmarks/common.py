@@ -1,0 +1,69 @@
+"""Shared benchmark utilities: controlled text generation, timing, tables."""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "bench"
+
+
+def zipf_text(n: int, *, alpha: float = 1.3, vocab: int = 50_257,
+              seed: int = 0) -> np.ndarray:
+    """OWT-like token stream: Zipf-distributed ids (BPE-ish frequencies)."""
+    rng = np.random.default_rng(seed)
+    t = rng.zipf(alpha, size=n)
+    return np.minimum(t - 1, vocab - 1).astype(np.int64)
+
+
+def controlled_f_text(n: int, f: int, *, seed: int = 0) -> np.ndarray:
+    """Length-n text where every token appears ~f times (max frequency f)."""
+    v = max(1, n // f)
+    rng = np.random.default_rng(seed)
+    t = np.repeat(np.arange(v, dtype=np.int64), f)[:n]
+    if len(t) < n:
+        t = np.concatenate([t, rng.integers(0, v, n - len(t))])
+    rng.shuffle(t)
+    return t
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def save_result(name: str, record: dict):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.json").write_text(json.dumps(record, indent=1,
+                                                     default=str))
+
+
+def print_table(title: str, rows: list[dict]):
+    if not rows:
+        print(f"== {title}: no rows ==")
+        return
+    cols = list(rows[0].keys())
+    widths = {c: max(len(str(c)), *(len(_fmt(r[c])) for r in rows))
+              for c in cols}
+    print(f"\n== {title} ==")
+    print("  ".join(str(c).ljust(widths[c]) for c in cols))
+    for r in rows:
+        print("  ".join(_fmt(r[c]).ljust(widths[c]) for c in cols))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) >= 1000 or abs(v) < 0.001:
+            return f"{v:.3g}"
+        return f"{v:.4g}"
+    return str(v)

@@ -1,0 +1,80 @@
+"""Memorization analysis (the paper's §1 LLM application): train a tiny LM,
+sample from it with the KV-cache decode path, and align every generation
+against the training corpus index -- verbatim/near-verbatim regurgitation
+shows up as high-theta alignments.
+
+    PYTHONPATH=src python examples/memorization_scan.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import AlignmentIndex, query
+from repro.data import PackedDataset, default_scheme, synthetic_corpus, \
+    HashWordTokenizer
+from repro.models import RunFlags, decode_step, init_params, prefill
+from repro.train import OptConfig, init_opt_state, make_train_step
+
+
+def main():
+    tok = HashWordTokenizer(vocab=2048)
+    # tiny corpus with one document repeated many times -> the model WILL
+    # memorize it
+    docs = tok.encode_batch(synthetic_corpus(60, seed=3, dup_fraction=0.0,
+                                             mean_len=48))
+    secret = docs[0]
+    train_docs = docs + [secret] * 40
+
+    cfg = dataclasses.replace(
+        get_config("qwen1.5-4b").reduced(vocab=2048, d_model=128, n_heads=8,
+                                         n_kv_heads=4, head_dim=16, d_ff=512),
+        compute_dtype="float32")
+    flags = RunFlags(moe_mode="dense", remat_policy="none", q_chunk=0,
+                     scan_chunk=64)
+    data = PackedDataset.pack(train_docs, 64)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    step = jax.jit(make_train_step(
+        cfg, OptConfig(lr=5e-3, warmup_steps=10, decay_steps=400),
+        flags=flags), donate_argnums=(0, 1))
+    it = data.batches(8, seed=0)
+    for i in range(150):
+        params, opt, m = step(params, opt, next(it))
+        if (i + 1) % 50 == 0:
+            print(f"step {i+1} loss {float(m['loss']):.3f}")
+
+    # index the training corpus with the paper's structure
+    index = AlignmentIndex(scheme=default_scheme("multiset", seed=5, k=24))
+    for d in train_docs:
+        index.add_text(d)
+
+    # greedy-decode continuations of the secret prefix
+    prompt = jnp.asarray(secret[:8][None, :], jnp.int32)
+    logits, cache = prefill(params, cfg, tokens=prompt, max_seq=72,
+                            flags=flags)
+    out_tokens = []
+    tok_next = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    for t in range(40):
+        out_tokens.append(int(tok_next[0, 0]))
+        logits, cache = decode_step(params, cache, tok_next,
+                                    jnp.int32(8 + t), cfg, flags=flags)
+        tok_next = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    gen = np.asarray(out_tokens, np.int64)
+
+    overlap = np.mean(gen[:len(secret) - 8] == secret[8:8 + len(gen)])
+    hits = query(index, gen, 0.5)
+    mem_docs = {h.text_id for h in hits}
+    print(f"\ngenerated 40 tokens; token-overlap with memorized doc: "
+          f"{overlap:.0%}")
+    print(f"alignment scan: generation aligns with {len(mem_docs)} training "
+          f"doc(s) at theta=0.5 -> memorization {'DETECTED' if hits else 'none'}")
+    assert hits, "memorized continuation must align with the training corpus"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

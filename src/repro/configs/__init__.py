@@ -1,0 +1,61 @@
+"""Registry of the 10 assigned architectures (+ the paper's own workload).
+
+Each module defines CONFIG: ModelConfig with the exact published shape.
+Full configs are exercised only via the dry-run (ShapeDtypeStruct, no
+allocation); smoke tests use `CONFIG.reduced()`.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from ..models.config import SHAPES, ModelConfig, ShapeConfig
+
+_MODULES = {
+    "musicgen-medium": "musicgen_medium",
+    "llama3-405b": "llama3_405b",
+    "granite-34b": "granite_34b",
+    "qwen1.5-4b": "qwen1_5_4b",
+    "mistral-large-123b": "mistral_large_123b",
+    "phi-3-vision-4.2b": "phi3_vision_4_2b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b",
+    "mixtral-8x7b": "mixtral_8x7b",
+}
+
+ARCH_IDS = list(_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; choose from {ARCH_IDS}")
+    mod = importlib.import_module(f".{_MODULES[arch_id]}", __package__)
+    return mod.CONFIG
+
+
+def arch_cells(arch_id: str) -> list[str]:
+    """The shape cells assigned to this arch; long_500k only where the
+    context path is sub-quadratic (DESIGN.md §Arch-applicability)."""
+    cfg = get_config(arch_id)
+    cells = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.has_subquadratic_context:
+        cells.append("long_500k")
+    else:
+        cells.append("long_500k:skip")
+    return cells
+
+
+# Per-(arch, shape) performance knobs chosen by the §Perf iteration:
+# microbatches trade activation memory against per-microbatch FSDP weight
+# re-gathers (llama3-405b: 8 -> 4 raised MFU* 0.161 -> 0.194, §Perf cell C).
+TRAIN_MICROBATCHES: dict[str, int] = {
+    "llama3-405b": 4,
+    "mistral-large-123b": 4,
+    "granite-34b": 2,
+    "qwen3-moe-235b-a22b": 4,
+    "mixtral-8x7b": 2,
+}
+
+__all__ = ["ARCH_IDS", "get_config", "arch_cells", "SHAPES", "ModelConfig",
+           "ShapeConfig", "TRAIN_MICROBATCHES"]

@@ -1,0 +1,10 @@
+"""musicgen-medium [audio]: 48L d_model=1536 24H (GQA kv=24) d_ff=6144
+vocab=2048 -- decoder-only over EnCodec tokens [arXiv:2306.05284; hf].
+The EnCodec frontend is a STUB: input_specs() supplies precomputed frame
+embeddings for train/prefill; decode embeds discrete codebook ids."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="musicgen-medium", family="dense", frontend="audio",
+    n_layers=48, d_model=1536, n_heads=24, n_kv_heads=24, head_dim=64,
+    d_ff=6144, vocab=2048, rope_theta=10_000.0)

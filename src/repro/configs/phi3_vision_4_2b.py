@@ -1,0 +1,10 @@
+"""phi-3-vision-4.2b [vlm]: 32L d_model=3072 32H (kv=32) d_ff=8192
+vocab=32064 -- phi3-mini + CLIP [hf:microsoft/Phi-3-vision-128k-instruct].
+CLIP frontend is a STUB: input_specs() supplies precomputed patch embeddings
+interleaved with text for train/prefill; decode embeds text tokens."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="phi-3-vision-4.2b", family="dense", frontend="vision",
+    n_layers=32, d_model=3072, n_heads=32, n_kv_heads=32, head_dim=96,
+    d_ff=8192, vocab=32064)

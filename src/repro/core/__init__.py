@@ -1,0 +1,26 @@
+# The paper's primary contribution: near-duplicate text alignment under
+# weighted Jaccard similarity via MonoActive compact-window partitioning.
+from .allalign import allalign_icws, allalign_multiset, allalign_partition
+from .hashing import MixHash, UniversalHash
+from .icws import ICWS
+from .index import AlignmentIndex, MultisetScheme, WeightedScheme
+from .keys import (KeySet, count_active_hashes, generate_keys_icws,
+                   generate_keys_multiset, occurrence_lists)
+from .oracle import (jaccard_multiset, jaccard_weighted,
+                     minhash_gid_grid_icws, minhash_gid_grid_multiset,
+                     validate_partition)
+from .partition import (Partition, mono_active_icws, mono_active_multiset,
+                        mono_all_icws, mono_all_multiset, monotonic_partition)
+from .query import Alignment, estimate_similarity, query
+from .weights import WeightFn
+
+__all__ = [
+    "ICWS", "UniversalHash", "MixHash", "WeightFn", "KeySet", "Partition",
+    "AlignmentIndex", "MultisetScheme", "WeightedScheme", "Alignment",
+    "generate_keys_multiset", "generate_keys_icws", "occurrence_lists",
+    "count_active_hashes", "monotonic_partition", "mono_all_multiset",
+    "mono_active_multiset", "mono_all_icws", "mono_active_icws",
+    "allalign_partition", "allalign_multiset", "allalign_icws",
+    "minhash_gid_grid_multiset", "minhash_gid_grid_icws", "validate_partition",
+    "jaccard_multiset", "jaccard_weighted", "query", "estimate_similarity",
+]

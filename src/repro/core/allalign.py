@@ -1,0 +1,129 @@
+"""AllAlign — the greedy recursive partitioning baseline (Feng & Deng,
+SIGMOD'21), reconstructed from the description in §6 of the paper:
+
+    "AllAlign generates compact windows in recursion.  In each iteration, it
+     takes a rectangle as input and partitions all the subsequences in this
+     rectangle into a few compact windows and one or more smaller rectangles
+     ... recursively partitioned until no rectangles left.  At the beginning,
+     the input rectangle is [1,n] × [1,n]."
+
+Reconstruction: for a rectangle R = [rl,rh] × [cl,ch] of cells (i,j)
+(start, end positions), the largest cell (rl, ch) contains the key set of
+every cell in R; let (p*, q*) be the minimum-hash key inside span [rl, ch].
+Every cell (i, j) ∈ R with i ≤ p* and j ≥ q* contains that key, and cannot
+contain a smaller one (it is inside [rl, ch]) — so the sub-rectangle
+[rl, min(rh,p*)] × [max(cl,q*), ch] is one compact window with value
+h(p*,q*).  The two leftover rectangles recurse.  This is greedy (earliest
+split boundaries fragment windows — the behaviour the paper measures) and
+has no complexity guarantee, exactly as the paper states.
+
+The min-key-in-span query uses a segment tree over the hash-sorted key
+array with (max p, min q) per node, descending leftmost-first.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .hashing import UniversalHash
+from .icws import ICWS
+from .keys import KeySet, generate_keys_icws, generate_keys_multiset
+from .partition import Partition
+from .weights import WeightFn
+
+
+class _MinKeyInSpan:
+    """First key (in hash order) with p >= lo and q <= hi."""
+
+    def __init__(self, p: np.ndarray, q: np.ndarray):
+        self.m = m = len(p)
+        size = 1
+        while size < max(m, 1):
+            size *= 2
+        self.size = size
+        self.maxp = np.full(2 * size, -1, dtype=np.int64)
+        self.minq = np.full(2 * size, np.iinfo(np.int64).max, dtype=np.int64)
+        self.maxp[size:size + m] = p
+        self.minq[size:size + m] = q
+        for i in range(size - 1, 0, -1):
+            self.maxp[i] = max(self.maxp[2 * i], self.maxp[2 * i + 1])
+            self.minq[i] = min(self.minq[2 * i], self.minq[2 * i + 1])
+        self.p = p
+        self.q = q
+
+    def first(self, lo: int, hi: int) -> int:
+        """Smallest index idx with p[idx] >= lo and q[idx] <= hi, else -1."""
+        if self.m == 0:
+            return -1
+        return self._descend(1, lo, hi)
+
+    def _descend(self, node: int, lo: int, hi: int) -> int:
+        # node conditions (max p, min q) are necessary, not sufficient —
+        # descend leftmost-first with backtracking.
+        if not (self.maxp[node] >= lo and self.minq[node] <= hi):
+            return -1
+        if node >= self.size:
+            idx = node - self.size
+            if idx < self.m and self.p[idx] >= lo and self.q[idx] <= hi:
+                return idx
+            return -1
+        cand = self._descend(2 * node, lo, hi)
+        if cand >= 0:
+            return cand
+        return self._descend(2 * node + 1, lo, hi)
+
+
+def allalign_partition(keys: KeySet) -> Partition:
+    """Greedy recursive partition from a hash-sorted KeySet."""
+    n = keys.n
+    tree = _MinKeyInSpan(keys.p, keys.q)
+    kp, kq, kg = keys.p, keys.q, keys.gid
+
+    out_gid: list[int] = []
+    out_a: list[int] = []
+    out_b: list[int] = []
+    out_c: list[int] = []
+    out_d: list[int] = []
+
+    # stack of rectangles [rl, rh] x [cl, ch] (start-range x end-range)
+    stack = [(0, n - 1, 0, n - 1)]
+    while stack:
+        rl, rh, cl, ch = stack.pop()
+        # clip away invalid cells (i > j): need i <= j, i >= rl, j <= ch
+        if rl > rh or cl > ch or rl > ch:
+            continue
+        idx = tree.first(rl, ch)
+        if idx < 0:
+            continue  # cannot happen for non-empty valid rect ((i,i) keys)
+        ps, qs = int(kp[idx]), int(kq[idx])
+        pe = min(rh, ps)
+        qs_clip = max(cl, qs)
+        if pe >= rl and qs_clip <= ch:
+            out_gid.append(int(kg[idx]))
+            out_a.append(rl)
+            out_b.append(pe)
+            out_c.append(qs_clip)
+            out_d.append(ch)
+        # leftovers
+        stack.append((pe + 1, rh, cl, ch))       # rows below the window
+        stack.append((rl, pe, cl, qs_clip - 1))  # left part of window rows
+    return Partition(
+        n=n,
+        gid=np.array(out_gid, dtype=np.int64),
+        a=np.array(out_a, dtype=np.int64),
+        b=np.array(out_b, dtype=np.int64),
+        c=np.array(out_c, dtype=np.int64),
+        d=np.array(out_d, dtype=np.int64),
+        gid_key=keys.gid_key,
+    )
+
+
+def allalign_multiset(tokens, hashfn: UniversalHash) -> Partition:
+    """AllAlign baseline for multi-set Jaccard (its published scope)."""
+    return allalign_partition(generate_keys_multiset(tokens, hashfn, active=False))
+
+
+def allalign_icws(tokens, icws: ICWS, weight: WeightFn) -> Partition:
+    """AllAlign extended to CWS (for like-for-like comparisons only;
+    the original system does not support weighted Jaccard)."""
+    return allalign_partition(generate_keys_icws(tokens, icws, weight, active=False))

@@ -1,0 +1,166 @@
+"""Indexing (Algorithm 1): k inverted indexes of compact windows.
+
+The index maps, per sketch coordinate i ∈ [k], a hash-value identity to the
+list of compact windows carrying it: I_i[v] -> [(text_id, a, b, c, d), ...].
+
+Schemes:
+  * ``MultisetScheme``  — integer universal min-hash (§2), index key int(h).
+  * ``WeightedScheme``  — ICWS (§5), index key (token, k_int).
+
+Partition methods: "mono_active" (default), "mono_all", "allalign".
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable
+
+import numpy as np
+
+from .allalign import allalign_partition
+from .hashing import UniversalHash
+from .icws import ICWS
+from .keys import generate_keys_icws, generate_keys_multiset
+from .partition import Partition, monotonic_partition
+from .weights import WeightFn
+
+
+@dataclass
+class MultisetScheme:
+    """Sketch scheme for multi-set Jaccard (standard min-hash over (t, x)).
+
+    family="universal" is the paper's linear family (§2.2).  family="mix"
+    (splitmix64) is our beyond-paper variant: the linear family is an
+    arithmetic progression in x, which empirically inflates the number of
+    active hash values (≈1.7× at f=256) over the idealized i.i.d. analysis
+    of Lemma 11 — splitmix removes that structure, shrinking keys, windows,
+    and thus the index (see EXPERIMENTS.md §Beyond-paper).
+    """
+
+    seed: int = 0
+    k: int = 16
+    family: str = "universal"
+    hashers: list = field(init=False)
+
+    def __post_init__(self):
+        from .hashing import MixHash
+        cls = {"universal": UniversalHash, "mix": MixHash}[self.family]
+        self.hashers = cls.from_seed(self.seed, self.k)
+
+    def keys(self, tokens, i: int, active: bool, occ=None):
+        return generate_keys_multiset(tokens, self.hashers[i], active=active,
+                                      occ=occ)
+
+    def sketch(self, tokens) -> list:
+        """k min-hash identities of a whole text (Eq. 1)."""
+        from .keys import occurrence_lists
+        occ = occurrence_lists(np.asarray(tokens, dtype=np.int64))
+        out = []
+        for h in self.hashers:
+            best = None
+            for t, pos in occ.items():
+                hv = h(np.full(len(pos), t, dtype=np.int64),
+                       np.arange(1, len(pos) + 1))
+                m = int(hv.min())
+                if best is None or m < best:
+                    best = m
+            out.append(best)
+        return out
+
+
+@dataclass
+class WeightedScheme:
+    """Sketch scheme for weighted Jaccard (ICWS over (t, w(t, f)))."""
+
+    weight: WeightFn
+    seed: int = 0
+    k: int = 16
+    hashers: list[ICWS] = field(init=False)
+
+    def __post_init__(self):
+        self.hashers = ICWS.from_seed(self.seed, self.k)
+
+    def keys(self, tokens, i: int, active: bool, occ=None):
+        return generate_keys_icws(tokens, self.hashers[i], self.weight,
+                                  active=active, occ=occ)
+
+    def sketch(self, tokens) -> list:
+        from .keys import occurrence_lists
+        occ = occurrence_lists(np.asarray(tokens, dtype=np.int64))
+        toks = np.array(sorted(occ), dtype=np.int64)
+        freqs = np.array([len(occ[int(t)]) for t in toks], dtype=np.int64)
+        w = self.weight(toks, freqs)
+        out = []
+        for h in self.hashers:
+            t_star, k_star, _a = h.min_hash(toks, w)
+            out.append((t_star, k_star))
+        return out
+
+
+_METHODS = {
+    "mono_all": (monotonic_partition, False),
+    "mono_active": (monotonic_partition, True),
+    "allalign": (allalign_partition, False),
+}
+
+
+@dataclass
+class AlignmentIndex:
+    """k inverted indexes of compact windows over a text collection."""
+
+    scheme: MultisetScheme | WeightedScheme
+    method: str = "mono_active"
+    tables: list[dict] = field(default_factory=list)
+    num_texts: int = 0
+    num_windows: int = 0
+    text_lengths: list[int] = field(default_factory=list)
+
+    def __post_init__(self):
+        if not self.tables:
+            self.tables = [dict() for _ in range(self.scheme.k)]
+
+    def add_text(self, tokens) -> int:
+        """Partition one text under all k hash functions and index it."""
+        tid = self.num_texts
+        self.num_texts += 1
+        self.text_lengths.append(len(tokens))
+        partition_fn, active = _METHODS[self.method]
+        from .keys import occurrence_lists
+        occ = occurrence_lists(np.asarray(tokens, dtype=np.int64))
+        for i in range(self.scheme.k):
+            keys = self.scheme.keys(tokens, i, active, occ=occ)
+            part = partition_fn(keys)
+            self.num_windows += len(part)
+            table = self.tables[i]
+            for w in range(len(part)):
+                v = part.gid_key[int(part.gid[w])]
+                table.setdefault(v, []).append(
+                    (tid, int(part.a[w]), int(part.b[w]),
+                     int(part.c[w]), int(part.d[w])))
+        return tid
+
+    def build(self, texts: Iterable) -> "AlignmentIndex":
+        for tokens in texts:
+            self.add_text(tokens)
+        return self
+
+    def lookup(self, i: int, v) -> list:
+        return self.tables[i].get(v, [])
+
+    # -- persistence (used by the sharded/distributed index) ---------------
+
+    def state_dict(self) -> dict:
+        return {
+            "method": self.method,
+            "num_texts": self.num_texts,
+            "num_windows": self.num_windows,
+            "text_lengths": self.text_lengths,
+            "tables": self.tables,
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self.method = state["method"]
+        self.num_texts = state["num_texts"]
+        self.num_windows = state["num_windows"]
+        self.text_lengths = list(state["text_lengths"])
+        self.tables = state["tables"]

@@ -1,0 +1,217 @@
+"""Key generation (Algorithms 3 & 5 of the paper), multiset and ICWS variants.
+
+A *key* is a pair (p, q), 0-indexed here, with T[p] == T[q]; its hash value is
+h(T[q], f(T[q], T[p,q])).  ``generate_keys`` enumerates all keys (Alg. 3);
+``generate_active_keys`` only keys whose hash value is a strict running
+minimum over the frequency axis (Alg. 5) — the paper's active-hash
+optimization, which cuts the expected key count to O(n + n·log f).
+
+Keys are returned pre-sorted in visiting order: ascending hash, ties broken
+by frequency ASCENDING, then (p, q).
+
+Erratum note (recorded in DESIGN.md §4): the §5 caveat of the paper as
+printed says to visit the *higher*-frequency key first on hash ties.  That
+ordering makes MonoAll emit extra windows for non-active keys (they are
+visited before the equal-hash lower-frequency keys that dominate them),
+contradicting the paper's own §6.1 statement that "the optimization in
+MonoActive does not change the generated compact windows".  Visiting the
+LOWER frequency first restores Lemma 8's skipping argument for equal hash
+values (the short key dominates the long one and is visited first), making
+MonoAll ≡ MonoActive exactly — which we assert in tests.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .icws import ICWS
+from .weights import WeightFn
+
+
+@dataclass
+class KeySet:
+    """Keys in visiting order plus the hash-identity table for the index.
+
+    gid is a *local* dense group id per distinct hash value; ``gid_key``
+    maps gid -> hashable identity used as the inverted-index key:
+      multiset:  int(h)           (uint64 universal hash value)
+      ICWS:      (token, k_int)   (exact integer identity, DESIGN.md §6)
+    ``order`` is the sortable hash magnitude (uint64 h, or float64 a).
+    """
+
+    n: int
+    p: np.ndarray
+    q: np.ndarray
+    gid: np.ndarray
+    order: np.ndarray
+    freq: np.ndarray
+    gid_key: list = field(default_factory=list)
+    gid_order: np.ndarray | None = None  # order value per gid (for sketches)
+
+    def __len__(self) -> int:
+        return len(self.p)
+
+
+def occurrence_lists(tokens: np.ndarray) -> dict[int, np.ndarray]:
+    """token -> sorted positions (0-indexed)."""
+    tokens = np.asarray(tokens, dtype=np.int64)
+    order = np.argsort(tokens, kind="stable")
+    sorted_tok = tokens[order]
+    bounds = np.flatnonzero(np.diff(sorted_tok)) + 1
+    groups = np.split(order, bounds)
+    return {int(tokens[g[0]]): np.sort(g) for g in groups}
+
+
+def _sort_keys(n, ps, qs, gids, orders, freqs, gid_key, gid_order) -> KeySet:
+    p = np.concatenate(ps) if ps else np.empty(0, np.int64)
+    q = np.concatenate(qs) if qs else np.empty(0, np.int64)
+    g = np.concatenate(gids) if gids else np.empty(0, np.int64)
+    o = np.concatenate(orders) if orders else np.empty(0, np.float64)
+    f = np.concatenate(freqs) if freqs else np.empty(0, np.int64)
+    # visiting order: hash asc, freq ASC (see erratum note), then (p, q)
+    idx = np.lexsort((q, p, f, o))
+    return KeySet(n=n, p=p[idx], q=q[idx], gid=g[idx], order=o[idx],
+                  freq=f[idx], gid_key=gid_key, gid_order=gid_order)
+
+
+# ---------------------------------------------------------------------------
+# Multiset (integer universal hash) key generation
+# ---------------------------------------------------------------------------
+
+
+def _flat_grid(occ: dict[int, np.ndarray]):
+    """One flat (t, x) enumeration of the whole hash grid.
+
+    §Perf cell D iteration 1: hashing token-by-token spent 46% of index
+    build time in numpy small-call overhead (253k mod_m61 invocations for a
+    20k-token text); one vectorized call is ~30 invocations total."""
+    toks = np.fromiter(occ.keys(), np.int64, len(occ))
+    fs = np.fromiter((len(v) for v in occ.values()), np.int64, len(occ))
+    total = int(fs.sum())
+    t_rep = np.repeat(toks, fs)
+    starts = np.concatenate([[0], np.cumsum(fs)[:-1]])
+    x_rep = np.arange(total, dtype=np.int64) - np.repeat(starts, fs) + 1
+    return toks, fs, t_rep, x_rep, np.cumsum(fs)[:-1]
+
+
+def _multiset_hash_per_token(occ: dict[int, np.ndarray], hashfn):
+    """token -> uint64 array h(t, 1..f_t) (single vectorized hash call)."""
+    toks, _fs, t_rep, x_rep, bounds = _flat_grid(occ)
+    h_all = hashfn(t_rep, x_rep)
+    return dict(zip(toks.tolist(), np.split(h_all, bounds)))
+
+
+def generate_keys_multiset(tokens: np.ndarray, hashfn, active: bool = False,
+                           occ: dict | None = None) -> KeySet:
+    """Algorithm 3 (active=False) / Algorithm 5 (active=True) for the
+    multi-set min-hash."""
+    tokens = np.asarray(tokens, dtype=np.int64)
+    n = len(tokens)
+    if occ is None:
+        occ = occurrence_lists(tokens)
+    hpt = _multiset_hash_per_token(occ, hashfn)
+
+    ps, qs, gids, orders, freqs = [], [], [], [], []
+    gid_key: list = []
+    gid_order: list = []
+    for t, pos in occ.items():
+        m = len(pos)
+        hv_u = hpt[t]                   # uint64, exact hash values h(t, 1..m)
+        if active:
+            run_min = np.minimum.accumulate(hv_u)
+            is_act = np.empty(m, dtype=bool)
+            is_act[0] = True
+            is_act[1:] = hv_u[1:] < run_min[:-1]
+            xs = np.flatnonzero(is_act) + 1   # active frequencies (1-based)
+        else:
+            xs = np.arange(1, m + 1)
+        for x in xs:
+            cnt = m - x + 1
+            ps.append(pos[:cnt])
+            qs.append(pos[x - 1:])
+            g = len(gid_key)
+            gid_key.append(int(hv_u[x - 1]))
+            gid_order.append(int(hv_u[x - 1]))
+            gids.append(np.full(cnt, g, dtype=np.int64))
+            # exact uint64 ordering — no float rounding of 61-bit values
+            orders.append(np.full(cnt, hv_u[x - 1], dtype=np.uint64))
+            freqs.append(np.full(cnt, x, dtype=np.int64))
+    return _sort_keys(n, ps, qs, gids, orders, freqs, gid_key,
+                      np.array(gid_order, dtype=np.uint64))
+
+
+# ---------------------------------------------------------------------------
+# ICWS (weighted) key generation
+# ---------------------------------------------------------------------------
+
+
+def generate_keys_icws(tokens: np.ndarray, icws: ICWS, weight: WeightFn,
+                       active: bool = False, occ: dict | None = None) -> KeySet:
+    """Key generation under consistent weighted sampling (§5).
+
+    Hash values h(t, x) := icws(t, w(t, x)) are non-increasing in x
+    (Lemma 12), so a value is active iff it strictly decreases — iff its
+    integer component k_int strictly exceeds the previous one.
+    """
+    tokens = np.asarray(tokens, dtype=np.int64)
+    n = len(tokens)
+    if occ is None:
+        occ = occurrence_lists(tokens)
+
+    # vectorized ICWS over the whole (t, x) grid (§Perf cell D iteration 1)
+    toks_u, _fs, t_rep, x_rep, bounds = _flat_grid(occ)
+    w_all = weight(t_rep, x_rep)
+    k_all, _y_all, a_all = icws.hash_parts(t_rep, w_all)
+    k_split = dict(zip(toks_u.tolist(), np.split(k_all, bounds)))
+    a_split = dict(zip(toks_u.tolist(), np.split(a_all, bounds)))
+
+    ps, qs, gids, orders, freqs = [], [], [], [], []
+    gid_key: list = []
+    gid_order: list = []
+    for t, pos in occ.items():
+        m = len(pos)
+        k_int, a = k_split[t], a_split[t]
+        if active:
+            # a is non-increasing; active iff strict decrease vs running min
+            run_min = np.minimum.accumulate(a)
+            is_act = np.empty(m, dtype=bool)
+            is_act[0] = True
+            is_act[1:] = a[1:] < run_min[:-1]
+            xs = np.flatnonzero(is_act) + 1
+        else:
+            xs = np.arange(1, m + 1)
+        for x in xs:
+            cnt = m - x + 1
+            ps.append(pos[:cnt])
+            qs.append(pos[x - 1:])
+            g = len(gid_key)
+            gid_key.append((t, int(k_int[x - 1])))
+            gid_order.append(float(a[x - 1]))
+            gids.append(np.full(cnt, g, dtype=np.int64))
+            orders.append(np.full(cnt, a[x - 1], dtype=np.float64))
+            freqs.append(np.full(cnt, x, dtype=np.int64))
+    return _sort_keys(n, ps, qs, gids, orders, freqs, gid_key,
+                      np.array(gid_order, dtype=np.float64))
+
+
+def count_active_hashes(tokens: np.ndarray, icws: ICWS | None, weight: WeightFn | None,
+                        hashfn=None) -> int:
+    """|{active hash values}| — used by complexity tests (Lemma 13)."""
+    tokens = np.asarray(tokens, dtype=np.int64)
+    occ = occurrence_lists(tokens)
+    total = 0
+    for t, pos in occ.items():
+        m = len(pos)
+        if hashfn is not None:
+            hv = hashfn(np.full(m, t, dtype=np.int64), np.arange(1, m + 1))
+            vals = hv.astype(np.float64)
+            run = np.minimum.accumulate(hv)
+            total += 1 + int(np.sum(hv[1:] < run[:-1]))
+        else:
+            w = weight.grid(t, m)
+            _ki, _y, a = icws.hash_parts(np.full(m, t, dtype=np.int64), w)
+            run = np.minimum.accumulate(a)
+            total += 1 + int(np.sum(a[1:] < run[:-1]))
+    return total

@@ -1,0 +1,136 @@
+"""Brute-force O(n²) oracles and partition validators.
+
+These enumerate every subsequence T[i..j] and compute its min-hash by
+definition (Eq. 1 / Eq. 4).  Used only by tests and benchmark verification.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .hashing import UniversalHash
+from .icws import ICWS
+from .keys import occurrence_lists
+from .partition import Partition
+from .weights import WeightFn
+
+_NOVAL = -1
+
+
+def minhash_gid_grid_multiset(tokens, hashfn) -> tuple[np.ndarray, list]:
+    """(n, n) grid of *dense group ids* of the min-hash of T[i..j] (upper
+    triangle; lower triangle = -1), plus gid -> hash-value table.
+
+    Group ids here are keyed identically to keys.generate_keys_multiset:
+    the integer hash value itself (deduped into a local table).
+    """
+    tokens = np.asarray(tokens, dtype=np.int64)
+    n = len(tokens)
+    occ = occurrence_lists(tokens)
+    # hash lookup per (token, freq)
+    hgrid = {t: hashfn(np.full(len(pos), t, dtype=np.int64),
+                       np.arange(1, len(pos) + 1)) for t, pos in occ.items()}
+    key_of: dict[int, int] = {}
+    table: list = []
+    grid = np.full((n, n), _NOVAL, dtype=np.int64)
+    for i in range(n):
+        counts: dict[int, int] = {}
+        cur = None  # uint64 running min
+        for j in range(i, n):
+            t = int(tokens[j])
+            x = counts.get(t, 0) + 1
+            counts[t] = x
+            hv = int(hgrid[t][x - 1])
+            if cur is None or hv < cur:
+                cur = hv
+            if cur not in key_of:
+                key_of[cur] = len(table)
+                table.append(cur)
+            grid[i, j] = key_of[cur]
+    return grid, table
+
+
+def minhash_gid_grid_icws(tokens, icws: ICWS, weight: WeightFn
+                          ) -> tuple[np.ndarray, list]:
+    """Same as above under CWS: identity = (token, k_int), order = a."""
+    tokens = np.asarray(tokens, dtype=np.int64)
+    n = len(tokens)
+    occ = occurrence_lists(tokens)
+    agrid = {}
+    kgrid = {}
+    for t, pos in occ.items():
+        m = len(pos)
+        w = weight.grid(t, m)
+        k_int, _y, a = icws.hash_parts(np.full(m, t, dtype=np.int64), w)
+        agrid[t] = a
+        kgrid[t] = k_int
+    key_of: dict[tuple, int] = {}
+    table: list = []
+    grid = np.full((n, n), _NOVAL, dtype=np.int64)
+    for i in range(n):
+        counts: dict[int, int] = {}
+        cur_a = np.inf
+        cur_key = None
+        for j in range(i, n):
+            t = int(tokens[j])
+            x = counts.get(t, 0) + 1
+            counts[t] = x
+            av = float(agrid[t][x - 1])
+            if av < cur_a:
+                cur_a = av
+                cur_key = (t, int(kgrid[t][x - 1]))
+            if cur_key not in key_of:
+                key_of[cur_key] = len(table)
+                table.append(cur_key)
+            grid[i, j] = key_of[cur_key]
+    return grid, table
+
+
+def validate_partition(part: Partition, grid: np.ndarray, table: list
+                       ) -> None:
+    """Assert Definition 3 (disjointness + coverage) and value correctness
+    of every compact window against the oracle grid.  Raises AssertionError.
+    """
+    n = part.n
+    cover = np.zeros((n, n), dtype=np.int64)
+    # map part gids -> oracle gids through the hash-value identity
+    oracle_gid_of = {v: i for i, v in enumerate(table)}
+    for w in range(len(part)):
+        a, b, c, d = int(part.a[w]), int(part.b[w]), int(part.c[w]), int(part.d[w])
+        assert 0 <= a <= b <= c <= d < n, f"window {w} coords invalid: {(a,b,c,d)}"
+        cover[a:b + 1, c:d + 1] += 1
+        want = oracle_gid_of[part.gid_key[int(part.gid[w])]]
+        cells = grid[a:b + 1, c:d + 1]
+        assert np.all(cells == want), (
+            f"window {w}=({a},{b},{c},{d}) value mismatch: "
+            f"oracle gids {np.unique(cells)} vs {want}")
+    iu = np.triu_indices(n)
+    assert np.all(cover[iu] == 1), (
+        f"coverage violated: {np.sum(cover[iu] == 0)} uncovered, "
+        f"{np.sum(cover[iu] > 1)} overlapping cells")
+    il = np.tril_indices(n, k=-1)
+    assert np.all(cover[il] == 0), "windows cover invalid cells (i > j)"
+
+
+def jaccard_multiset(tokens_a, tokens_b) -> float:
+    """Exact multi-set Jaccard similarity (§2.1)."""
+    from collections import Counter
+    ca, cb = Counter(np.asarray(tokens_a).tolist()), Counter(np.asarray(tokens_b).tolist())
+    tokens = set(ca) | set(cb)
+    num = sum(min(ca.get(t, 0), cb.get(t, 0)) for t in tokens)
+    den = sum(max(ca.get(t, 0), cb.get(t, 0)) for t in tokens)
+    return num / den if den else 1.0
+
+
+def jaccard_weighted(tokens_a, tokens_b, weight: WeightFn) -> float:
+    """Exact weighted Jaccard similarity (§5)."""
+    from collections import Counter
+    ca, cb = Counter(np.asarray(tokens_a).tolist()), Counter(np.asarray(tokens_b).tolist())
+    tokens = set(ca) | set(cb)
+    num = den = 0.0
+    for t in tokens:
+        wa = float(weight(t, ca[t])) if ca.get(t) else 0.0
+        wb = float(weight(t, cb[t])) if cb.get(t) else 0.0
+        num += min(wa, wb)
+        den += max(wa, wb)
+    return num / den if den else 1.0

@@ -1,0 +1,132 @@
+"""Monotonic Partitioning (Algorithm 4) — the paper's core contribution.
+
+Visits keys in ascending hash order while maintaining the skyline of visited
+keys (a totally ordered staircase, Lemmas 5–7); each visit emits one compact
+window per staircase step it consumes (Lemma 14 C2) and updates the skyline.
+
+The skyline is kept in two parallel coordinate-ordered Python lists with
+guard keys (−1,−1) and (n,n) (0-indexed variant of the paper's (0,0) and
+(n+1,n+1)).  Every key is inserted at most once and removed at most once;
+removals are contiguous slices, so the list operations are O(len) memmoves
+at C speed and binary searches are O(log n) — matching the paper's
+O(|X(T)|·log n) bound up to the memmove constant.
+
+Windows use 0-indexed inclusive coordinates: ⟨gid, a, b, c, d⟩ represents
+all subsequences T[i..j] with i ∈ [a,b], j ∈ [c,d].
+"""
+
+from __future__ import annotations
+
+from bisect import bisect_left, bisect_right
+from dataclasses import dataclass
+
+import numpy as np
+
+from .hashing import UniversalHash
+from .icws import ICWS
+from .keys import KeySet, generate_keys_icws, generate_keys_multiset
+from .weights import WeightFn
+
+
+@dataclass
+class Partition:
+    """A partition P(T, h): compact windows + the gid identity table."""
+
+    n: int
+    gid: np.ndarray   # int64 local group id per window
+    a: np.ndarray     # int64 window coords (0-indexed, inclusive)
+    b: np.ndarray
+    c: np.ndarray
+    d: np.ndarray
+    gid_key: list     # gid -> hashable inverted-index key
+
+    def __len__(self) -> int:
+        return len(self.gid)
+
+    @property
+    def num_windows(self) -> int:
+        return len(self.gid)
+
+    def covered_cells(self) -> int:
+        return int(np.sum((self.b - self.a + 1) * (self.d - self.c + 1)))
+
+
+def monotonic_partition(keys: KeySet) -> Partition:
+    """Algorithm 4 over a pre-sorted KeySet (MonoAll or MonoActive depending
+    on how ``keys`` was generated)."""
+    n = keys.n
+    kp = keys.p.tolist()
+    kq = keys.q.tolist()
+    kg = keys.gid.tolist()
+
+    # skyline with guards; xs/ys are both sorted (Lemma 6)
+    xs = [-1, n]
+    ys = [-1, n]
+
+    out_gid: list[int] = []
+    out_a: list[int] = []
+    out_b: list[int] = []
+    out_c: list[int] = []
+    out_d: list[int] = []
+
+    for b, c, g in zip(kp, kq, kg):
+        # Line 4: largest j' with S[j'].y <= c
+        jp = bisect_right(ys, c) - 1
+        xjp = xs[jp]
+        # Line 5: S[j'] dominates (b,c) iff [xjp, ys[jp]] ⊂ [b, c]
+        if xjp >= b and not (xjp == b and ys[jp] == c):
+            continue
+        # Line 6: largest i with S[i].y < c
+        i = bisect_left(ys, c) - 1
+        # Line 7: smallest j with S[j].x > b
+        j = bisect_right(xs, b)
+        # Lines 8-13: emit staircase windows (Lemma 14 C2)
+        cprime = c
+        for kk in range(i, j):
+            a = xs[kk] + 1
+            d = ys[kk + 1] - 1
+            if a <= b and cprime <= d:
+                out_gid.append(g)
+                out_a.append(a)
+                out_b.append(b)
+                out_c.append(cprime)
+                out_d.append(d)
+            cprime = ys[kk + 1]
+        # Lines 14-15: splice dominated keys out, insert (b, c)
+        del xs[i + 1:j]
+        del ys[i + 1:j]
+        xs.insert(i + 1, b)
+        ys.insert(i + 1, c)
+
+    return Partition(
+        n=n,
+        gid=np.array(out_gid, dtype=np.int64),
+        a=np.array(out_a, dtype=np.int64),
+        b=np.array(out_b, dtype=np.int64),
+        c=np.array(out_c, dtype=np.int64),
+        d=np.array(out_d, dtype=np.int64),
+        gid_key=keys.gid_key,
+    )
+
+
+# --- user-facing wrappers ---------------------------------------------------
+
+
+def mono_all_multiset(tokens, hashfn: UniversalHash) -> Partition:
+    """MonoAll: vanilla Algorithm 4 over ALL keys (multi-set Jaccard)."""
+    return monotonic_partition(generate_keys_multiset(tokens, hashfn, active=False))
+
+
+def mono_active_multiset(tokens, hashfn: UniversalHash) -> Partition:
+    """MonoActive: Algorithm 4 + active-hash optimization (multi-set)."""
+    return monotonic_partition(generate_keys_multiset(tokens, hashfn, active=True))
+
+
+def mono_all_icws(tokens, icws: ICWS, weight: WeightFn) -> Partition:
+    """MonoAll under weighted Jaccard (CWS hash values, §5)."""
+    return monotonic_partition(generate_keys_icws(tokens, icws, weight, active=False))
+
+
+def mono_active_icws(tokens, icws: ICWS, weight: WeightFn) -> Partition:
+    """MonoActive under weighted Jaccard (CWS hash values, §5)."""
+    return monotonic_partition(generate_keys_icws(tokens, icws, weight, active=True))

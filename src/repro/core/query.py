@@ -1,0 +1,110 @@
+"""Query processing (Algorithm 2): sketch the query, probe the k inverted
+lists, plane-sweep the collided compact windows for cells covered >= ⌈kθ⌉
+times (those subsequences have estimated Jaccard >= θ, Eq. 2/Eq. 5).
+"""
+
+from __future__ import annotations
+
+import math
+from collections import defaultdict
+from dataclasses import dataclass
+
+import numpy as np
+
+from .index import AlignmentIndex
+
+
+@dataclass
+class Alignment:
+    """All result subsequences of one data text, as maximal blocks.
+
+    blocks: list of (i_lo, i_hi, j_lo, j_hi) — every T[i..j] with
+    i ∈ [i_lo, i_hi], j ∈ [j_lo, j_hi] is a result (0-indexed inclusive).
+    """
+
+    text_id: int
+    blocks: list[tuple[int, int, int, int]]
+
+    def cells(self) -> set[tuple[int, int]]:
+        out = set()
+        for il, ih, jl, jh in self.blocks:
+            for i in range(il, ih + 1):
+                for j in range(jl, jh + 1):
+                    out.add((i, j))
+        return out
+
+    @property
+    def num_cells(self) -> int:
+        return sum((ih - il + 1) * (jh - jl + 1) for il, ih, jl, jh in self.blocks)
+
+
+def _sweep_text(windows: list[tuple[int, int, int, int]], m: int
+                ) -> list[tuple[int, int, int, int]]:
+    """Cells covered by >= m of the given rectangles, as disjoint blocks.
+
+    Coordinate-compressed 2-D difference array + cumulative sums; output
+    blocks are maximal runs within each compressed stripe.
+    """
+    if len(windows) < m:
+        return []
+    arr = np.asarray(windows, dtype=np.int64)
+    a, b, c, d = arr[:, 0], arr[:, 1], arr[:, 2], arr[:, 3]
+    xs = np.unique(np.concatenate([a, b + 1]))
+    ys = np.unique(np.concatenate([c, d + 1]))
+    nx, ny = len(xs), len(ys)
+    diff = np.zeros((nx + 1, ny + 1), dtype=np.int32)
+    xi_a = np.searchsorted(xs, a)
+    xi_b = np.searchsorted(xs, b + 1)
+    yi_c = np.searchsorted(ys, c)
+    yi_d = np.searchsorted(ys, d + 1)
+    np.add.at(diff, (xi_a, yi_c), 1)
+    np.add.at(diff, (xi_a, yi_d), -1)
+    np.add.at(diff, (xi_b, yi_c), -1)
+    np.add.at(diff, (xi_b, yi_d), 1)
+    count = np.cumsum(np.cumsum(diff, axis=0), axis=1)[:nx, :ny]
+    hot = count >= m
+    blocks: list[tuple[int, int, int, int]] = []
+    # xs[i]..xs[i+1]-1 stripes; the last compressed coord is always an
+    # exclusive upper bound (b+1 / d+1), so hot cannot extend past it.
+    for xi in range(nx - 1):
+        row = hot[xi]
+        if not row.any():
+            continue
+        j = 0
+        while j < ny - 1:
+            if row[j]:
+                j2 = j
+                while j2 + 1 < ny - 1 and row[j2 + 1]:
+                    j2 += 1
+                blocks.append((int(xs[xi]), int(xs[xi + 1] - 1),
+                               int(ys[j]), int(ys[j2 + 1] - 1)))
+                j = j2 + 1
+            else:
+                j += 1
+    return blocks
+
+
+def query(index: AlignmentIndex, query_tokens, theta: float
+          ) -> list[Alignment]:
+    """Near-duplicate text alignment (Definition 1) for one query."""
+    k = index.scheme.k
+    m = max(1, math.ceil(k * theta))
+    sketch = index.scheme.sketch(query_tokens)
+    per_text: dict[int, list] = defaultdict(list)
+    for i in range(k):
+        for (tid, a, b, c, d) in index.lookup(i, sketch[i]):
+            per_text[tid].append((a, b, c, d))
+    results = []
+    for tid, wins in sorted(per_text.items()):
+        blocks = _sweep_text(wins, m)
+        if blocks:
+            results.append(Alignment(text_id=tid, blocks=blocks))
+    return results
+
+
+def estimate_similarity(index: AlignmentIndex, query_tokens, data_tokens
+                        ) -> float:
+    """Sketch-estimated Jaccard between two full texts (Eq. 2 / Eq. 5)."""
+    sq = index.scheme.sketch(query_tokens)
+    sd = index.scheme.sketch(data_tokens)
+    return float(np.mean([1.0 if x == y else 0.0 for x, y in zip(sq, sd)]))

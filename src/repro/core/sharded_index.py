@@ -1,0 +1,108 @@
+"""Distributed (multi-host) index build & query fan-out.
+
+The corpus is sharded across data-parallel workers; each worker builds an
+independent AlignmentIndex over its shard (the skyline partitioner is
+host-side; device kernels produce sketches -- DESIGN.md §2.2).  Queries
+broadcast the k sketch coordinates (O(k) bytes) and union per-shard results.
+Each shard checkpoints independently: a lost worker rebuilds only its shard
+(fault tolerance), and shards can be re-split when the worker count changes
+(elasticity).
+"""
+
+from __future__ import annotations
+
+import json
+import pickle
+from dataclasses import dataclass, field
+from pathlib import Path
+
+import numpy as np
+
+from .index import AlignmentIndex
+from .query import Alignment, query
+
+
+def shard_of(doc_id: int, n_shards: int) -> int:
+    return doc_id % n_shards
+
+
+@dataclass
+class ShardedAlignmentIndex:
+    """n_shards independent AlignmentIndexes with a global doc-id space."""
+
+    scheme: object
+    n_shards: int = 4
+    method: str = "mono_active"
+    shards: list[AlignmentIndex] = field(init=False)
+    doc_map: list[tuple[int, int]] = field(default_factory=list)
+    # doc_map[global_id] = (shard, local_id)
+
+    def __post_init__(self):
+        self.shards = [AlignmentIndex(scheme=self.scheme, method=self.method)
+                       for _ in range(self.n_shards)]
+
+    def add_text(self, tokens) -> int:
+        gid = len(self.doc_map)
+        s = shard_of(gid, self.n_shards)
+        lid = self.shards[s].add_text(np.asarray(tokens, np.int64))
+        self.doc_map.append((s, lid))
+        return gid
+
+    def build(self, texts) -> "ShardedAlignmentIndex":
+        for t in texts:
+            self.add_text(t)
+        return self
+
+    def query(self, tokens, theta: float) -> list[Alignment]:
+        """Fan-out / union; local ids remapped into the global space."""
+        out: list[Alignment] = []
+        inverse = {}
+        for gid, (s, lid) in enumerate(self.doc_map):
+            inverse[(s, lid)] = gid
+        for s, shard in enumerate(self.shards):
+            for al in query(shard, tokens, theta):
+                out.append(Alignment(text_id=inverse[(s, al.text_id)],
+                                     blocks=al.blocks))
+        return sorted(out, key=lambda a: a.text_id)
+
+    @property
+    def num_windows(self) -> int:
+        return sum(s.num_windows for s in self.shards)
+
+    # -- per-shard persistence (fault tolerance / elasticity) ---------------
+
+    def save(self, root: str | Path):
+        root = Path(root)
+        root.mkdir(parents=True, exist_ok=True)
+        meta = {"n_shards": self.n_shards, "method": self.method,
+                "doc_map": self.doc_map}
+        for s, shard in enumerate(self.shards):
+            tmp = root / f"shard_{s}.pkl.tmp"
+            with open(tmp, "wb") as f:
+                pickle.dump(shard.state_dict(), f)
+            tmp.rename(root / f"shard_{s}.pkl")        # atomic commit
+        (root / "meta.json").write_text(json.dumps(meta))
+
+    def restore(self, root: str | Path, *, missing_ok: bool = True
+                ) -> list[int]:
+        """Load shards from disk; returns the list of shard ids that were
+        missing/corrupt and have been rebuilt empty (the caller re-adds only
+        those shards' documents -- partial recovery)."""
+        root = Path(root)
+        meta = json.loads((root / "meta.json").read_text())
+        assert meta["n_shards"] == self.n_shards, "elastic re-shard: rebuild"
+        self.doc_map = [tuple(x) for x in meta["doc_map"]]
+        lost = []
+        for s in range(self.n_shards):
+            p = root / f"shard_{s}.pkl"
+            try:
+                with open(p, "rb") as f:
+                    self.shards[s].load_state_dict(pickle.load(f))
+            except Exception:
+                if not missing_ok:
+                    raise
+                lost.append(s)
+        return lost
+
+    def docs_of_shard(self, s: int) -> list[int]:
+        return [gid for gid, (sh, _l) in enumerate(self.doc_map) if sh == s]

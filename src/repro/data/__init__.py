@@ -1,0 +1,8 @@
+from .corpus import (PackedDataset, load_corpus, make_training_data,
+                     synthetic_corpus)
+from .dedup import ContaminationChecker, DedupFilter, default_scheme
+from .tokenizer import ByteTokenizer, HashWordTokenizer
+
+__all__ = ["PackedDataset", "synthetic_corpus", "load_corpus",
+           "make_training_data", "DedupFilter", "ContaminationChecker",
+           "default_scheme", "HashWordTokenizer", "ByteTokenizer"]

@@ -1,0 +1,102 @@
+"""Corpora: synthetic generation (with planted near-duplicates), file
+loading, and token packing into fixed (batch, seq) training arrays."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from pathlib import Path
+
+import numpy as np
+
+from .tokenizer import EOS, HashWordTokenizer
+
+_STOP = ("the of and to in a is that for it as was with be by on not he "
+         "at are this but from or have an they which one you were all").split()
+# 5000 distinct content words -- two random docs then share only stop words,
+# so near-duplicate detection is non-trivial (not a degenerate vocabulary).
+_WORDS = _STOP + [f"w{i:04d}" for i in range(5000)]
+
+
+def synthetic_corpus(n_docs: int, *, seed: int = 0, mean_len: int = 120,
+                     dup_fraction: float = 0.25, edit_rate: float = 0.08
+                     ) -> list[str]:
+    """Random word documents; `dup_fraction` of them are near-duplicates of
+    earlier docs with `edit_rate` token perturbations (the workload the
+    paper's index exists for)."""
+    rng = np.random.default_rng(seed)
+    docs: list[str] = []
+    for i in range(n_docs):
+        if docs and rng.random() < dup_fraction:
+            src = docs[rng.integers(0, len(docs))].split()
+            out = [w if rng.random() > edit_rate
+                   else _WORDS[rng.integers(0, len(_WORDS))] for w in src]
+            # occasionally embed the near-dup inside fresh text
+            if rng.random() < 0.5:
+                pre = [_WORDS[j] for j in rng.integers(0, len(_WORDS), 20)]
+                out = pre + out
+            docs.append(" ".join(out))
+        else:
+            n = max(8, int(rng.normal(mean_len, mean_len / 4)))
+            docs.append(" ".join(_WORDS[j]
+                                 for j in rng.integers(0, len(_WORDS), n)))
+    return docs
+
+
+def load_corpus(path: str | Path) -> list[str]:
+    """One document per line (blank lines skipped)."""
+    return [ln for ln in Path(path).read_text().splitlines() if ln.strip()]
+
+
+@dataclass
+class PackedDataset:
+    """Documents tokenized, EOS-joined, packed to (n, seq+1) rows."""
+
+    tokens: np.ndarray                # (n, seq_len + 1) int32
+
+    @classmethod
+    def pack(cls, token_docs, seq_len: int) -> "PackedDataset":
+        stream = []
+        for d in token_docs:
+            stream.append(np.asarray(d, np.int32))
+            stream.append(np.array([EOS], np.int32))
+        flat = np.concatenate(stream) if stream else np.zeros(0, np.int32)
+        n = max(1, len(flat) // (seq_len + 1))
+        flat = flat[:n * (seq_len + 1)]
+        if len(flat) < n * (seq_len + 1):
+            flat = np.pad(flat, (0, n * (seq_len + 1) - len(flat)))
+        return cls(tokens=flat.reshape(n, seq_len + 1))
+
+    def batches(self, batch_size: int, *, seed: int = 0, epochs: int = 1000):
+        """Yield {"tokens","labels"} dicts forever (deterministic order)."""
+        n = self.tokens.shape[0]
+        rng = np.random.default_rng(seed)
+        for _ in range(epochs):
+            order = rng.permutation(n)
+            for i in range(0, n - batch_size + 1, batch_size):
+                rows = self.tokens[order[i:i + batch_size]]
+                yield {"tokens": rows[:, :-1].astype(np.int32),
+                       "labels": rows[:, 1:].astype(np.int32)}
+
+
+def make_training_data(n_docs: int, seq_len: int, *, vocab: int = 32_000,
+                       seed: int = 0, dedup=None):
+    """Synthetic corpus -> (optionally deduplicated) packed dataset.
+
+    `dedup`: a data-plane filter with .admit(tokens) -> bool (see
+    repro.data.dedup.DedupFilter -- the paper's index as a first-class
+    pipeline stage)."""
+    tok = HashWordTokenizer(vocab=vocab)
+    docs = synthetic_corpus(n_docs, seed=seed)
+    token_docs = tok.encode_batch(docs)
+    kept = dropped = 0
+    if dedup is not None:
+        out = []
+        for d in token_docs:
+            if dedup.admit(d):
+                out.append(d)
+                kept += 1
+            else:
+                dropped += 1
+        token_docs = out
+    stats = {"docs": n_docs, "kept": kept or n_docs, "dropped": dropped}
+    return PackedDataset.pack(token_docs, seq_len), stats

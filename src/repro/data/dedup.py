@@ -1,0 +1,86 @@
+"""The paper's index as a data-plane feature: training-data deduplication
+and test-set contamination detection (the LLM applications motivating the
+paper -- Lee et al. '22, Magar & Schwartz '22).
+
+DedupFilter keeps an AlignmentIndex over admitted documents; a new document
+is dropped when any of its prefixes/subsequences aligns with an indexed
+document above `theta` (weighted Jaccard, Eq. 5), i.e., when `query()`
+returns any block.  ContaminationChecker indexes the *training* corpus and
+reports which held-out documents leak into it.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core import AlignmentIndex, MultisetScheme, WeightedScheme, query
+from ..core.weights import WeightFn
+
+
+def default_scheme(kind: str = "weighted", *, seed: int = 0, k: int = 16,
+                   tf: str = "raw", idf: str = "unary"):
+    if kind == "weighted":
+        return WeightedScheme(weight=WeightFn(tf=tf, idf=idf), seed=seed, k=k)
+    return MultisetScheme(seed=seed, k=k)
+
+
+@dataclass
+class DedupFilter:
+    """Admit-or-drop near-duplicate filter over a growing corpus."""
+
+    theta: float = 0.7
+    scheme: object = None
+    method: str = "mono_active"
+    max_doc_tokens: int = 2048          # truncate pathological docs
+    index: AlignmentIndex = field(init=False)
+    stats: dict = field(default_factory=lambda: {"admitted": 0, "dropped": 0})
+
+    def __post_init__(self):
+        if self.scheme is None:
+            self.scheme = default_scheme()
+        self.index = AlignmentIndex(scheme=self.scheme, method=self.method)
+
+    def admit(self, tokens) -> bool:
+        tokens = np.asarray(tokens, np.int64)[:self.max_doc_tokens]
+        if len(tokens) == 0:
+            return False
+        hits = query(self.index, tokens, self.theta)
+        if hits:
+            self.stats["dropped"] += 1
+            return False
+        self.index.add_text(tokens)
+        self.stats["admitted"] += 1
+        return True
+
+
+@dataclass
+class ContaminationChecker:
+    """Index the training corpus; report held-out docs that leak into it."""
+
+    theta: float = 0.6
+    scheme: object = None
+    method: str = "mono_active"
+    index: AlignmentIndex = field(init=False)
+
+    def __post_init__(self):
+        if self.scheme is None:
+            self.scheme = default_scheme()
+        self.index = AlignmentIndex(scheme=self.scheme, method=self.method)
+
+    def fit(self, train_token_docs) -> "ContaminationChecker":
+        for d in train_token_docs:
+            self.index.add_text(np.asarray(d, np.int64))
+        return self
+
+    def check(self, test_token_docs) -> list[dict]:
+        """Per contaminated test doc: which train doc + aligned span."""
+        out = []
+        for qi, d in enumerate(test_token_docs):
+            hits = query(self.index, np.asarray(d, np.int64), self.theta)
+            for h in hits:
+                il, ih, jl, jh = h.blocks[0]
+                out.append({"test_doc": qi, "train_doc": h.text_id,
+                            "span": (il, jh), "n_blocks": len(h.blocks)})
+        return out

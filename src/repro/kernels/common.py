@@ -1,0 +1,32 @@
+"""Shared in-kernel primitives (32-bit TPU-native hashing).
+
+TPU VPUs have no 64-bit integer lanes, so device-side sketching uses a
+32-bit counter-based family (murmur3 finalizer); the host-side index keeps
+the paper's exact Mersenne-61 universal family.  Both implement the same
+(t, x) -> hash interface; DESIGN.md §4 records the substitution.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+_M1 = np.uint32(0x85EBCA6B)
+_M2 = np.uint32(0xC2B2AE35)
+_G = np.uint32(0x9E3779B9)
+_P1 = np.uint32(0xCC9E2D51)
+_P2 = np.uint32(0x1B873593)
+
+
+def mix32(z):
+    """murmur3 finalizer; uint32 -> uint32, bijective."""
+    z = z.astype(jnp.uint32)
+    z = (z ^ (z >> 16)) * _M1
+    z = (z ^ (z >> 13)) * _M2
+    return z ^ (z >> 16)
+
+
+def hash32(seed, t, x):
+    """Counter-based h(t, x) for one hash function `seed` (all uint32)."""
+    a = mix32(seed.astype(jnp.uint32) ^ (t.astype(jnp.uint32) * _P1) ^ _G)
+    return mix32(a ^ (x.astype(jnp.uint32) * _P2))

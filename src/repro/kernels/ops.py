@@ -1,0 +1,92 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+`interpret` defaults to True off-TPU (the container is CPU-only; interpret
+mode executes the kernel body exactly, which is what the allclose tests
+validate).  On a real TPU backend pass interpret=False (or rely on the
+default) to run the compiled Mosaic kernels.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.icws import _token_params
+from .decode_attention import decode_attention_pallas
+from .icws_hash import icws_hash_grid, icws_sketch
+from .minhash_sketch import minhash_sketch
+from .ref import (decode_attention_ref, icws_hash_grid_ref, icws_sketch_ref,
+                  minhash_sketch_ref, selective_scan_ref)
+from .selective_scan import selective_scan_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def icws_token_params(seed: int, k: int, tokens) -> tuple:
+    """Host-side stateless (r, c, beta) grids (K, T) f32 for the kernels --
+    identical to the ICWS family used by the index (core/icws.py)."""
+    from ..core.hashing import mix2
+    seeds = mix2(np.uint64(seed), np.arange(k, dtype=np.uint64))
+    r = np.empty((k, len(tokens)), np.float32)
+    c = np.empty_like(r)
+    b = np.empty_like(r)
+    for i, s in enumerate(seeds):
+        ri, ci, bi = _token_params(int(s), np.asarray(tokens))
+        r[i], c[i], b[i] = ri, ci, bi
+    return jnp.asarray(r), jnp.asarray(c), jnp.asarray(b)
+
+
+def cws_sketch(seed: int, k: int, tokens, weights, *,
+               use_pallas: bool = True, interpret: bool | None = None):
+    """k-coordinate CWS sketch of one text: (argmin token id, k_int) pairs.
+
+    tokens: distinct token ids; weights: their w(t, f) > 0.
+    """
+    r, c, b = icws_token_params(seed, k, tokens)
+    w = jnp.asarray(weights, jnp.float32)
+    if use_pallas:
+        interp = _default_interpret() if interpret is None else interpret
+        mina, argt, kint = icws_sketch(r, c, b, w, interpret=interp)
+    else:
+        mina, argt, kint = icws_sketch_ref(r, c, b, w)
+    toks = jnp.asarray(np.asarray(tokens), jnp.int32)
+    return toks[argt], kint, mina
+
+
+def multiset_sketch(tokens, occ, seeds, *, use_pallas: bool = True,
+                    interpret: bool | None = None):
+    """Batched multiset min-hash sketches (B, K) u32."""
+    tokens = jnp.asarray(tokens, jnp.int32)
+    occ = jnp.asarray(occ, jnp.int32)
+    seeds = jnp.asarray(seeds, jnp.uint32)
+    if use_pallas:
+        interp = _default_interpret() if interpret is None else interpret
+        return minhash_sketch(tokens, occ, seeds, interpret=interp)
+    return minhash_sketch_ref(tokens, occ, seeds)
+
+
+def flash_decode_attention(q, k_cache, v_cache, pos, *,
+                           use_pallas: bool = True,
+                           interpret: bool | None = None):
+    if use_pallas:
+        interp = _default_interpret() if interpret is None else interpret
+        return decode_attention_pallas(q, k_cache, v_cache, pos,
+                                       interpret=interp)
+    return decode_attention_ref(q, k_cache, v_cache, pos)
+
+
+def fused_selective_scan(dt, Bc, Cc, x, A, D, *, use_pallas: bool = True,
+                         interpret: bool | None = None):
+    if use_pallas:
+        interp = _default_interpret() if interpret is None else interpret
+        return selective_scan_pallas(dt, Bc, Cc, x, A, D, interpret=interp)
+    return selective_scan_ref(dt, Bc, Cc, x, A, D)
+
+
+__all__ = ["cws_sketch", "multiset_sketch", "flash_decode_attention",
+           "fused_selective_scan", "icws_token_params", "icws_hash_grid",
+           "icws_sketch", "minhash_sketch", "decode_attention_pallas",
+           "selective_scan_pallas"]

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import hash32
+
+
+def icws_hash_grid_ref(r, c, beta, w):
+    valid = w[None, :] > 0.0
+    lw = jnp.log(jnp.where(valid, w[None, :], 1.0))
+    kint = jnp.floor(lw / r + beta)
+    a = c * jnp.exp(-r * (kint - beta) - r)
+    return (jnp.where(valid, kint, 0.0).astype(jnp.int32),
+            jnp.where(valid, a, jnp.float32(3.0e38)))
+
+
+def icws_sketch_ref(r, c, beta, w):
+    kint, a = icws_hash_grid_ref(r, c, beta, w)
+    idx = jnp.argmin(a, axis=1)
+    rows = jnp.arange(a.shape[0])
+    return a[rows, idx], idx.astype(jnp.int32), kint[rows, idx]
+
+
+def minhash_sketch_ref(tokens, occ, seeds):
+    valid = tokens >= 0
+    h = hash32(seeds[None, :, None],
+               tokens[:, None, :].astype(jnp.uint32),
+               occ[:, None, :].astype(jnp.uint32))       # (B,K,N)
+    h = jnp.where(valid[:, None, :], h, jnp.uint32(0xFFFFFFFF))
+    return jnp.min(h, axis=2)
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos):
+    B, H, D = q.shape
+    KV = k_cache.shape[2]
+    k = jnp.repeat(k_cache, H // KV, axis=2)
+    v = jnp.repeat(v_cache, H // KV, axis=2)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    idx = jnp.arange(k.shape[1])
+    s = jnp.where(idx[None, None, :] <= pos, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhs,bshd->bhd", w, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def selective_scan_ref(dt, Bc, Cc, x, A, D):
+    B, S, di = x.shape
+
+    def step(h, args):
+        dt_t, B_t, C_t, x_t = args            # (B,di) (B,ds) (B,ds) (B,di)
+        a = jnp.exp(dt_t[..., None] * A)
+        h = a * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, C_t) + D * x_t
+        return h, y
+
+    h0 = jnp.zeros((B, di, A.shape[1]), jnp.float32)
+    xs = (dt.swapaxes(0, 1), Bc.swapaxes(0, 1), Cc.swapaxes(0, 1),
+          x.swapaxes(0, 1))
+    hf, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1), hf

@@ -1,0 +1,5 @@
+# NOTE: dryrun is intentionally NOT imported here -- it sets XLA_FLAGS for
+# 512 placeholder devices at module import and must only run as __main__.
+from .mesh import TPU_XLA_FLAGS, make_host_mesh, make_production_mesh
+
+__all__ = ["make_production_mesh", "make_host_mesh", "TPU_XLA_FLAGS"]

@@ -1,0 +1,261 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede every other import: jax locks the device count on first
+# init.  512 placeholder host devices back the 2x16x16 production mesh.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import (ARCH_IDS, SHAPES, TRAIN_MICROBATCHES, arch_cells,
+                           get_config)  # noqa: E402
+from repro.launch.hlo_stats import roofline_terms  # noqa: E402
+from repro.launch.hlo_walk import analyze_hlo  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import cell_arguments  # noqa: E402
+from repro.models import RunFlags  # noqa: E402
+from repro.models.config import ModelConfig  # noqa: E402
+from repro.train import OptConfig, make_prefill_step, make_serve_step, \
+    make_train_step  # noqa: E402
+
+
+def flags_for(cfg: ModelConfig, shape_name: str,
+              overrides: dict | None = None) -> RunFlags:
+    # shardmap EP when E and S divide the TP width (34x on qwen3-moe
+    # train_4k's dominant term, §Perf cell A); falls back to GSPMD scatter.
+    kw: dict = {"moe_mode": "shardmap"}
+    if shape_name == "train_4k":
+        kw["remat_policy"] = "full"
+        # Megatron-SP: shard the scanned layer carry over `model` so saved
+        # activations are 1/16th per device (big dense archs need it).
+        kw["seq_shard_carry"] = cfg.d_model >= 4096
+    if shape_name in ("prefill_32k",):
+        kw["remat_policy"] = "none"
+        kw["q_chunk"] = 2048
+    if shape_name in ("decode_32k", "long_500k"):
+        kw["remat_policy"] = "none"
+    kw.update(overrides or {})
+    return RunFlags(**kw)
+
+
+def build_step(cfg, shape, mesh, flags, microbatches):
+    """Returns (jitted_fn, example_args as shapedtypes)."""
+    args = cell_arguments(cfg, shape, mesh)
+    p_sds, p_sh = args["params"]
+    b_sds, b_sh = args["batch"]
+    if shape.phase == "train":
+        o_sds, o_sh = args["opt"]
+        fn = make_train_step(cfg, OptConfig(), mesh, flags, microbatches)
+        jfn = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh),
+                      out_shardings=(p_sh, o_sh, None),
+                      donate_argnums=(0, 1))
+        return jfn, (p_sds, o_sds, b_sds)
+    if shape.phase == "prefill":
+        c_sds, c_sh = args["cache"]
+        fn = make_prefill_step(cfg, mesh, flags, max_seq=shape.seq_len)
+        jfn = jax.jit(fn, in_shardings=(p_sh, b_sh),
+                      out_shardings=(None, c_sh))
+        return jfn, (p_sds, b_sds)
+    # decode
+    c_sds, c_sh = args["cache"]
+    fn = make_serve_step(cfg, mesh, flags)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    tok_sh = b_sh["tokens"]
+    pos_sh = NamedSharding(mesh, P())
+    jfn = jax.jit(fn, in_shardings=(p_sh, c_sh, tok_sh, pos_sh),
+                  out_shardings=(None, c_sh), donate_argnums=(1,))
+    return jfn, (p_sds, c_sds, b_sds["tokens"], b_sds["pos"])
+
+
+def model_flops(cfg: ModelConfig, shape) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); decode: D = batch tokens * 1."""
+    n = cfg.active_param_count()
+    if shape.phase == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n * toks
+    if shape.phase == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n * toks
+    return 2.0 * n * shape.global_batch
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             flag_overrides: dict | None = None,
+             microbatches: int | None = None,
+             serve_dtype: str = "bfloat16",
+             train_dtype: str = "bfloat16") -> dict:
+    """train_dtype bf16 = bf16-at-rest params + f32 master in the optimizer
+    (§Perf cell C); pass train_dtype='float32' to measure the f32 baseline."""
+    import dataclasses
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.phase != "train" and serve_dtype:
+        cfg = dataclasses.replace(cfg, param_dtype=serve_dtype)
+    if shape.phase == "train" and train_dtype:
+        cfg = dataclasses.replace(cfg, param_dtype=train_dtype)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    flags = flags_for(cfg, shape_name, flag_overrides)
+    mb = microbatches if microbatches is not None else (
+        TRAIN_MICROBATCHES.get(arch, 1) if shape.phase == "train" else 1)
+
+    rec: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "mesh_shape": dict(mesh.shape), "phase": shape.phase,
+        "microbatches": mb, "flags": dataclasses.asdict(flags),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    n_dev = mesh.size
+    t0 = time.time()
+    with mesh:
+        jfn, sds = build_step(cfg, shape, mesh, flags, mb)
+        lowered = jfn.lower(*sds)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+    ca = compiled.cost_analysis() or {}
+    flops_dev = float(ca.get("flops", 0.0))
+    hbm_dev = float(ca.get("bytes accessed", 0.0))
+    rec["cost_analysis"] = {k: float(v) for k, v in ca.items()
+                            if isinstance(v, (int, float))
+                            and k in ("flops", "bytes accessed",
+                                      "transcendentals", "utilization")}
+    ma = compiled.memory_analysis()
+    if ma is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                rec[k] = int(v)
+        args_b = rec.get("argument_size_in_bytes", 0)
+        alias_b = rec.get("alias_size_in_bytes", 0)
+        out_b = rec.get("output_size_in_bytes", 0)
+        rec["live_bytes_per_device"] = int(
+            args_b + rec.get("temp_size_in_bytes", 0) + out_b - alias_b)
+
+    hlo = compiled.as_text()
+    rec["hlo_chars"] = len(hlo)
+    # Call-graph walk with while-loop trip-count multiplication: XLA's own
+    # cost_analysis counts scan bodies exactly once (recorded above under
+    # cost_analysis for comparison).
+    tot = analyze_hlo(hlo)
+    rec["collective"] = {
+        "wire_bytes_per_device": tot.wire_bytes,
+        "op_bytes": tot.coll_bytes,
+        "op_count": tot.coll_count,
+        "dynamic_whiles": tot.dynamic_whiles,
+    }
+    flops_dev = tot.flops
+    hbm_dev = tot.bytes
+    rec["flops_per_device"] = flops_dev
+    rec["hbm_bytes_per_device"] = hbm_dev
+    rec["transcendentals_per_device"] = tot.transcendentals
+    rec["roofline"] = roofline_terms(flops_dev, hbm_dev, tot.wire_bytes)
+    mf = model_flops(cfg, shape)
+    rec["model_flops_global"] = mf
+    hw_flops_global = flops_dev * n_dev
+    rec["hlo_flops_global"] = hw_flops_global
+    rec["model_vs_hlo_flops"] = (mf / hw_flops_global) if hw_flops_global else 0.0
+    # MFU-at-roofline: model-useful flops / (chips * peak * bottleneck time)
+    tot = max(rec["roofline"]["compute_s"], rec["roofline"]["memory_s"],
+              rec["roofline"]["collective_s"])
+    rec["model_flops_util"] = (
+        mf / (n_dev * 197e12 * tot) if tot else 0.0)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--train-dtype", default="bfloat16",
+                    help="float32 = paper-faithful f32-params baseline; "
+                         "bfloat16 = bf16-at-rest + f32 master (optimized)")
+    ap.add_argument("--flag", action="append", default=[],
+                    help="RunFlags override key=value (e.g. remat_policy=dots)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.flag:
+        k, v = kv.split("=", 1)
+        overrides[k] = (v if not v.replace("-", "").isdigit() else int(v)) \
+            if v not in ("True", "False") else v == "True"
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, s) for a in ARCH_IDS for s in arch_cells(a)]
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+
+    n_ok = n_fail = n_skip = 0
+    for arch, shape_name in cells:
+        skip = shape_name.endswith(":skip")
+        shape_name = shape_name.split(":")[0]
+        for mesh_kind in meshes:
+            name = f"{arch}__{shape_name}__{mesh_kind}"
+            path = outdir / f"{name}.json"
+            if skip:
+                path.write_text(json.dumps({
+                    "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                    "status": "skipped",
+                    "reason": "pure full-attention arch: 500k context is "
+                              "quadratic in prefill; decode-only cell not "
+                              "assigned (DESIGN.md §Arch-applicability)"},
+                    indent=1))
+                print(f"[skip] {name}")
+                n_skip += 1
+                continue
+            if path.exists() and not args.force:
+                try:
+                    old = json.loads(path.read_text())
+                    if old.get("status") == "ok":
+                        print(f"[cached] {name}")
+                        n_ok += 1
+                        continue
+                except Exception:
+                    pass
+            t0 = time.time()
+            try:
+                rec = run_cell(arch, shape_name, mesh_kind,
+                               overrides or None, args.microbatches,
+                               train_dtype=args.train_dtype)
+                rec["status"] = "ok"
+                n_ok += 1
+                r = rec["roofline"]
+                print(f"[ok]   {name}  lower={rec['lower_s']}s "
+                      f"compile={rec['compile_s']}s "
+                      f"Tc={r['compute_s']:.3f}s Tm={r['memory_s']:.3f}s "
+                      f"Tn={r['collective_s']:.3f}s -> {r['bottleneck']}",
+                      flush=True)
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                       "status": "error", "error": str(e)[:2000],
+                       "traceback": traceback.format_exc()[-4000:],
+                       "seconds": round(time.time() - t0, 1)}
+                n_fail += 1
+                print(f"[FAIL] {name}: {str(e)[:300]}", flush=True)
+            path.write_text(json.dumps(rec, indent=1, default=str))
+    print(f"done: ok={n_ok} fail={n_fail} skip={n_skip}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

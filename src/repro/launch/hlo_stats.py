@@ -1,0 +1,115 @@
+"""Parse collective traffic + roofline terms out of a compiled HLO module.
+
+`compiled.cost_analysis()` has no collective-bytes entry, so we regex the
+post-SPMD optimized HLO: every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute result shape (already *per-device* after
+partitioning) is converted to wire bytes with the standard ring-algorithm
+factors:
+
+    all-gather          out_bytes * (G-1)/G        (out is the gathered size)
+    reduce-scatter      out_bytes * (G-1)           (out is the scattered size)
+    all-reduce          out_bytes * 2(G-1)/G
+    all-to-all          out_bytes * (G-1)/G
+    collective-permute  out_bytes
+
+with G the replica-group size parsed from `replica_groups`.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\][^\s]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0          # per-device bytes on ICI links
+    op_bytes: dict = field(default_factory=dict)
+    op_count: dict = field(default_factory=dict)
+
+    def add(self, op: str, b: float):
+        self.wire_bytes += b
+        self.op_bytes[op] = self.op_bytes.get(op, 0.0) + b
+        self.op_count[op] = self.op_count.get(op, 0) + 1
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        type_str, op, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":          # counted at -start
+            continue
+        out_bytes = _shape_bytes(type_str)
+        g = 1
+        mg = _GROUPS_RE.search(line)
+        if mg:
+            g = mg.group(1).count(",") + 1
+        else:
+            mi = _GROUPS_IOTA_RE.search(line)
+            if mi:
+                g = int(mi.group(2))
+        if op == "all-gather":
+            wire = out_bytes * (g - 1) / max(g, 1)
+        elif op == "reduce-scatter":
+            wire = out_bytes * (g - 1)
+        elif op == "all-reduce":
+            wire = out_bytes * 2 * (g - 1) / max(g, 1)
+        elif op == "all-to-all":
+            wire = out_bytes * (g - 1) / max(g, 1)
+        else:                          # collective-permute
+            wire = out_bytes
+        stats.add(op, wire)
+    return stats
+
+
+# TPU v5e-class hardware model (per assignment).
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (~per-chip injection)
+
+
+def roofline_terms(flops_per_dev: float, hbm_bytes_per_dev: float,
+                   wire_bytes_per_dev: float) -> dict:
+    t_c = flops_per_dev / PEAK_FLOPS
+    t_m = hbm_bytes_per_dev / HBM_BW
+    t_n = wire_bytes_per_dev / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_n),
+              key=lambda kv: kv[1])[0]
+    total = max(t_c, t_m, t_n)
+    return {
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+        "bottleneck": dom,
+        "roofline_fraction": (t_c / total) if total else 0.0,
+    }

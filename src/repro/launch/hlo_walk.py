@@ -1,0 +1,512 @@
+"""Call-graph walker over optimized (post-SPMD) HLO text.
+
+Why: `compiled.cost_analysis()` counts each while-loop *body once*, so any
+scan-based program (layers, microbatches, query chunks) is undercounted by
+the trip count.  This walker parses the module into computations, resolves
+while-loop trip counts from their condition computations (scan lowers to
+`compare(i, constant(N)), direction=LT`), and rolls up:
+
+  * flops        -- dot_general exactly (2*M*N*K*batch), elementwise +
+                    transcendentals at 1/elem
+  * hbm bytes    -- per executed instruction: operand + result bytes
+                    (fusions opaque: their operands/results only), the same
+                    convention XLA's own cost model uses
+  * collectives  -- wire bytes with ring-model factors and replica-group
+                    sizes, correctly multiplied inside loop bodies
+
+All shapes in the partitioned module are already per-device, so every total
+is per-device.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->\s*.+\{\s*$")
+_INSTR_HEAD_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TF_RE = re.compile(r"(?:true|false)_computation=%?([\w\.\-]+)")
+_CONST_INT_RE = re.compile(r"=\s*s(?:32|64)\[\]\s+constant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_TRANSCENDENTAL = {
+    "exponential", "exp", "log", "log-plus-one", "exponential-minus-one",
+    "tanh", "rsqrt", "sqrt", "power", "sine", "cosine", "logistic", "erf",
+    "cbrt", "atan2", "tan",
+}
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "compare", "select", "and", "or", "xor", "not", "clamp",
+    "remainder", "floor", "ceil", "round-nearest-afz", "round-nearest-even",
+    "sign", "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "convert", "is-finite",
+}
+_NO_TRAFFIC = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "add-dependency", "opt-barrier", "partition-id",
+    "replica-id", "iota",
+}
+_COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+def _first_shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    operands: list[str]
+    attrs: str
+    line: str
+
+
+@dataclass
+class Totals:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    bytes: float = 0.0
+    wire_bytes: float = 0.0
+    coll_bytes: dict = field(default_factory=dict)
+    coll_count: dict = field(default_factory=dict)
+    dynamic_whiles: int = 0
+
+    def scaled(self, m: float) -> "Totals":
+        return Totals(self.flops * m, self.transcendentals * m,
+                      self.bytes * m, self.wire_bytes * m,
+                      {k: v * m for k, v in self.coll_bytes.items()},
+                      {k: v * m for k, v in self.coll_count.items()},
+                      self.dynamic_whiles)
+
+    def add(self, o: "Totals"):
+        self.flops += o.flops
+        self.transcendentals += o.transcendentals
+        self.bytes += o.bytes
+        self.wire_bytes += o.wire_bytes
+        for k, v in o.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v
+        for k, v in o.coll_count.items():
+            self.coll_count[k] = self.coll_count.get(k, 0.0) + v
+        self.dynamic_whiles += o.dynamic_whiles
+
+
+def _split_operands(rest: str) -> tuple[list[str], str]:
+    """rest = text after the op's '(' -- split at the matching ')'."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                ops = re.findall(r"%([\w\.\-]+)", rest[:i])
+                return ops, rest[i + 1:]
+    return re.findall(r"%([\w\.\-]+)", rest), ""
+
+
+class HloModule:
+    def __init__(self, text: str, collect_top: bool = False):
+        self.comps: dict[str, list[Instr]] = {}
+        self.defs: dict[str, dict[str, str]] = {}
+        self.entry: str | None = None
+        self._parse(text)
+        self._memo: dict[tuple[str, bool], Totals] = {}
+        self.collect_top = collect_top
+        self.contrib: list[tuple[float, str, str, str]] = []  # bytes,op,meta
+
+    def top_bytes(self, k=20):
+        """Aggregate per-instruction byte contributions (x loop trips)."""
+        agg: dict[tuple[str, str], float] = {}
+        for b, op, type_str, comp in self.contrib:
+            key = (op, type_str[:90])
+            agg[key] = agg.get(key, 0.0) + b
+        rows = sorted(agg.items(), key=lambda kv: -kv[1])[:k]
+        return [(v, op, t) for (op, t), v in rows]
+
+    def _parse(self, text: str):
+        cur: str | None = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            if line.endswith("{") and ("->" in line) and ("= " not in line.split("(")[0]):
+                m = _COMP_RE.match(line.strip())
+                if m:
+                    cur = m.group(1)
+                    self.comps[cur] = []
+                    self.defs[cur] = {}
+                    if line.strip().startswith("ENTRY"):
+                        self.entry = cur
+                    continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            m = _INSTR_HEAD_RE.match(line)
+            if not m:
+                continue
+            name = m.group(1)
+            rest = line[m.end():]
+            # result type: balanced-paren tuple (may contain /*index=N*/
+            # comments with '=') or a single token up to whitespace
+            if rest.startswith("("):
+                depth = 0
+                end = 0
+                for i, ch in enumerate(rest):
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            end = i + 1
+                            break
+                type_str, rest = rest[:end], rest[end:]
+            else:
+                sp = rest.find(" ")
+                if sp < 0:
+                    continue
+                type_str, rest = rest[:sp], rest[sp:]
+            mo = _OPCODE_RE.match(rest)
+            if not mo:
+                continue
+            op = mo.group(1)
+            operands, attrs = _split_operands(rest[mo.end():])
+            self.comps[cur].append(
+                Instr(name, type_str, op, operands, attrs, line))
+            self.defs[cur][name] = type_str
+
+    # -- helpers -----------------------------------------------------------
+
+    def _trip_count(self, cond_comp: str) -> int | None:
+        best = None
+        for ins in self.comps.get(cond_comp, []):
+            for mm in _CONST_INT_RE.finditer(ins.line):
+                v = int(mm.group(1))
+                best = v if best is None else max(best, v)
+        # constants may live inside a fused compare computation
+        if best is None:
+            for ins in self.comps.get(cond_comp, []):
+                mc = _CALLS_RE.search(ins.attrs)
+                if mc:
+                    inner = self._trip_count(mc.group(1))
+                    if inner is not None:
+                        best = inner if best is None else max(best, inner)
+        return best
+
+    def _dot_flops(self, comp: str, ins: Instr) -> float:
+        out_elems = _shape_elems(ins.type_str)
+        lhs_type = self.defs[comp].get(ins.operands[0], "") if ins.operands \
+            else ""
+        lhs_dims = _first_shape_dims(lhs_type)
+        mcd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+        k = 1
+        if mcd and mcd.group(1) and lhs_dims:
+            for d in mcd.group(1).split(","):
+                di = int(d)
+                if di < len(lhs_dims):
+                    k *= lhs_dims[di]
+        return 2.0 * out_elems * k
+
+    def _collective(self, ins: Instr, t: Totals):
+        op = ins.op.replace("-start", "")
+        out_bytes = _shape_bytes(ins.type_str)
+        if op == "all-gather" or op == "all-to-all" or op == "all-reduce":
+            # for -start ops the result can be a (in, out) tuple: halve
+            if ins.op.endswith("-start") and ins.type_str.startswith("("):
+                out_bytes /= 2
+        g = 1
+        mg = _GROUPS_RE.search(ins.line)
+        if mg:
+            g = mg.group(1).count(",") + 1
+        else:
+            mi = _GROUPS_IOTA_RE.search(ins.line)
+            if mi:
+                g = int(mi.group(2))
+        if op == "all-gather":
+            wire = out_bytes * (g - 1) / max(g, 1)
+        elif op == "reduce-scatter":
+            wire = out_bytes * (g - 1)
+        elif op == "all-reduce":
+            wire = out_bytes * 2 * (g - 1) / max(g, 1)
+        elif op == "all-to-all":
+            wire = out_bytes * (g - 1) / max(g, 1)
+        else:
+            wire = out_bytes
+        t.wire_bytes += wire
+        t.coll_bytes[op] = t.coll_bytes.get(op, 0.0) + wire
+        t.coll_count[op] = t.coll_count.get(op, 0) + 1
+
+    def analyze(self, comp: str | None = None,
+                count_bytes: bool = True) -> Totals:
+        comp = comp or self.entry
+        key = (comp, count_bytes)
+        if key in self._memo:
+            return self._memo[key]
+        t = Totals()
+        self._memo[key] = t        # break cycles defensively
+        for ins in self.comps.get(comp, []):
+            op = ins.op
+            if op in _NO_TRAFFIC:
+                continue
+            base = op.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES:
+                if not op.endswith("-done"):
+                    self._collective(ins, t)
+                continue
+            if op == "while":
+                cond = _COND_RE.search(ins.attrs)
+                body = _BODY_RE.search(ins.attrs)
+                mt = _TRIP_RE.search(ins.attrs)   # XLA's own annotation
+                trips = int(mt.group(1)) if mt else (
+                    self._trip_count(cond.group(1)) if cond else None)
+                if trips is None:
+                    trips = 1
+                    t.dynamic_whiles += 1
+                inner = Totals()
+                if body:
+                    inner.add(self.analyze(body.group(1), count_bytes))
+                if cond:
+                    inner.add(self.analyze(cond.group(1), False))
+                t.add(inner.scaled(trips))
+                continue
+            if op == "conditional":
+                branches = []
+                mb = _BRANCH_RE.search(ins.attrs)
+                if mb:
+                    branches = re.findall(r"%?([\w\.\-]+)", mb.group(1))
+                else:
+                    branches = _TF_RE.findall(ins.attrs)
+                if branches:
+                    best = max((self.analyze(b, count_bytes)
+                                for b in branches), key=lambda x: x.flops)
+                    t.add(best)
+                continue
+            if op in ("fusion", "call", "custom-call", "reduce",
+                      "reduce-window", "sort", "scatter", "select-and-scatter",
+                      "map", "async-start"):
+                target = _CALLS_RE.search(ins.attrs) or \
+                    _TO_APPLY_RE.search(ins.attrs)
+                if target and target.group(1) in self.comps:
+                    inner = self.analyze(target.group(1), False)
+                    if op == "reduce":
+                        # applied once per input element
+                        n = sum(_shape_elems(self.defs[comp].get(o, ""))
+                                for o in ins.operands[:1])
+                        inner = inner.scaled(max(n, 1))
+                    t.flops += inner.flops
+                    t.transcendentals += inner.transcendentals
+                    t.wire_bytes += inner.wire_bytes
+                    for k, v in inner.coll_bytes.items():
+                        t.coll_bytes[k] = t.coll_bytes.get(k, 0.0) + v
+                    for k, v in inner.coll_count.items():
+                        t.coll_count[k] = t.coll_count.get(k, 0.0) + v
+                if count_bytes:
+                    if op == "fusion" and target:
+                        t.bytes += self._fusion_bytes(comp, ins,
+                                                      target.group(1))
+                    else:
+                        t.bytes += _shape_bytes(ins.type_str) + sum(
+                            _shape_bytes(self.defs[comp].get(o, ""))
+                            for o in ins.operands)
+                continue
+            # plain instruction
+            if op == "dot":
+                t.flops += self._dot_flops(comp, ins)
+            elif op in _TRANSCENDENTAL:
+                n = _shape_elems(ins.type_str)
+                t.flops += n
+                t.transcendentals += n
+            elif op in _ELEMENTWISE:
+                t.flops += _shape_elems(ins.type_str)
+            if count_bytes:
+                t.bytes += self._plain_bytes(comp, ins)
+        self._memo[key] = t
+        return t
+
+    # -- slice-aware HBM byte accounting ------------------------------------
+    # TPU buffer assignment updates dynamic-update-slice in place and reads
+    # only the addressed window of dynamic-slice/gather; counting whole
+    # operands charged a 32k-KV-cache decode step 9.8 TB/device of phantom
+    # traffic (§Perf cell B analysis).
+
+    def _plain_bytes(self, comp, ins) -> float:
+        op = ins.op
+        if op == "dynamic-slice":
+            return 2.0 * _shape_bytes(ins.type_str)
+        if op == "dynamic-update-slice":
+            upd = _shape_bytes(self.defs[comp].get(ins.operands[1], "")) \
+                if len(ins.operands) > 1 else 0
+            return 2.0 * upd
+        if op == "gather":
+            return 2.0 * _shape_bytes(ins.type_str)
+        return _shape_bytes(ins.type_str) + sum(
+            _shape_bytes(self.defs[comp].get(o, ""))
+            for o in ins.operands)
+
+    _PASS_THROUGH = ("convert", "copy", "bitcast", "transpose", "reshape",
+                     "negate", "multiply", "add")
+
+    def _sliced_reads(self, pname, consumers) -> float | None:
+        """Bytes actually read from param `pname` if every use reaches a
+        dynamic-slice/gather through pass-through ops (else None = full)."""
+        total = 0.0
+        stack = [pname]
+        seen = set()
+        while stack:
+            nm = stack.pop()
+            if nm in seen:
+                continue
+            seen.add(nm)
+            for c in consumers.get(nm, []):
+                if c.op in ("dynamic-slice", "gather"):
+                    total += _shape_bytes(c.type_str)
+                elif c.op == "dynamic-update-slice" and \
+                        c.operands and c.operands[0] == nm:
+                    continue          # in-place destination: no read
+                elif c.op in self._PASS_THROUGH and \
+                        _shape_bytes(c.type_str) >= 0:
+                    # only safe if the pass-through op itself is later
+                    # sliced; keep following
+                    stack.append(c.name)
+                else:
+                    return None
+        return total
+
+    def _fusion_bytes(self, comp, ins, called: str) -> float:
+        """Operand traffic of a fusion with in-place/windowed semantics:
+        * operand consumed only through (chains ending in) dynamic-slice /
+          gather -> charged at the sliced window size;
+        * operand that is the destination of a root dynamic-update-slice
+          (the scan/cache accumulator) -> charged 0 (aliased in place),
+          with the root charged 2x the update size;
+        * everything else -> full operand + result size (XLA's own
+          convention)."""
+        body = self.comps.get(called, [])
+        defs = self.defs.get(called, {})
+        param_name: dict[int, str] = {}
+        consumers: dict[str, list[Instr]] = {}
+        root = body[-1] if body else None
+        for bi in body:
+            if bi.op == "parameter":
+                m = re.search(r"parameter\((\d+)\)", bi.line)
+                if m:
+                    param_name[int(m.group(1))] = bi.name
+            for o in bi.operands:
+                consumers.setdefault(o, []).append(bi)
+        has_dus = any(bi.op == "dynamic-update-slice" for bi in body)
+        result_bytes = _shape_bytes(ins.type_str)
+        total = 0.0
+        result_accounted = False
+        for i, o in enumerate(ins.operands):
+            full = _shape_bytes(self.defs[comp].get(o, ""))
+            pname = param_name.get(i)
+            if pname is None:
+                total += full
+                continue
+            if has_dus and full == result_bytes and full > 0:
+                # the big buffer flowing through a DUS fusion: in-place
+                upd = sum(2.0 * _shape_bytes(defs.get(bi.operands[1], ""))
+                          for bi in body
+                          if bi.op == "dynamic-update-slice"
+                          and len(bi.operands) > 1)
+                total += upd
+                result_accounted = True
+                continue
+            sliced = self._sliced_reads(pname, consumers)
+            total += full if sliced is None else sliced
+        if not result_accounted:
+            total += result_bytes
+        return total
+
+
+    def attribute(self, comp: str | None = None, mult: float = 1.0):
+        """Debug walk: per-instruction byte contributions x loop trips."""
+        comp = comp or self.entry
+        for ins in self.comps.get(comp, []):
+            op = ins.op
+            if op in _NO_TRAFFIC:
+                continue
+            base = op.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES:
+                if not op.endswith("-done"):
+                    t = Totals()
+                    self._collective(ins, t)
+                    self.contrib.append((t.wire_bytes * mult, "COLL:" + base,
+                                         ins.type_str, comp))
+                continue
+            if op == "while":
+                body = _BODY_RE.search(ins.attrs)
+                mt = _TRIP_RE.search(ins.attrs)
+                trips = int(mt.group(1)) if mt else 1
+                if body:
+                    self.attribute(body.group(1), mult * trips)
+                continue
+            if op == "conditional":
+                mb = _BRANCH_RE.search(ins.attrs)
+                branches = re.findall(r"%?([\w\.\-]+)", mb.group(1)) if mb \
+                    else _TF_RE.findall(ins.attrs)
+                for b in branches[:1]:
+                    self.attribute(b, mult)
+                continue
+            b = _shape_bytes(ins.type_str) + sum(
+                _shape_bytes(self.defs[comp].get(o, ""))
+                for o in ins.operands)
+            self.contrib.append((b * mult, op, ins.type_str, comp))
+
+    def analyze_with_top(self, k=20):
+        t = self.analyze()
+        self.attribute()
+        return t, self.top_bytes(k)
+
+
+def analyze_hlo(text: str) -> Totals:
+    return HloModule(text).analyze()

@@ -1,0 +1,98 @@
+"""ShapeDtypeStruct stand-ins + NamedShardings for every dry-run cell.
+
+`input_specs()` mirrors the real data pipeline's output structure: token ids
+for text archs; precomputed frame/patch embeddings for the audio/vlm stub
+frontends (the modality frontend is a STUB per the assignment).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import cache_shapedtypes, param_shapedtypes
+from ..models.config import ModelConfig, ShapeConfig
+from ..models.params import abstract_params
+from ..models.lm import cache_abstract
+from ..sharding import resolve_spec, tree_specs
+from ..train.optim import opt_shapedtypes
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStructs for the step function's data arguments."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    emb = jnp.dtype(cfg.compute_dtype)
+    if shape.phase == "train":
+        if cfg.frontend == "none":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                    "labels": jax.ShapeDtypeStruct((B, S), i32)}
+        return {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), emb),
+                "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    if shape.phase == "prefill":
+        if cfg.frontend == "none":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        return {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), emb)}
+    # decode: one new token against a seq_len cache
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32)}
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    def spec(sds):
+        logical = ("batch",) + (None,) * (sds.ndim - 1) if sds.ndim else ()
+        return NamedSharding(mesh, resolve_spec(sds.shape, logical, mesh))
+
+    return jax.tree.map(spec, input_specs(cfg, shape))
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, *,
+                    fsdp_axes=("data",)):
+    specs = tree_specs(abstract_params(cfg), mesh, fsdp_axes=fsdp_axes)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def opt_shardings(cfg: ModelConfig, mesh: Mesh, master: bool = False):
+    """Optimizer moments (+ optional f32 master params): FSDP over
+    (pod, data) when a pod axis exists (ZeRO across pods), else data."""
+    fsdp = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    pshard = param_shardings(cfg, mesh, fsdp_axes=fsdp)
+    out = {"step": NamedSharding(mesh, P()), "m": pshard, "v": pshard}
+    if master:
+        out["master"] = pshard
+    return out
+
+
+def cache_shardings(cfg: ModelConfig, batch: int, max_seq: int, mesh: Mesh):
+    ab = cache_abstract(cfg, batch, max_seq)
+    ov = {"batch": [tuple(batch_axes(mesh))]}
+    specs = {k: resolve_spec(d.shape, d.axes, mesh, overrides=ov)
+             for k, d in ab.items()}
+    return {k: NamedSharding(mesh, s) for k, s in specs.items()}
+
+
+def cell_arguments(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """(shapedtypes, shardings) pairs for one dry-run cell, keyed by role.
+
+    Training cells run bf16-at-rest parameters with an f32 master in the
+    optimizer (the §Perf cell-C configuration)."""
+    master = shape.phase == "train" and \
+        jnp.dtype(cfg.param_dtype) == jnp.bfloat16
+    out = {
+        "params": (param_shapedtypes(cfg), param_shardings(cfg, mesh)),
+        "batch": (input_specs(cfg, shape), batch_shardings(cfg, shape, mesh)),
+    }
+    psds = out["params"][0]
+    if shape.phase == "train":
+        out["opt"] = (opt_shapedtypes(psds, master=master),
+                      opt_shardings(cfg, mesh, master=master))
+    if shape.phase in ("prefill", "decode"):
+        out["cache"] = (
+            cache_shapedtypes(cfg, shape.global_batch, shape.seq_len),
+            cache_shardings(cfg, shape.global_batch, shape.seq_len, mesh))
+    return out

@@ -1,0 +1,67 @@
+"""Production training launcher.
+
+    # real pod (per-host; JAX distributed init from the env):
+    python -m repro.launch.train --arch llama3-405b --shape train_4k \
+        --mesh single --steps 1000 --ckpt gs://.../ckpt
+
+    # local CPU smoke (reduced config, host mesh):
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-4b --smoke
+
+The launcher builds the production mesh, resolves shardings from the rules
+table, places/initializes state, and drives jit-compiled train steps with
+checkpoint/auto-resume.  On CPU (no TPU runtime) --smoke is required.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-4b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on the local host mesh")
+    ap.add_argument("--dedup", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import TRAIN_MICROBATCHES, get_config
+    from repro.launch.mesh import TPU_XLA_FLAGS, make_host_mesh, \
+        make_production_mesh
+    from repro.train import OptConfig
+    from repro.train.loop import Trainer, TrainerConfig
+
+    if jax.default_backend() == "tpu":
+        jax.distributed.initialize()
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+        cfg = get_config(args.arch)
+        print(f"pod mesh {dict(mesh.shape)}; XLA flags: {TPU_XLA_FLAGS}")
+    else:
+        if not args.smoke:
+            raise SystemExit("no TPU runtime detected: pass --smoke for a "
+                             "reduced local run, or use launch/dryrun.py to "
+                             "validate the pod configuration")
+        mesh = None
+        cfg = get_config(args.arch).reduced(vocab=2048)
+
+    tc = TrainerConfig(
+        steps=args.steps, batch_size=8 if args.smoke else 256,
+        seq_len=128 if args.smoke else 4096,
+        ckpt_dir=args.ckpt, ckpt_every=50 if args.ckpt else 0,
+        microbatches=TRAIN_MICROBATCHES.get(args.arch, 1)
+        if not args.smoke else 1,
+        dedup_theta=0.55 if args.dedup else 0.0)
+    out = Trainer(cfg, tc, ocfg=OptConfig(), mesh=mesh).run()
+    print(f"done: loss {out['first_loss']:.4f} -> {out['final_loss']:.4f} "
+          f"in {out['wall_s']:.1f}s; dedup={out['dedup']}")
+
+
+if __name__ == "__main__":
+    main()

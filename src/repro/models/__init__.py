@@ -1,0 +1,13 @@
+from .config import SHAPES, ModelConfig, ShapeConfig
+from .lm import (RunFlags, cache_abstract, cache_shapedtypes, decode_step,
+                 forward, init_cache, lm_loss, prefill)
+from .params import (ParamDesc, abstract_params, init_params,
+                     param_count_tree, param_shapedtypes)
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "SHAPES", "RunFlags",
+    "forward", "lm_loss", "prefill", "decode_step", "init_cache",
+    "cache_abstract", "cache_shapedtypes",
+    "ParamDesc", "abstract_params", "init_params", "param_shapedtypes",
+    "param_count_tree",
+]

@@ -1,0 +1,171 @@
+"""Unified model configuration for the 10 assigned architectures."""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                 # dense | moe | ssm | hybrid
+    frontend: str = "none"      # none | audio | vision  (stub frontends)
+
+    n_layers: int = 2
+    d_model: int = 64
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    d_ff: int = 128
+    vocab: int = 128
+    qkv_bias: bool = False
+    swa_window: int = 0         # 0 -> full attention; >0 -> sliding window
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_dff: int = 0
+    capacity_factor: float = 1.25
+
+    # SSM (mamba1 / mamba2)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_headdim: int = 64       # mamba2 head dim
+    ssm_dt_rank: int = 0        # 0 -> ceil(d_model / 16)   (mamba1)
+
+    # hybrid (zamba2-style shared attention block)
+    attn_every: int = 0         # 0 -> no interleaved shared block
+
+    # numerics / training
+    param_dtype: str = "float32"    # master weights
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.n_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if self.ssm_dt_rank == 0 and self.family in ("ssm", "hybrid"):
+            object.__setattr__(self, "ssm_dt_rank", -(-self.d_model // 16))
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def has_subquadratic_context(self) -> bool:
+        """True if long-context (500k) cost is sub-quadratic in prefill:
+        SSM/hybrid state-space recurrence, or sliding-window attention."""
+        return self.family in ("ssm", "hybrid") or self.swa_window > 0
+
+    def param_count(self) -> int:
+        """Analytic total parameter count (embedding + stack + head)."""
+        d, v = self.d_model, self.vocab
+        total = v * d                                 # embed
+        if not self.tie_embeddings:
+            total += d * v                            # head
+        total += d                                    # final norm
+        hd = self.head_dim
+        per_layer = 0
+        if self.family in ("dense", "moe"):
+            qkv = d * (self.n_heads * hd) + 2 * d * (self.n_kv_heads * hd)
+            attn = qkv + (self.n_heads * hd) * d
+            if self.qkv_bias:
+                attn += (self.n_heads + 2 * self.n_kv_heads) * hd
+            per_layer = attn + 2 * d                  # + 2 norms
+            if self.family == "dense":
+                per_layer += 3 * d * self.d_ff
+            else:
+                per_layer += d * self.n_experts       # router
+                per_layer += self.n_experts * 3 * d * self.moe_dff
+        elif self.family in ("ssm", "hybrid"):
+            di, ds = self.d_inner, self.ssm_state
+            if self.arch_id.startswith("falcon") or self.family == "ssm":
+                # mamba1 block
+                per_layer = (d * 2 * di + di * self.ssm_conv +
+                             di * (self.ssm_dt_rank + 2 * ds) +
+                             self.ssm_dt_rank * di + di * ds + di + di * d + d)
+            else:
+                # mamba2 (SSD) block
+                nh, ng = self.ssm_nheads, 1
+                proj_in = d * (2 * di + 2 * ng * ds + nh)
+                per_layer = (proj_in + (di + 2 * ng * ds) * self.ssm_conv +
+                             nh * 2 + di + di * d + d)
+        total += self.n_layers * per_layer
+        if self.attn_every:  # one shared attention block over concat(x, x0)
+            hd2 = self.head_dim
+            total += (2 * d + (2 * d) * (self.n_heads * hd2) +
+                      2 * (2 * d) * (self.n_kv_heads * hd2) +
+                      (self.n_heads * hd2) * d)
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top_k of n_experts)."""
+        if self.family != "moe":
+            return self.param_count()
+        dense_share = self.param_count() - \
+            self.n_layers * self.n_experts * 3 * self.d_model * self.moe_dff
+        return dense_share + self.n_layers * self.top_k * 3 * self.d_model * self.moe_dff
+
+    def reduced(self, **over) -> "ModelConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        kw = dict(
+            arch_id=self.arch_id + "-smoke",
+            family=self.family,
+            frontend=self.frontend,
+            n_layers=min(self.n_layers, 2),
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=max(1, min(self.n_kv_heads, 2)),
+            head_dim=16,
+            d_ff=128,
+            vocab=256,
+            qkv_bias=self.qkv_bias,
+            swa_window=8 if self.swa_window else 0,
+            n_experts=4 if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            moe_dff=64 if self.moe_dff else 0,
+            ssm_state=8 if self.ssm_state else 0,
+            ssm_expand=2,
+            ssm_conv=4,
+            ssm_headdim=16,
+            ssm_dt_rank=8 if self.family in ("ssm", "hybrid") else 0,
+            attn_every=2 if self.attn_every else 0,
+            tie_embeddings=self.tie_embeddings,
+        )
+        kw.update(over)
+        return ModelConfig(**kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    phase: str                  # train | prefill | decode
+    microbatches: int = 1       # grad-accumulation splits (train only)
+
+    def with_microbatches(self, m: int) -> "ShapeConfig":
+        return dataclasses.replace(self, microbatches=m)
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}

@@ -1,0 +1,480 @@
+"""The unified decoder stack: forward / loss / prefill / decode for all
+10 assigned architectures (dense GQA, MoE, Mamba-1, Mamba-2 hybrid,
+audio/vlm-stub frontends).
+
+Depth runs as one `lax.scan` over stacked per-layer parameters with optional
+`jax.checkpoint` (remat) on the layer body -- HLO is O(1) in n_layers, which
+is what makes the 126-layer / 405B dry-run lowerable.  The zamba2 shared
+attention block is applied inside the scan under `lax.cond` on layer index.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .layers import (apply_rope, attention, decode_attention, moe_dense,
+                     moe_scatter, rms_norm, rope_angles, swiglu)
+from .params import ParamDesc
+from .ssm import (mamba1_block, mamba1_decode, mamba2_block, mamba2_decode)
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+
+@dataclass(frozen=True)
+class RunFlags:
+    """Per-call performance knobs (the §Perf hillclimb levers)."""
+    q_chunk: int = 2048          # query-chunked attention above this Sq
+    scan_chunk: int = 256        # SSM chunked-scan inner length
+    remat_policy: str = "full"   # REMAT_POLICIES key
+    moe_mode: str = "scatter"    # scatter | dense
+    seq_shard_carry: bool = False  # Megatron-SP: shard scanned carry on seq
+    logits_f32: bool = True
+
+
+def _cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype)
+                        if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+
+def _constrain(x, mesh, *logical):
+    if mesh is None:
+        return x
+    from ..sharding import constrain
+    return constrain(x, mesh, *logical)
+
+
+def _needs_cp(n_heads: int, mesh) -> bool:
+    """Context-parallel attention when heads don't divide the TP width."""
+    if mesh is None or "model" not in mesh.shape:
+        return False
+    return n_heads % mesh.shape["model"] != 0
+
+
+# --------------------------------------------------------------------------
+# Layer bodies (full-sequence: train / prefill).  Each returns (x, cache_y)
+# where cache_y is this layer's contribution to a decode cache (or ()).
+# --------------------------------------------------------------------------
+
+def _attn_layer(x, p, cfg: ModelConfig, flags: RunFlags, mesh, positions,
+                want_cache: bool):
+    B, S, d = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,de->bse", h, p["wq"])
+    k = jnp.einsum("bsd,de->bse", h, p["wk"])
+    v = jnp.einsum("bsd,de->bse", h, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, Dh)
+    k = k.reshape(B, S, KV, Dh)
+    v = v.reshape(B, S, KV, Dh)
+    cos, sin = rope_angles(positions, Dh, cfg.rope_theta)
+    q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    cp = _needs_cp(H, mesh)
+    o = attention(q, k, v, window=cfg.swa_window, q_chunk=flags.q_chunk,
+                  mesh=mesh, cp=cp)
+    x = x + jnp.einsum("bse,ed->bsd", o.reshape(B, S, H * Dh), p["wo"])
+    x = _constrain(x, mesh, "batch", None, None)
+
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        m = _moe_forward(h2, p, cfg, flags, mesh)
+    else:
+        m = swiglu(h2, p["w1"], p["w3"], p["w2"])
+    x = x + m
+    x = _constrain(x, mesh, "batch", None, None)
+    cache_y = (k, v) if want_cache else ()
+    return x, cache_y
+
+
+def _moe_forward(h2, p, cfg: ModelConfig, flags: RunFlags, mesh):
+    args = (h2, p["router"], p["w1"], p["w3"], p["w2"], cfg.top_k)
+    if flags.moe_mode == "dense":
+        return moe_dense(*args)
+    S = h2.shape[1]
+    if flags.moe_mode == "shardmap" and mesh is not None:
+        tp = mesh.shape.get("model", 1)
+        if cfg.n_experts % tp == 0 and S % tp == 0 and S >= tp:
+            from .layers import moe_shardmap
+            return moe_shardmap(h2, p["router"], p["w1"], p["w3"], p["w2"],
+                                cfg.top_k, cfg.capacity_factor, mesh)
+    return moe_scatter(*args[:-1], cfg.top_k, cfg.capacity_factor, mesh)
+
+
+def _shared_attn_apply(x, x0, sp, cfg: ModelConfig, flags: RunFlags,
+                       positions, want_cache: bool, mesh=None):
+    """zamba2 shared block: attention over concat(x, embed0)."""
+    B, S, d = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    hin = jnp.concatenate([x, x0], axis=-1)
+    h = rms_norm(hin, sp["ln"], cfg.norm_eps)
+    q = jnp.einsum("bsd,de->bse", h, sp["wq"]).reshape(B, S, H, Dh)
+    k = jnp.einsum("bsd,de->bse", h, sp["wk"]).reshape(B, S, KV, Dh)
+    v = jnp.einsum("bsd,de->bse", h, sp["wv"]).reshape(B, S, KV, Dh)
+    cos, sin = rope_angles(positions, Dh, cfg.rope_theta)
+    q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    o = attention(q, k, v, q_chunk=flags.q_chunk, mesh=mesh,
+                  cp=_needs_cp(H, mesh))
+    x = x + jnp.einsum("bse,ed->bsd", o.reshape(B, S, H * Dh), sp["wo"])
+    return x, ((k, v) if want_cache else ())
+
+
+def _make_layer_body(cfg: ModelConfig, flags: RunFlags, mesh, positions,
+                     want_cache: bool, x0, shared):
+    """Returns body(x, (layer_params, layer_idx)) -> (x, cache_y)."""
+
+    def body(x, scanned):
+        p, li = scanned
+        if cfg.family in ("dense", "moe"):
+            return _attn_layer(x, p, cfg, flags, mesh, positions, want_cache)
+        if cfg.family == "ssm":
+            h = rms_norm(x, p["ln"], cfg.norm_eps)
+            out, (conv_tail, hs) = mamba1_block(
+                h, p, cfg, scan_chunk=flags.scan_chunk)
+            x = x + out
+            x = _constrain(x, mesh, "batch", None, None)
+            return x, ((conv_tail, hs) if want_cache else ())
+        # hybrid: mamba2 + shared attention every cfg.attn_every layers
+        h = rms_norm(x, p["ln"], cfg.norm_eps)
+        out, (conv_tail, hs) = mamba2_block(
+            h, p, cfg, scan_chunk=flags.scan_chunk)
+        x = x + out
+        x = _constrain(x, mesh, "batch", None, None)
+        if cfg.attn_every:
+            def with_attn(x):
+                return _shared_attn_apply(x, x0, shared, cfg, flags,
+                                          positions, want_cache, mesh)
+
+            def without(x):
+                if want_cache:
+                    B, S = x.shape[:2]
+                    z = jnp.zeros((B, S, cfg.n_kv_heads, cfg.head_dim),
+                                  x.dtype)
+                    return x, (z, z)
+                return x, ()
+
+            x, akv = lax.cond(li % cfg.attn_every == cfg.attn_every - 1,
+                              with_attn, without, x)
+        else:
+            akv = ()
+        cache_y = ((conv_tail, hs), akv) if want_cache else ()
+        return x, cache_y
+
+    return body
+
+
+def _run_stack(x, params, cfg: ModelConfig, flags: RunFlags, mesh,
+               positions, want_cache: bool):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    layers = _cast(params["layers"], cdt)
+    shared = _cast(params.get("shared"), cdt) if "shared" in params else None
+    x0 = x if cfg.family == "hybrid" else None
+    body = _make_layer_body(cfg, flags, mesh, positions, want_cache, x0,
+                            shared)
+    if flags.remat_policy != "none":
+        # prevent_cse=True: XLA:CPU CSEs the recomputation away otherwise,
+        # silently reverting remat to save-everything (70 GB temps observed).
+        body = jax.checkpoint(body, policy=REMAT_POLICIES[flags.remat_policy],
+                              prevent_cse=True)
+
+    def wrapped(carry, scanned):
+        if flags.seq_shard_carry:
+            carry = _constrain(carry, mesh, "batch", "seq_sp", None)
+        return body(carry, scanned)
+
+    li = jnp.arange(cfg.n_layers)
+    x, cache_ys = lax.scan(wrapped, x, (layers, li))
+    return x, cache_ys
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig, mesh=None):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    table = params["embed"].astype(cdt)
+    if mesh is not None and tokens.size <= 4096:
+        # decode path: GSPMD lowers a gather from the vocab-sharded table to
+        # an involuntary full replication; a one-hot matmul keeps the table
+        # sharded (partial products + one small psum).  §Perf cell B.
+        oh = jax.nn.one_hot(tokens, cfg.vocab, dtype=cdt)
+        return jnp.einsum("bsv,vd->bsd", oh, table)
+    return table[tokens]
+
+
+def unembed(x, params, cfg: ModelConfig, flags: RunFlags, mesh):
+    x = rms_norm(x, params["final_ln"].astype(x.dtype), cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    if flags.logits_f32:
+        logits = logits.astype(jnp.float32)
+    return _constrain(logits, mesh, "batch", None, "vocab")
+
+
+def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None,
+            mesh=None, flags: RunFlags = RunFlags()):
+    """Full-sequence forward -> logits (B,S,V)."""
+    if embeds is None:
+        x = embed_tokens(params, tokens, cfg)
+    else:
+        x = embeds.astype(jnp.dtype(cfg.compute_dtype))
+    x = _constrain(x, mesh, "batch", None, None)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    x, _ = _run_stack(x, params, cfg, flags, mesh, positions,
+                      want_cache=False)
+    return unembed(x, params, cfg, flags, mesh)
+
+
+def lm_loss(params, cfg: ModelConfig, batch, mesh=None,
+            flags: RunFlags = RunFlags()):
+    """Mean next-token cross entropy.  batch: tokens|embeds + labels + mask."""
+    logits = forward(params, cfg, tokens=batch.get("tokens"),
+                     embeds=batch.get("embeds"), mesh=mesh, flags=flags)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    m = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = m - ll
+    mask = batch.get("mask")
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# --------------------------------------------------------------------------
+# KV / SSM caches
+# --------------------------------------------------------------------------
+
+def cache_abstract(cfg: ModelConfig, batch: int, max_seq: int,
+                   dtype_name: str | None = None) -> dict:
+    """ParamDesc tree for the decode cache (shapes + logical axes)."""
+    dt = dtype_name or cfg.compute_dtype
+    L, B, S = cfg.n_layers, batch, max_seq
+    KV, Dh = cfg.n_kv_heads, cfg.head_dim
+    kv_axes = ("layers", "batch", "seq_kv", "kv_heads", "head_dim")
+    if cfg.family in ("dense", "moe"):
+        return {
+            "k": ParamDesc((L, B, S, KV, Dh), kv_axes, "zeros"),
+            "v": ParamDesc((L, B, S, KV, Dh), kv_axes, "zeros"),
+        }
+    if cfg.family == "ssm":
+        di, ds, ck = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+        return {
+            "conv": ParamDesc((L, B, ck - 1, di),
+                              ("layers", "batch", "conv", "ssm_inner"),
+                              "zeros"),
+            "h": ParamDesc((L, B, di, ds),
+                           ("layers", "batch", "ssm_inner", "ssm_state"),
+                           "zeros"),
+        }
+    # hybrid
+    di, ds, ck = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    nh, hd = cfg.ssm_nheads, cfg.ssm_headdim
+    tree = {
+        "conv_x": ParamDesc((L, B, ck - 1, di),
+                            ("layers", "batch", "conv", "ssm_inner"), "zeros"),
+        "conv_B": ParamDesc((L, B, ck - 1, ds),
+                            ("layers", "batch", "conv", None), "zeros"),
+        "conv_C": ParamDesc((L, B, ck - 1, ds),
+                            ("layers", "batch", "conv", None), "zeros"),
+        "h": ParamDesc((L, B, nh, hd, ds),
+                       ("layers", "batch", "ssm_heads", "head_dim",
+                        "ssm_state"), "zeros"),
+    }
+    if cfg.attn_every:
+        napp = max(1, cfg.n_layers // cfg.attn_every)  # shared-block slots
+        tree["ak"] = ParamDesc((napp, B, S, KV, Dh), kv_axes, "zeros")
+        tree["av"] = ParamDesc((napp, B, S, KV, Dh), kv_axes, "zeros")
+    return tree
+
+
+def _cache_dtype(name: str, cfg: ModelConfig):
+    # SSM running state stays f32 (recurrence numerics); kv/conv use compute.
+    return jnp.float32 if name == "h" else jnp.dtype(cfg.compute_dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    ab = cache_abstract(cfg, batch, max_seq)
+    return {k: jnp.zeros(d.shape, _cache_dtype(k, cfg))
+            for k, d in ab.items()}
+
+
+def cache_shapedtypes(cfg: ModelConfig, batch: int, max_seq: int):
+    ab = cache_abstract(cfg, batch, max_seq)
+    return {k: jax.ShapeDtypeStruct(d.shape, _cache_dtype(k, cfg))
+            for k, d in ab.items()}
+
+
+def prefill(params, cfg: ModelConfig, tokens=None, embeds=None, *,
+            max_seq: int | None = None, mesh=None,
+            flags: RunFlags = RunFlags()):
+    """Forward the prompt, return (logits, cache filled up to S)."""
+    if embeds is None:
+        x = embed_tokens(params, tokens, cfg)
+    else:
+        x = embeds.astype(jnp.dtype(cfg.compute_dtype))
+    x = _constrain(x, mesh, "batch", None, None)
+    B, S = x.shape[:2]
+    max_seq = max_seq or S
+    positions = jnp.arange(S)
+    x, cache_ys = _run_stack(x, params, cfg, flags, mesh, positions,
+                             want_cache=True)
+    logits = unembed(x[:, -1:], params, cfg, flags, mesh)
+    cache = init_cache(cfg, B, max_seq)
+    if cfg.family in ("dense", "moe"):
+        ks, vs = cache_ys
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], ks.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], vs.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+    elif cfg.family == "ssm":
+        conv_tails, hs = cache_ys
+        cache["conv"] = conv_tails.astype(cache["conv"].dtype)
+        cache["h"] = hs
+    else:
+        (conv_tails, hs), akv = cache_ys
+        cx, cB, cC = conv_tails
+        cache["conv_x"] = cx.astype(cache["conv_x"].dtype)
+        cache["conv_B"] = cB.astype(cache["conv_B"].dtype)
+        cache["conv_C"] = cC.astype(cache["conv_C"].dtype)
+        cache["h"] = hs
+        if cfg.attn_every:
+            ak, av = akv           # (L, B, S, KV, Dh); rows where applied
+            napp = cache["ak"].shape[0]
+            sel = ak[cfg.attn_every - 1::cfg.attn_every][:napp]
+            cache["ak"] = jax.lax.dynamic_update_slice(
+                cache["ak"], sel.astype(cache["ak"].dtype), (0, 0, 0, 0, 0))
+            sel = av[cfg.attn_every - 1::cfg.attn_every][:napp]
+            cache["av"] = jax.lax.dynamic_update_slice(
+                cache["av"], sel.astype(cache["av"].dtype), (0, 0, 0, 0, 0))
+    return logits, cache
+
+
+# --------------------------------------------------------------------------
+# Single-token decode
+# --------------------------------------------------------------------------
+
+def _attn_decode_layer(x, p, kc, vc, pos, cfg, flags, mesh):
+    B = x.shape[0]
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,de->bse", h, p["wq"])
+    k = jnp.einsum("bsd,de->bse", h, p["wk"])
+    v = jnp.einsum("bsd,de->bse", h, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, 1, H, Dh)
+    k = k.reshape(B, 1, KV, Dh)
+    v = v.reshape(B, 1, KV, Dh)
+    cos, sin = rope_angles(pos[None], Dh, cfg.rope_theta)
+    q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    kc = lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, pos, 0, 0))
+    vc = lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, pos, 0, 0))
+    o = decode_attention(q, kc, vc, pos, window=cfg.swa_window, mesh=mesh)
+    x = x + jnp.einsum("bse,ed->bsd", o.reshape(B, 1, H * Dh), p["wo"])
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        m = moe_dense(h2, p["router"], p["w1"], p["w3"], p["w2"], cfg.top_k) \
+            if flags.moe_mode == "dense" else \
+            moe_scatter(h2, p["router"], p["w1"], p["w3"], p["w2"],
+                        cfg.top_k, cfg.capacity_factor, mesh)
+    else:
+        m = swiglu(h2, p["w1"], p["w3"], p["w2"])
+    return x + m, kc, vc
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig, *,
+                mesh=None, flags: RunFlags = RunFlags()):
+    """One decode step.  tokens (B,1) int32; pos scalar int32 (0-based).
+    Returns (logits (B,1,V), new cache)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = embed_tokens(params, tokens, cfg, mesh)
+    x = _constrain(x, mesh, "batch", None, None)
+    layers = _cast(params["layers"], cdt)
+    x0 = x if cfg.family == "hybrid" else None
+    shared = _cast(params.get("shared"), cdt) if "shared" in params else None
+
+    if cfg.family in ("dense", "moe"):
+        def body(x, scanned):
+            p, kc, vc = scanned
+            x, kc, vc = _attn_decode_layer(x, p, kc, vc, pos, cfg, flags,
+                                           mesh)
+            return x, (kc, vc)
+
+        x, (ks, vs) = lax.scan(body, x, (layers, cache["k"], cache["v"]))
+        new_cache = {"k": ks, "v": vs}
+    elif cfg.family == "ssm":
+        def body(x, scanned):
+            p, conv, h = scanned
+            hh = rms_norm(x, p["ln"], cfg.norm_eps)
+            out, conv, h = mamba1_decode(hh, conv, h, p, cfg)
+            return x + out, (conv, h)
+
+        x, (convs, hs) = lax.scan(body, x, (layers, cache["conv"],
+                                            cache["h"]))
+        new_cache = {"conv": convs, "h": hs}
+    else:
+        def body(carry, scanned):
+            x, ak_all, av_all = carry
+            p, li, cx, cB, cC, h = scanned
+            hh = rms_norm(x, p["ln"], cfg.norm_eps)
+            out, (cx, cB, cC), h = mamba2_decode(hh, (cx, cB, cC), h, p, cfg)
+            x = x + out
+            if cfg.attn_every:
+                app = li // cfg.attn_every
+
+                def with_attn(args):
+                    x, ak_all, av_all = args
+                    akl = lax.dynamic_index_in_dim(ak_all, app, 0, False)
+                    avl = lax.dynamic_index_in_dim(av_all, app, 0, False)
+                    B = x.shape[0]
+                    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+                    hin = jnp.concatenate([x, x0], axis=-1)
+                    hn = rms_norm(hin, shared["ln"], cfg.norm_eps)
+                    q = jnp.einsum("bsd,de->bse", hn,
+                                   shared["wq"]).reshape(B, 1, H, Dh)
+                    k = jnp.einsum("bsd,de->bse", hn,
+                                   shared["wk"]).reshape(B, 1, KV, Dh)
+                    v = jnp.einsum("bsd,de->bse", hn,
+                                   shared["wv"]).reshape(B, 1, KV, Dh)
+                    cos, sin = rope_angles(pos[None], Dh, cfg.rope_theta)
+                    q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+                    akl = lax.dynamic_update_slice(akl, k.astype(akl.dtype),
+                                                   (0, pos, 0, 0))
+                    avl = lax.dynamic_update_slice(avl, v.astype(avl.dtype),
+                                                   (0, pos, 0, 0))
+                    o = decode_attention(q, akl, avl, pos, mesh=mesh)
+                    x = x + jnp.einsum("bse,ed->bsd",
+                                       o.reshape(B, 1, H * Dh), shared["wo"])
+                    ak_all = lax.dynamic_update_index_in_dim(
+                        ak_all, akl, app, 0)
+                    av_all = lax.dynamic_update_index_in_dim(
+                        av_all, avl, app, 0)
+                    return x, ak_all, av_all
+
+                x, ak_all, av_all = lax.cond(
+                    li % cfg.attn_every == cfg.attn_every - 1,
+                    with_attn, lambda a: a, (x, ak_all, av_all))
+            return (x, ak_all, av_all), (cx, cB, cC, h)
+
+        li = jnp.arange(cfg.n_layers)
+        (x, aks, avs), (cxs, cBs, cCs, hs) = lax.scan(
+            body, (x, cache["ak"], cache["av"]),
+            (layers, li, cache["conv_x"], cache["conv_B"], cache["conv_C"],
+             cache["h"]))
+        new_cache = {"conv_x": cxs, "conv_B": cBs, "conv_C": cCs, "h": hs,
+                     "ak": aks, "av": avs}
+
+    logits = unembed(x, params, cfg, flags, mesh)
+    return logits, new_cache

@@ -1,0 +1,226 @@
+"""Mamba-1 (falcon-mamba) and Mamba-2/SSD (zamba2) blocks.
+
+TPU adaptation (DESIGN.md §2.1):
+
+* Mamba-2 runs the *chunked SSD algorithm*: within a chunk the recurrence is
+  evaluated as masked matmuls (MXU work, like attention over the chunk), and
+  only chunk-boundary states are materialized.  The naive per-step scan
+  materializes (B,S,nh,hd,ds) f32 state tensors -- measured 123 TB of HBM
+  traffic per train step on zamba2; the SSD form reduces state traffic by
+  ~ds x log(chunk).
+
+* Mamba-1's decay is per-(channel, state) -- the SSD matmul trick does not
+  apply.  We keep a chunked associative scan (outer lax.scan carries the
+  boundary state, inner lax.associative_scan parallelizes within the chunk);
+  the Pallas `selective_scan` kernel (kernels/) is the fused TPU answer.
+
+* All projections are split per output segment (x/z/B/C/dt).  A fused
+  in_proj sliced along a 'model'-sharded axis forces GSPMD to reshard at
+  every split -- observed as a collective-permute storm in dry-run HLO.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import causal_conv1d, rms_norm
+
+
+def _conv_tail(x_raw, K):
+    """Last K-1 pre-conv inputs (decode conv state), left-padded if short."""
+    S = x_raw.shape[1]
+    tail = x_raw[:, max(0, S - (K - 1)):, :]
+    if S < K - 1:
+        tail = jnp.pad(tail, ((0, 0), (K - 1 - S, 0), (0, 0)))
+    return tail
+
+
+def _combine(left, right):
+    """Compose two affine recurrence elements (a, b): h -> a*h + b."""
+    al, bl = left
+    ar, br = right
+    return al * ar, bl * ar + br
+
+
+def _pad_chunks(x, n_chunks, chunk):
+    # (B, S, ...) -> (n_chunks, B, chunk, ...), zero-padding the tail.
+    B, S = x.shape[:2]
+    pad = n_chunks * chunk - S
+    if pad:
+        x = jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
+    return x.reshape(B, n_chunks, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+
+def _unpad_chunks(y, S):
+    y = y.swapaxes(0, 1)
+    y = y.reshape(y.shape[0], -1, *y.shape[3:])
+    return y[:, :S]
+
+
+# --------------------------------------------------------------------------
+# Mamba-1 (selective scan; falcon-mamba)
+# --------------------------------------------------------------------------
+
+def mamba1_block(x, p, cfg, *, scan_chunk: int = 256):
+    """x (B,S,d) -> (out (B,S,d), (conv_tail, h_last))."""
+    B, S, d = x.shape
+    di, ds, dtr = cfg.d_inner, cfg.ssm_state, cfg.ssm_dt_rank
+    xr_raw = jnp.einsum("bsd,de->bse", x, p["x_in"])
+    z = jnp.einsum("bsd,de->bse", x, p["z_in"])
+    conv_tail = _conv_tail(xr_raw, cfg.ssm_conv)
+    xr = jax.nn.silu(causal_conv1d(xr_raw, p["conv_w"], p["conv_b"]))
+    prm = jnp.einsum("bse,ef->bsf", xr, p["x_proj"])
+    dt_r = prm[..., :dtr]
+    Bc = prm[..., dtr:dtr + ds].astype(jnp.float32)
+    Cc = prm[..., dtr + ds:].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_r, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))                      # (B,S,di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # (di,ds)
+
+    chunk = min(scan_chunk, S)
+    n_chunks = -(-S // chunk)
+    xs = jax.tree.map(lambda t: _pad_chunks(t, n_chunks, chunk),
+                      (dt, Bc, Cc, xr.astype(jnp.float32)))
+
+    def body(h_prev, args):
+        dt_c, B_c, C_c, x_c = args
+        a = jnp.exp(dt_c[..., None] * A)                          # (B,c,di,ds)
+        b = (dt_c * x_c)[..., None] * B_c[:, :, None, :]
+        aa, hh = lax.associative_scan(_combine, (a, b), axis=1)
+        hh = hh + aa * h_prev[:, None]
+        y = jnp.einsum("bcds,bcs->bcd", hh, C_c)
+        return hh[:, -1], y
+
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    h_last, ys = lax.scan(body, h0, xs)
+    y = _unpad_chunks(ys, S).astype(x.dtype)
+    y = y + xr * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"]), (conv_tail, h_last)
+
+
+def mamba1_decode(x_t, conv_state, h, p, cfg):
+    """Single-token decode.  x_t (B,1,d); conv_state (B,K-1,di); h (B,di,ds)."""
+    xr = jnp.einsum("bsd,de->bse", x_t, p["x_in"])
+    z = jnp.einsum("bsd,de->bse", x_t, p["z_in"])
+    window = jnp.concatenate([conv_state, xr], axis=1)            # (B,K,di)
+    conv = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xr_t = jax.nn.silu(conv)[:, None, :]                          # (B,1,di)
+    prm = jnp.einsum("bse,ef->bsf", xr_t, p["x_proj"])[:, 0]
+    dtr, ds = cfg.ssm_dt_rank, cfg.ssm_state
+    dt_r, Bc, Cc = prm[:, :dtr], prm[:, dtr:dtr + ds], prm[:, dtr + ds:]
+    dt = jax.nn.softplus(
+        jnp.einsum("br,re->be", dt_r, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))                       # (B,di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt[..., None] * A)                                # (B,di,ds)
+    b = (dt * xr_t[:, 0].astype(jnp.float32))[..., None] \
+        * Bc.astype(jnp.float32)[:, None, :]
+    h = a * h + b
+    y = jnp.einsum("bds,bs->bd", h, Cc.astype(jnp.float32)).astype(x_t.dtype)
+    y = y + xr_t[:, 0] * p["D"].astype(x_t.dtype)
+    y = (y * jax.nn.silu(z[:, 0]))[:, None, :]
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, window[:, 1:], h
+
+
+# --------------------------------------------------------------------------
+# Mamba-2 / SSD (zamba2): chunked matmul form
+# --------------------------------------------------------------------------
+
+def mamba2_block(x, p, cfg, *, scan_chunk: int = 256):
+    """Chunked SSD.  Per chunk of length c (log-decay cum_t = sum dt*A):
+
+      y_t     = sum_{s<=t} exp(cum_t - cum_s) dt_s (C_t . B_s) x_s   (intra)
+              + exp(cum_t) C_t . h_0                                 (inter)
+      h_next  = exp(cum_c) h_0 + sum_s exp(cum_c - cum_s) dt_s x_s B_s^T
+    """
+    B, S, d = x.shape
+    di, ds, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    xr_raw = jnp.einsum("bsd,de->bse", x, p["x_in"])
+    z = jnp.einsum("bsd,de->bse", x, p["z_in"])
+    B_raw = jnp.einsum("bsd,de->bse", x, p["B_in"])
+    C_raw = jnp.einsum("bsd,de->bse", x, p["C_in"])
+    dt_raw = jnp.einsum("bsd,de->bse", x, p["dt_in"])
+    conv_tails = (_conv_tail(xr_raw, cfg.ssm_conv),
+                  _conv_tail(B_raw, cfg.ssm_conv),
+                  _conv_tail(C_raw, cfg.ssm_conv))
+    xr = jax.nn.silu(causal_conv1d(xr_raw, p["conv_x"], p["conv_xb"]))
+    Bc = jax.nn.silu(causal_conv1d(B_raw, p["conv_B"], p["conv_Bb"]))
+    Cc = jax.nn.silu(causal_conv1d(C_raw, p["conv_C"], p["conv_Cb"]))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))      # (B,S,nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                  # (nh,)
+    xh = xr.reshape(B, S, nh, hd)
+
+    chunk = min(scan_chunk, S)
+    n_chunks = -(-S // chunk)
+    xs = jax.tree.map(lambda t: _pad_chunks(t, n_chunks, chunk),
+                      (dt, Bc.astype(jnp.float32), Cc.astype(jnp.float32),
+                       xh.astype(jnp.float32)))
+
+    def body(h_prev, args):
+        dt_c, B_c, C_c, x_c = args                # (B,c,nh) (B,c,ds) (B,c,nh,hd)
+        la = dt_c * A                              # (B,c,nh), <= 0
+        cum = jnp.cumsum(la, axis=1)               # (B,c,nh)
+        # intra-chunk masked matmul
+        cb = jnp.einsum("btn,bsn->bts", C_c, B_c)  # (B,c,c)
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,t,s,nh)
+        tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+        m = cb[:, :, :, None] * decay * dt_c[:, None, :, :] \
+            * tri[None, :, :, None]                # (B,t,s,nh)
+        y_intra = jnp.einsum("btsh,bshd->bthd", m, x_c)
+        # inter-chunk contribution from the carried state
+        y_inter = jnp.einsum("btn,bhdn->bthd", C_c, h_prev) \
+            * jnp.exp(cum)[:, :, :, None]
+        # boundary state
+        w = jnp.exp(cum[:, -1:, :] - cum) * dt_c   # (B,c,nh)
+        h_delta = jnp.einsum("bshd,bsn,bsh->bhdn", x_c, B_c, w)
+        h_next = jnp.exp(cum[:, -1, :])[:, :, None, None] * h_prev + h_delta
+        return h_next, y_intra + y_inter
+
+    h0 = jnp.zeros((B, nh, hd, ds), jnp.float32)
+    h_last, ys = lax.scan(body, h0, xs)
+    y = _unpad_chunks(ys, S).astype(x.dtype)                       # (B,S,nh,hd)
+    y = y + xh * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["ln_inner"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"]), (conv_tails, h_last)
+
+
+def mamba2_decode(x_t, conv_states, h, p, cfg):
+    """x_t (B,1,d); conv_states (cx (B,K-1,di), cB, cC (B,K-1,ds));
+    h (B,nh,hd,ds)."""
+    di, ds, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    cx, cB, cC = conv_states
+    xr = jnp.einsum("bsd,de->bse", x_t, p["x_in"])
+    z = jnp.einsum("bsd,de->bse", x_t, p["z_in"])
+    B_raw = jnp.einsum("bsd,de->bse", x_t, p["B_in"])
+    C_raw = jnp.einsum("bsd,de->bse", x_t, p["C_in"])
+    dt_raw = jnp.einsum("bsd,de->bse", x_t, p["dt_in"])
+
+    def conv_step(state, new, w, b):
+        win = jnp.concatenate([state, new], axis=1)               # (B,K,C)
+        out = jnp.einsum("bkc,kc->bc", win, w) + b
+        return jax.nn.silu(out), win[:, 1:]
+
+    xr_t, cx = conv_step(cx, xr, p["conv_x"], p["conv_xb"])
+    B_t, cB = conv_step(cB, B_raw, p["conv_B"], p["conv_Bb"])
+    C_t, cC = conv_step(cC, C_raw, p["conv_C"], p["conv_Cb"])
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))       # (B,nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xhh = xr_t.reshape(-1, nh, hd).astype(jnp.float32)
+    a = jnp.exp(dt * A)[..., None, None]
+    b = (dt[..., None] * xhh)[..., None] \
+        * B_t.astype(jnp.float32)[:, None, None, :]
+    h = a * h + b
+    y = jnp.einsum("bhdn,bn->bhd", h, C_t.astype(jnp.float32)).astype(x_t.dtype)
+    y = y + xhh.astype(x_t.dtype) * p["D"].astype(x_t.dtype)[None, :, None]
+    y = y.reshape(-1, di)
+    y = rms_norm(y * jax.nn.silu(z[:, 0]), p["ln_inner"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"])[:, None, :]
+    return out, (cx, cB, cC), h

@@ -1,0 +1,5 @@
+from .rules import (RULES, constrain, resolve_spec, tree_shardings,
+                    tree_specs)
+
+__all__ = ["RULES", "resolve_spec", "tree_specs", "tree_shardings",
+           "constrain"]

@@ -1,0 +1,130 @@
+"""Logical-axis -> physical-mesh sharding rules.
+
+Every parameter / activation dimension carries a *logical* axis name
+("embed", "q_feat", "experts", ...).  A rule table maps each logical name to
+an ordered list of candidate mesh-axis tuples; the resolver picks the first
+candidate whose mesh axes (i) exist in the mesh, (ii) are not already used by
+another dimension of the same tensor, and (iii) evenly divide the dimension.
+This gives one declarative place where DP/FSDP/TP/EP decisions live and makes
+every (arch x mesh) combination well-defined even when head/expert counts do
+not divide the mesh axis (e.g. mixtral's 8 experts on a 16-wide model axis
+fall back to ffn sharding; qwen1.5's 20 heads fall back to head_dim).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Ordered candidates per logical axis.  () = explicit "replicate".
+# "fsdp" below expands to the data axis (and optionally the pod axis for
+# optimizer state -- see expand_fsdp).
+RULES: dict[str, list[tuple[str, ...]]] = {
+    # -- batch / tokens ----------------------------------------------------
+    "batch":     [("pod", "data"), ("data",)],
+    "seq":       [()],            # sequence replicated by default (SP is opt-in)
+    "seq_sp":    [("model",), ()],  # sequence-parallel saved activations
+    "seq_kv":    [("model",), ()],  # decode KV cache: split-KV (flash-decode)
+    # -- embedding / vocab -------------------------------------------------
+    "vocab":     [("model",), ()],
+    "embed":     [("fsdp",), ()],            # FSDP shard of the model dim
+    "embed_act": [()],                        # activation model-dim: replicated
+    # -- attention ---------------------------------------------------------
+    "q_feat":    [("model",), ()],            # flattened n_heads*head_dim
+    "kv_feat":   [("model",), ()],            # flattened n_kv*head_dim
+    "heads":     [("model",), ()],
+    "kv_heads":  [("model",), ()],
+    "head_dim":  [("model",), ()],
+    # -- mlp / moe ----------------------------------------------------------
+    "ffn":       [("model",), ()],
+    "experts":   [("model",), ()],
+    "moe_ff":    [("model",), ()],            # claimed only if experts failed
+    # -- ssm ----------------------------------------------------------------
+    "ssm_inner": [("model",), ()],
+    "ssm_feat":  [("model",), ()],            # fused in_proj output segments
+    "ssm_heads": [("model",), ()],
+    "ssm_state": [()],
+    "conv":      [()],
+    "dt_rank":   [()],
+    # -- misc ---------------------------------------------------------------
+    "layers":    [()],
+    None:        [()],
+}
+
+# Dims claimed earlier win mesh axes; tensor-parallel feature dims go first
+# so e.g. (embed, ffn) gives ffn the model axis and embed the fsdp axis.
+PRIORITY: dict[str, int] = {
+    "vocab": 0, "q_feat": 0, "kv_feat": 0, "heads": 0, "ffn": 0,
+    "experts": 0, "ssm_inner": 0, "ssm_feat": 0, "ssm_heads": 0,
+    "batch": 0, "seq_sp": 0, "seq_kv": 0,
+    "moe_ff": 1, "kv_heads": 1, "head_dim": 1,
+    "embed": 2, "embed_act": 2, "seq": 2,
+}
+
+
+def expand_fsdp(axes: tuple[str, ...], mesh: Mesh,
+                fsdp_axes: tuple[str, ...]) -> tuple[str, ...]:
+    out: list[str] = []
+    for a in axes:
+        if a == "fsdp":
+            out.extend(ax for ax in fsdp_axes if ax in mesh.shape)
+        else:
+            out.append(a)
+    return tuple(out)
+
+
+def resolve_spec(shape: Sequence[int], logical: Sequence[str | None],
+                 mesh: Mesh, *, fsdp_axes: tuple[str, ...] = ("data",),
+                 overrides: dict[str, list[tuple[str, ...]]] | None = None,
+                 ) -> P:
+    """Resolve one tensor's logical axes to a PartitionSpec on `mesh`."""
+    assert len(shape) == len(logical), (shape, logical)
+    rules = dict(RULES)
+    if overrides:
+        rules.update(overrides)
+    order = sorted(range(len(shape)),
+                   key=lambda i: (PRIORITY.get(logical[i], 3), i))
+    assignment: list[tuple[str, ...] | None] = [None] * len(shape)
+    taken: set[str] = set()
+    for i in order:
+        name = logical[i]
+        for cand in rules.get(name, [()]):
+            axes = expand_fsdp(cand, mesh, fsdp_axes)
+            if not axes:
+                assignment[i] = ()
+                break
+            if any(a not in mesh.shape or a in taken for a in axes):
+                continue
+            div = math.prod(mesh.shape[a] for a in axes)
+            if shape[i] % div == 0:
+                assignment[i] = axes
+                taken.update(axes)
+                break
+        if assignment[i] is None:
+            assignment[i] = ()
+    return P(*[a if len(a or ()) != 1 else a[0]
+               for a in [tuple(x) if x else None for x in assignment]])
+
+
+def tree_specs(abstract: dict, mesh: Mesh, *,
+               fsdp_axes: tuple[str, ...] = ("data",),
+               overrides=None):
+    """Map a pytree of ParamDesc -> pytree of PartitionSpec."""
+    return jax.tree.map(
+        lambda d: resolve_spec(d.shape, d.axes, mesh,
+                               fsdp_axes=fsdp_axes, overrides=overrides),
+        abstract, is_leaf=lambda x: hasattr(x, "axes"))
+
+
+def tree_shardings(abstract: dict, mesh: Mesh, **kw):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        tree_specs(abstract, mesh, **kw))
+
+
+def constrain(x, mesh: Mesh, *logical: str | None, **kw):
+    """with_sharding_constraint by logical axis names (inside jit)."""
+    spec = resolve_spec(x.shape, logical, mesh, **kw)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

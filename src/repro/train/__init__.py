@@ -1,0 +1,8 @@
+from .optim import (OptConfig, adamw_update, clip_by_global_norm,
+                    compress_grads, global_norm, init_opt_state, lr_at,
+                    opt_shapedtypes)
+from .steps import make_prefill_step, make_serve_step, make_train_step
+
+__all__ = ["OptConfig", "adamw_update", "init_opt_state", "opt_shapedtypes",
+           "lr_at", "global_norm", "clip_by_global_norm", "compress_grads",
+           "make_train_step", "make_prefill_step", "make_serve_step"]

@@ -1,0 +1,95 @@
+"""The training driver: data -> (dedup) -> sharded train steps ->
+checkpoint/resume, with straggler mitigation hooks."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from ..data.corpus import make_training_data
+from ..data.dedup import DedupFilter
+from ..models import RunFlags, init_params
+from ..models.config import ModelConfig
+from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from .optim import OptConfig, init_opt_state
+from .steps import make_train_step
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    batch_size: int = 8
+    seq_len: int = 128
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: str | None = None
+    microbatches: int = 1
+    dedup_theta: float = 0.0          # 0 = dedup off
+    n_docs: int = 2000
+    seed: int = 0
+    # straggler mitigation: max seconds to wait for a step before the
+    # controller flags the host (simulated on CPU; on a real pod this wires
+    # to the coordination-service barrier timeout)
+    step_timeout_s: float = 0.0
+
+
+@dataclass
+class Trainer:
+    cfg: ModelConfig
+    tcfg: TrainerConfig = field(default_factory=TrainerConfig)
+    ocfg: OptConfig = field(default_factory=lambda: OptConfig(
+        warmup_steps=10, decay_steps=1000))
+    flags: RunFlags = field(default_factory=lambda: RunFlags(
+        moe_mode="dense", remat_policy="none", q_chunk=0, scan_chunk=64))
+    mesh: object = None
+
+    def run(self, *, resume: bool = True) -> dict:
+        t = self.tcfg
+        dedup = DedupFilter(theta=t.dedup_theta) if t.dedup_theta else None
+        data, dstats = make_training_data(
+            t.n_docs, t.seq_len, vocab=self.cfg.vocab, seed=t.seed,
+            dedup=dedup)
+        params = init_params(self.cfg, jax.random.PRNGKey(t.seed))
+        opt = init_opt_state(params)
+        start = 0
+        if resume and t.ckpt_dir and (ls := latest_step(t.ckpt_dir)) is not None:
+            state, start = restore_checkpoint(t.ckpt_dir, ls)
+            params, opt = state["params"], state["opt"]
+            opt["step"] = jax.numpy.asarray(opt["step"], jax.numpy.int32)
+
+        step_fn = jax.jit(make_train_step(
+            self.cfg, self.ocfg, self.mesh, self.flags, t.microbatches),
+            donate_argnums=(0, 1))
+        it = data.batches(t.batch_size, seed=t.seed)
+        losses, slow_steps = [], 0
+        t0 = time.time()
+        for step in range(start, t.steps):
+            s0 = time.time()
+            batch = next(it)
+            params, opt, metrics = step_fn(params, opt, batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            if t.step_timeout_s and (time.time() - s0) > t.step_timeout_s:
+                slow_steps += 1          # straggler flag (see TrainerConfig)
+            if t.log_every and (step + 1) % t.log_every == 0:
+                print(f"step {step+1:5d} loss {loss:7.4f} "
+                      f"lr {float(metrics['lr']):.2e} "
+                      f"gnorm {float(metrics['grad_norm']):.2f}", flush=True)
+            if t.ckpt_dir and t.ckpt_every and (step + 1) % t.ckpt_every == 0:
+                save_checkpoint(t.ckpt_dir, step + 1,
+                                {"params": params, "opt": opt})
+        return {
+            "final_loss": losses[-1] if losses else float("nan"),
+            "first_loss": losses[0] if losses else float("nan"),
+            "losses": losses,
+            "steps": len(losses),
+            "wall_s": time.time() - t0,
+            "slow_steps": slow_steps,
+            "data": dstats,
+            "dedup": dedup.stats if dedup else None,
+            "params": params,
+            "opt": opt,
+        }

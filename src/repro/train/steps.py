@@ -1,0 +1,94 @@
+"""jit-able train / prefill / serve steps shared by the trainer, the serving
+path, and the multi-pod dry-run."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..models import RunFlags, decode_step, lm_loss, prefill
+from ..models.config import ModelConfig
+from .optim import OptConfig, adamw_update
+
+
+def _split_microbatches(batch, m: int):
+    def sp(x):
+        return x.reshape(m, x.shape[0] // m, *x.shape[1:])
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(cfg: ModelConfig, oc: OptConfig, mesh=None,
+                    flags: RunFlags = RunFlags(), microbatches: int = 1):
+    """(params, opt, batch) -> (params, opt, metrics).  Gradient accumulation
+    over `microbatches` runs as a lax.scan (activations live for one
+    microbatch at a time).
+
+    The accumulator is explicitly constrained to the parameter sharding:
+    unconstrained, GSPMD kept it replicated and emitted a full all-reduce
+    per microbatch (9.7 TB/device on llama3-405b train_4k); constrained, the
+    per-microbatch reduction is a reduce-scatter into the FSDP shard
+    (EXPERIMENTS.md §Perf cell C)."""
+
+    grad_shardings = None
+    if mesh is not None:
+        from jax.sharding import NamedSharding
+        from ..models.params import abstract_params
+        from ..sharding import tree_specs
+        grad_shardings = jax.tree.map(
+            lambda s: NamedSharding(mesh, s),
+            tree_specs(abstract_params(cfg), mesh))
+
+    def _constrain_grads(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(jax.lax.with_sharding_constraint, g,
+                            grad_shardings)
+
+    def loss_fn(params, mb):
+        return lm_loss(params, cfg, mb, mesh, flags)
+
+    def train_step(params, opt, batch):
+        if microbatches <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = _constrain_grads(grads)
+        else:
+            mbs = _split_microbatches(batch, microbatches)
+
+            def accum(carry, mb):
+                loss_sum, gsum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (loss_sum + l, _constrain_grads(gsum)), None
+
+            zeros = _constrain_grads(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (loss_sum, grads), _ = jax.lax.scan(
+                accum, (jnp.zeros((), jnp.float32), zeros), mbs)
+            loss = loss_sum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        params, opt, metrics = adamw_update(params, grads, opt, oc)
+        metrics["loss"] = loss
+        return params, opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None,
+                      flags: RunFlags = RunFlags(),
+                      max_seq: int | None = None):
+    def prefill_step(params, batch):
+        return prefill(params, cfg, tokens=batch.get("tokens"),
+                       embeds=batch.get("embeds"), max_seq=max_seq,
+                       mesh=mesh, flags=flags)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, mesh=None,
+                    flags: RunFlags = RunFlags()):
+    def serve_step(params, cache, tokens, pos):
+        return decode_step(params, cache, tokens, pos, cfg, mesh=mesh,
+                           flags=flags)
+    return serve_step

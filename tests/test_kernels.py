@@ -1,0 +1,137 @@
+"""Pallas kernels (interpret=True) vs pure-jnp oracles: shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.kernels import ops
+from repro.kernels.icws_hash import icws_hash_grid, icws_sketch
+from repro.kernels.minhash_sketch import minhash_sketch
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.selective_scan import selective_scan_pallas
+from repro.kernels import ref
+
+
+def _icws_inputs(rng, K, T):
+    r = jnp.asarray(rng.gamma(2.0, 1.0, (K, T)), jnp.float32)
+    c = jnp.asarray(rng.gamma(2.0, 1.0, (K, T)), jnp.float32)
+    b = jnp.asarray(rng.uniform(0, 1, (K, T)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.1, 5.0, (T,)), jnp.float32)
+    return r, c, b, w
+
+
+@pytest.mark.parametrize("K,T", [(8, 128), (16, 256), (5, 100), (64, 391),
+                                 (1, 1), (9, 129)])
+def test_icws_hash_grid_matches_ref(K, T):
+    rng = np.random.default_rng(K * 1000 + T)
+    r, c, b, w = _icws_inputs(rng, K, T)
+    kint, a = icws_hash_grid(r, c, b, w, interpret=True)
+    kint_r, a_r = ref.icws_hash_grid_ref(r, c, b, w)
+    assert (kint == kint_r).all()
+    assert_allclose(np.asarray(a), np.asarray(a_r), rtol=1e-6)
+
+
+@pytest.mark.parametrize("K,T", [(8, 128), (16, 300), (3, 17), (64, 1024)])
+def test_icws_sketch_matches_ref(K, T):
+    rng = np.random.default_rng(K + T)
+    r, c, b, w = _icws_inputs(rng, K, T)
+    mina, argt, kint = icws_sketch(r, c, b, w, interpret=True)
+    mina_r, argt_r, kint_r = ref.icws_sketch_ref(r, c, b, w)
+    # rtol 2e-5: XLA may fma-contract the a-value expression differently in
+    # the two programs; identity fields must still agree exactly.
+    assert_allclose(np.asarray(mina), np.asarray(mina_r), rtol=2e-5)
+    assert (argt == argt_r).all()
+    assert (kint == kint_r).all()
+
+
+def test_icws_sketch_masked_tokens():
+    rng = np.random.default_rng(0)
+    r, c, b, w = _icws_inputs(rng, 8, 64)
+    w = w.at[32:].set(0.0)   # masked tail must never win the argmin
+    _, argt, _ = icws_sketch(r, c, b, w, interpret=True)
+    assert (np.asarray(argt) < 32).all()
+
+
+@pytest.mark.parametrize("B,N,K", [(2, 128, 8), (3, 200, 16), (1, 64, 64),
+                                   (4, 1000, 7)])
+def test_minhash_sketch_matches_ref(B, N, K):
+    rng = np.random.default_rng(B * N + K)
+    tokens = rng.integers(0, 5000, (B, N)).astype(np.int32)
+    tokens[:, N - N // 4:] = -1          # padding tail
+    occ = rng.integers(1, 20, (B, N)).astype(np.int32)
+    seeds = rng.integers(1, 2**32 - 1, (K,), dtype=np.uint32)
+    out = minhash_sketch(jnp.asarray(tokens), jnp.asarray(occ),
+                         jnp.asarray(seeds), interpret=True)
+    exp = ref.minhash_sketch_ref(jnp.asarray(tokens), jnp.asarray(occ),
+                                 jnp.asarray(seeds))
+    assert (np.asarray(out) == np.asarray(exp)).all()
+
+
+@pytest.mark.parametrize("B,H,KV,D,S", [(2, 8, 8, 128, 256),
+                                        (1, 8, 2, 128, 300),
+                                        (2, 4, 1, 64, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_matches_ref(B, H, KV, D, S, dtype):
+    rng = np.random.default_rng(B + H + S)
+    q = jnp.asarray(rng.normal(size=(B, H, D)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, D)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, D)), dtype)
+    pos = jnp.int32(S - 7)
+    out = decode_attention_pallas(q, k, v, pos, interpret=True)
+    exp = ref.decode_attention_ref(q, k, v, pos)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    assert_allclose(np.asarray(out, np.float32), np.asarray(exp, np.float32),
+                    rtol=tol, atol=tol)
+
+
+def test_decode_attention_respects_pos_mask():
+    # keys beyond pos must not influence the output
+    rng = np.random.default_rng(5)
+    B, H, D, S = 1, 4, 128, 256
+    q = jnp.asarray(rng.normal(size=(B, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    pos = jnp.int32(100)
+    out1 = decode_attention_pallas(q, k, v, pos, interpret=True)
+    k2 = k.at[:, 101:].set(99.0)
+    v2 = v.at[:, 101:].set(-99.0)
+    out2 = decode_attention_pallas(q, k2, v2, pos, interpret=True)
+    assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6)
+
+
+@pytest.mark.parametrize("B,S,di,ds", [(2, 64, 128, 16), (1, 100, 200, 16),
+                                       (2, 64, 128, 8)])
+def test_selective_scan_matches_ref(B, S, di, ds):
+    rng = np.random.default_rng(di + S)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (B, S, di)), jnp.float32)
+    Bc = jnp.asarray(rng.normal(size=(B, S, ds)), jnp.float32)
+    Cc = jnp.asarray(rng.normal(size=(B, S, ds)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(B, S, di)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 4.0, (di, ds)), jnp.float32)
+    D = jnp.asarray(rng.normal(size=(di,)), jnp.float32)
+    y, hf = selective_scan_pallas(dt, Bc, Cc, x, A, D, interpret=True)
+    y_r, hf_r = ref.selective_scan_ref(dt, Bc, Cc, x, A, D)
+    assert_allclose(np.asarray(y), np.asarray(y_r), rtol=2e-5, atol=2e-5)
+    assert_allclose(np.asarray(hf), np.asarray(hf_r), rtol=2e-5, atol=2e-5)
+
+
+def test_cws_sketch_agrees_with_core_index_scheme():
+    """The fused kernel sketch must equal the host WeightedScheme sketch
+    (same stateless hash family) -- ties the kernel to the paper index."""
+    from repro.core import WeightedScheme
+    from repro.core.weights import WeightFn
+    rng = np.random.default_rng(11)
+    toks = np.unique(rng.integers(0, 10_000, 50)).astype(np.int64)
+    freqs = rng.integers(1, 30, toks.shape[0]).astype(np.int64)
+    scheme = WeightedScheme(weight=WeightFn(tf="raw", idf="unary"),
+                            seed=7, k=16)
+    w = scheme.weight(toks, freqs)
+    t_star, kint, _ = ops.cws_sketch(7, 16, toks, w, use_pallas=True,
+                                     interpret=True)
+    # host-side truth, hash function by hash function
+    for i, h in enumerate(scheme.hashers):
+        tt, kk, _a = h.min_hash(toks, np.asarray(w))
+        assert int(t_star[i]) == tt
+        assert int(kint[i]) == kk

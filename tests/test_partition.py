@@ -1,0 +1,108 @@
+"""Oracle-equivalence tests (Theorem 1): every partitioning method produces a
+disjoint, covering, value-correct partition, for multiset and ICWS hashing,
+across text shapes / alphabet sizes / weight functions."""
+
+import numpy as np
+import pytest
+
+from repro.core import (ICWS, UniversalHash, WeightFn, allalign_partition,
+                        generate_keys_icws, generate_keys_multiset,
+                        minhash_gid_grid_icws, minhash_gid_grid_multiset,
+                        monotonic_partition, validate_partition)
+
+METHODS = ["mono_all", "mono_active", "allalign"]
+
+
+def _build(keys, method):
+    if method == "allalign":
+        return allalign_partition(keys)
+    return monotonic_partition(keys)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("alpha", [1, 2, 5, 50])
+@pytest.mark.parametrize("n", [1, 2, 7, 40])
+@pytest.mark.parametrize("method", METHODS)
+def test_multiset_oracle(seed, alpha, n, method):
+    rng = np.random.default_rng(seed * 1000 + alpha * 7 + n)
+    tokens = rng.integers(0, alpha, size=n).astype(np.int64)
+    h = UniversalHash.from_seed(seed + 99, 1)[0]
+    active = method == "mono_active"
+    keys = generate_keys_multiset(tokens, h, active=active)
+    part = _build(keys, method)
+    grid, table = minhash_gid_grid_multiset(tokens, h)
+    validate_partition(part, grid, table)
+
+
+@pytest.mark.parametrize("tf", ["binary", "raw", "log", "squared"])
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("seed", [0, 3])
+def test_icws_oracle(tf, method, seed):
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(0, 6, size=50).astype(np.int64)
+    icws = ICWS.from_seed(seed + 5, 1)[0]
+    w = WeightFn(tf=tf)
+    active = method == "mono_active"
+    keys = generate_keys_icws(tokens, icws, w, active=active)
+    part = _build(keys, method)
+    grid, table = minhash_gid_grid_icws(tokens, icws, w)
+    validate_partition(part, grid, table)
+
+
+@pytest.mark.parametrize("tf", ["binary", "raw", "log", "squared"])
+def test_mono_all_equals_mono_active_icws(tf):
+    """§6.1: the active optimization does not change the output windows."""
+    rng = np.random.default_rng(42)
+    tokens = rng.integers(0, 5, size=70).astype(np.int64)
+    icws = ICWS.from_seed(1, 1)[0]
+    w = WeightFn(tf=tf)
+    pa = monotonic_partition(generate_keys_icws(tokens, icws, w, active=False))
+    px = monotonic_partition(generate_keys_icws(tokens, icws, w, active=True))
+    assert len(pa) == len(px)
+    for f in ("a", "b", "c", "d"):
+        assert np.array_equal(getattr(pa, f), getattr(px, f))
+    assert [pa.gid_key[int(g)] for g in pa.gid] == \
+           [px.gid_key[int(g)] for g in px.gid]
+
+
+def test_mono_all_equals_mono_active_multiset():
+    rng = np.random.default_rng(7)
+    tokens = rng.integers(0, 3, size=90).astype(np.int64)
+    h = UniversalHash.from_seed(11, 1)[0]
+    pa = monotonic_partition(generate_keys_multiset(tokens, h, active=False))
+    px = monotonic_partition(generate_keys_multiset(tokens, h, active=True))
+    assert len(pa) == len(px)
+    for f in ("a", "b", "c", "d"):
+        assert np.array_equal(getattr(pa, f), getattr(px, f))
+
+
+def test_idf_weighted_partition_oracle():
+    """TF-IDF (standard idf) with corpus stats still satisfies AoW."""
+    rng = np.random.default_rng(0)
+    tokens = rng.integers(0, 10, size=40).astype(np.int64)
+    doc_freq = {t: int(rng.integers(1, 50)) for t in range(10)}
+    w = WeightFn(tf="raw", idf="smooth", n_docs=100, doc_freq=doc_freq)
+    icws = ICWS.from_seed(2, 1)[0]
+    keys = generate_keys_icws(tokens, icws, w, active=True)
+    part = monotonic_partition(keys)
+    grid, table = minhash_gid_grid_icws(tokens, icws, w)
+    validate_partition(part, grid, table)
+
+
+def test_worst_case_all_same_token():
+    """Appendix B's hard instance: every token identical."""
+    n = 64
+    tokens = np.zeros(n, dtype=np.int64)
+    h = UniversalHash.from_seed(17, 1)[0]
+    keys = generate_keys_multiset(tokens, h, active=True)
+    part = monotonic_partition(keys)
+    grid, table = minhash_gid_grid_multiset(tokens, h)
+    validate_partition(part, grid, table)
+
+
+def test_single_token_text():
+    tokens = np.array([5], dtype=np.int64)
+    h = UniversalHash.from_seed(0, 1)[0]
+    part = monotonic_partition(generate_keys_multiset(tokens, h, active=True))
+    assert len(part) == 1
+    assert (part.a[0], part.b[0], part.c[0], part.d[0]) == (0, 0, 0, 0)

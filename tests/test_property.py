@@ -1,0 +1,121 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (ICWS, MixHash, UniversalHash, WeightFn,
+                        allalign_partition, generate_keys_icws,
+                        generate_keys_multiset, jaccard_multiset,
+                        minhash_gid_grid_icws, minhash_gid_grid_multiset,
+                        monotonic_partition, validate_partition)
+from repro.core.hashing import MERSENNE61, mod_m61, mulmod_m61
+
+texts = st.lists(st.integers(min_value=0, max_value=6), min_size=1,
+                 max_size=36)
+
+
+@settings(max_examples=60, deadline=None)
+@given(tokens=texts, seed=st.integers(min_value=0, max_value=2**31))
+def test_partition_invariants_multiset(tokens, seed):
+    tokens = np.asarray(tokens, dtype=np.int64)
+    h = UniversalHash.from_seed(seed, 1)[0]
+    grid, table = minhash_gid_grid_multiset(tokens, h)
+    for active in (False, True):
+        keys = generate_keys_multiset(tokens, h, active=active)
+        validate_partition(monotonic_partition(keys), grid, table)
+    validate_partition(
+        allalign_partition(generate_keys_multiset(tokens, h, active=False)),
+        grid, table)
+
+
+@settings(max_examples=30, deadline=None)
+@given(tokens=texts, seed=st.integers(min_value=0, max_value=2**31),
+       tf=st.sampled_from(["binary", "raw", "log", "squared"]))
+def test_partition_invariants_icws(tokens, seed, tf):
+    tokens = np.asarray(tokens, dtype=np.int64)
+    icws = ICWS.from_seed(seed, 1)[0]
+    w = WeightFn(tf=tf)
+    grid, table = minhash_gid_grid_icws(tokens, icws, w)
+    keys = generate_keys_icws(tokens, icws, w, active=True)
+    validate_partition(monotonic_partition(keys), grid, table)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31),
+       t=st.integers(min_value=0, max_value=2**31),
+       fmax=st.integers(min_value=1, max_value=40),
+       tf=st.sampled_from(["binary", "raw", "log", "squared"]))
+def test_lemma_12_icws_monotone_in_frequency(seed, t, fmax, tf):
+    """Lemma 12: h(t,1) >= h(t,2) >= ... under AoW (comparing by a)."""
+    icws = ICWS.from_seed(seed, 1)[0]
+    w = WeightFn(tf=tf)
+    a = icws.a_value(np.full(fmax, t, dtype=np.int64), w.grid(t, fmax))
+    assert np.all(np.diff(a) <= 0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=st.integers(min_value=0, max_value=2**61 - 2),
+       b=st.integers(min_value=0, max_value=2**61 - 2))
+def test_mersenne61_mulmod_exact(a, b):
+    got = int(mulmod_m61(np.uint64(a), np.uint64(b)))
+    assert got == (a * b) % int(MERSENNE61)
+
+
+@settings(max_examples=40, deadline=None)
+@given(x=st.integers(min_value=0, max_value=2**64 - 1))
+def test_mersenne61_mod_exact(x):
+    assert int(mod_m61(np.uint64(x))) == x % int(MERSENNE61)
+
+
+@settings(max_examples=20, deadline=None)
+@given(tokens=texts, seed=st.integers(min_value=0, max_value=2**31))
+def test_minhash_collision_prob_is_jaccard_smoke(tokens, seed):
+    """Pr[h(T)=h(S)] = J(T,S) in expectation — smoke-level: identical texts
+    always share min-hash; disjoint token sets never do."""
+    tokens = np.asarray(tokens, dtype=np.int64)
+    h = MixHash.from_seed(seed, 1)[0]
+    grid, table = minhash_gid_grid_multiset(tokens, h)
+    n = len(tokens)
+    assert grid[0, n - 1] >= 0
+    # identical: trivially equal. disjointness via shifted alphabet:
+    shifted = tokens + 1000
+    grid2, table2 = minhash_gid_grid_multiset(shifted, h)
+    assert table[grid[0, n - 1]] != table2[grid2[0, n - 1]]
+
+
+def test_estimator_unbiased_multiset():
+    """Ĵ (Eq. 2) within 4σ of J for a large sketch."""
+    rng = np.random.default_rng(0)
+    from repro.core import MultisetScheme
+    A = rng.integers(0, 30, size=120)
+    B = np.concatenate([A[:80], rng.integers(0, 30, size=40)])
+    sch = MultisetScheme(seed=1, k=1024)
+    true_j = jaccard_multiset(A, B)
+    est = np.mean([x == y for x, y in zip(sch.sketch(A), sch.sketch(B))])
+    sigma = np.sqrt(true_j * (1 - true_j) / 1024)
+    assert abs(est - true_j) < 4 * sigma + 1e-9
+
+
+def test_estimator_unbiased_weighted():
+    rng = np.random.default_rng(1)
+    from repro.core import WeightedScheme, jaccard_weighted
+    w = WeightFn(tf="log")
+    A = rng.integers(0, 30, size=120)
+    B = np.concatenate([A[:80], rng.integers(0, 30, size=40)])
+    sch = WeightedScheme(weight=w, seed=2, k=1024)
+    true_j = jaccard_weighted(A, B, w)
+    est = np.mean([x == y for x, y in zip(sch.sketch(A), sch.sketch(B))])
+    sigma = np.sqrt(true_j * (1 - true_j) / 1024)
+    assert abs(est - true_j) < 4 * sigma + 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(tokens=texts, seed=st.integers(min_value=0, max_value=2**31))
+def test_windows_bounded_by_twice_active_keys(tokens, seed):
+    """Lemma 10: |P| <= 2|X(T)|."""
+    tokens = np.asarray(tokens, dtype=np.int64)
+    h = UniversalHash.from_seed(seed, 1)[0]
+    keys = generate_keys_multiset(tokens, h, active=True)
+    part = monotonic_partition(keys)
+    assert len(part) <= 2 * len(keys)

@@ -1,0 +1,151 @@
+"""Hypothesis property tests on system invariants (beyond the paper core):
+MoE dispatch equivalence, SSD-vs-sequential SSM equivalence, sharding-rule
+totality, attention masking invariants, and tokenizer stability."""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import (attention, moe_dense, moe_scatter,
+                                 repeat_kv)
+from repro.sharding import resolve_spec
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+AXIS_NAMES = st.sampled_from(["batch", "seq", "vocab", "embed", "q_feat",
+                              "kv_feat", "heads", "kv_heads", "head_dim",
+                              "ffn", "experts", "moe_ff", "ssm_inner",
+                              "ssm_state", "conv", "layers", None])
+
+
+@settings(max_examples=120, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 512), AXIS_NAMES),
+                min_size=1, max_size=5),
+       st.sampled_from([{"data": 16, "model": 16},
+                        {"pod": 2, "data": 16, "model": 16},
+                        {"data": 4, "model": 2},
+                        {"data": 1, "model": 1}]))
+def test_resolve_spec_total_and_divisible(dims, mesh_shape):
+    """resolve_spec never fails, never over-shards (divisibility), and
+    never assigns one mesh axis to two tensor dims."""
+    shape = tuple(d for d, _ in dims)
+    logical = tuple(a for _, a in dims)
+    spec = resolve_spec(shape, logical, FakeMesh(mesh_shape))
+    used = []
+    for dim, entry in zip(shape, spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        prod = math.prod(mesh_shape[a] for a in axes)
+        assert dim % prod == 0, (shape, logical, spec)
+        used.extend(axes)
+    assert len(used) == len(set(used)), spec
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 8), st.integers(2, 6),
+       st.integers(1, 3), st.data())
+def test_moe_scatter_equals_dense(B, S, E, k, data):
+    k = min(k, E)
+    d, f = 8, 16
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(B, S, d)), jnp.float32)
+    wr = jnp.asarray(rng.normal(size=(d, E)), jnp.float32)
+    w1 = jnp.asarray(rng.normal(size=(E, d, f)) * 0.2, jnp.float32)
+    w3 = jnp.asarray(rng.normal(size=(E, d, f)) * 0.2, jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(E, f, d)) * 0.2, jnp.float32)
+    dense = moe_dense(x, wr, w1, w3, w2, k)
+    scatter = moe_scatter(x, wr, w1, w3, w2, k, capacity_factor=float(E))
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(scatter),
+                               rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 2), st.integers(3, 24), st.integers(1, 4),
+       st.integers(0, 2**31 - 1))
+def test_ssd_equals_sequential_scan(B, S, nh, seed):
+    """Chunked SSD (matmul form) == per-step recurrence, any chunk size."""
+    from repro.models.ssm import mamba2_block
+    from repro.configs import get_config
+    cfg = dataclasses.replace(
+        get_config("zamba2-1.2b").reduced(), compute_dtype="float32")
+    from repro.models import init_params
+    params = init_params(cfg, jax.random.PRNGKey(seed % 1000))
+    p = jax.tree.map(lambda a: a[0], params["layers"])
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)) * 0.1, jnp.float32)
+    y_big, (ct_b, h_b) = mamba2_block(x, p, cfg, scan_chunk=max(S, 4))
+    y_small, (ct_s, h_s) = mamba2_block(x, p, cfg, scan_chunk=3)
+    np.testing.assert_allclose(np.asarray(y_big), np.asarray(y_small),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(h_b), np.asarray(h_s),
+                               rtol=2e-4, atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 16), st.integers(1, 4), st.integers(0, 1000))
+def test_causal_attention_ignores_future(S, H, seed):
+    """Changing tokens after position t never changes output at t."""
+    D = 8
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, S, H, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, S, H, D)), jnp.float32)
+    t = S // 2
+    out1 = attention(q, k, v)
+    k2 = k.at[:, t + 1:].add(3.0)
+    v2 = v.at[:, t + 1:].add(-5.0)
+    out2 = attention(q, k2, v2)
+    np.testing.assert_allclose(np.asarray(out1[:, :t + 1]),
+                               np.asarray(out2[:, :t + 1]),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 8), st.integers(1, 64))
+def test_repeat_kv_preserves_heads(KV, G, D):
+    H = KV * G
+    x = jnp.arange(2 * 3 * KV * D, dtype=jnp.float32).reshape(2, 3, KV, D)
+    r = repeat_kv(x, H)
+    assert r.shape == (2, 3, H, D)
+    for h in range(H):
+        np.testing.assert_array_equal(np.asarray(r[:, :, h]),
+                                      np.asarray(x[:, :, h // G]))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.text(min_size=0, max_size=120))
+def test_tokenizer_total_and_stable(text):
+    from repro.data import HashWordTokenizer
+    tok = HashWordTokenizer(vocab=512)
+    a = tok.encode(text)
+    b = tok.encode(text)
+    np.testing.assert_array_equal(a, b)
+    assert ((a >= 4) & (a < 512)).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 30), min_size=1, max_size=40),
+       st.integers(0, 100))
+def test_sketch_collision_estimates_multiset_jaccard(tok_list, seed):
+    """E[sketch agreement] == multiset Jaccard (binomial CI, k=48)."""
+    from repro.core import MultisetScheme
+    from repro.core.oracle import jaccard_multiset
+    a = np.asarray(tok_list, np.int64)
+    b = np.concatenate([a[: max(1, len(a) // 2)],
+                        np.asarray([31, 32, 33], np.int64)])
+    scheme = MultisetScheme(seed=seed, k=48)
+    sa, sb = scheme.sketch(a), scheme.sketch(b)
+    est = np.mean([x == y for x, y in zip(sa, sb)])
+    true = jaccard_multiset(a, b)
+    # 4-sigma binomial bound
+    assert abs(est - true) <= 4 * math.sqrt(true * (1 - true) / 48) + 1e-9

@@ -1,0 +1,92 @@
+"""End-to-end query correctness: results == brute-force Definition 1."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (AlignmentIndex, MultisetScheme, WeightFn,
+                        WeightedScheme, query)
+
+
+def brute_force_results(scheme, data_texts, q_tokens, theta):
+    """All (tid, i, j) with estimated Jaccard >= theta, by definition."""
+    k = scheme.k
+    m = math.ceil(k * theta)
+    sq = scheme.sketch(q_tokens)
+    out = set()
+    for tid, tokens in enumerate(data_texts):
+        n = len(tokens)
+        for i in range(n):
+            for j in range(i, n):
+                ss = scheme.sketch(tokens[i:j + 1])
+                matches = sum(1 for x, y in zip(sq, ss) if x == y)
+                if matches >= m:
+                    out.add((tid, i, j))
+    return out
+
+
+def index_results(index, q_tokens, theta):
+    out = set()
+    for r in query(index, q_tokens, theta):
+        for (i, j) in r.cells():
+            out.add((r.text_id, i, j))
+    return out
+
+
+@pytest.mark.parametrize("method", ["mono_all", "mono_active", "allalign"])
+def test_query_equals_bruteforce_multiset(method):
+    rng = np.random.default_rng(0)
+    data = [rng.integers(0, 8, size=24).astype(np.int64) for _ in range(3)]
+    q = data[0][5:15].copy()
+    scheme = MultisetScheme(seed=13, k=8)
+    index = AlignmentIndex(scheme=scheme, method=method).build(data)
+    for theta in (0.3, 0.6, 0.9):
+        assert index_results(index, q, theta) == \
+            brute_force_results(scheme, data, q, theta), (method, theta)
+
+
+@pytest.mark.parametrize("tf", ["raw", "log"])
+def test_query_equals_bruteforce_weighted(tf):
+    rng = np.random.default_rng(4)
+    data = [rng.integers(0, 6, size=20).astype(np.int64) for _ in range(2)]
+    q = data[1][3:13].copy()
+    scheme = WeightedScheme(weight=WeightFn(tf=tf), seed=21, k=8)
+    index = AlignmentIndex(scheme=scheme, method="mono_active").build(data)
+    for theta in (0.4, 0.75):
+        assert index_results(index, q, theta) == \
+            brute_force_results(scheme, data, q, theta), (tf, theta)
+
+
+def test_exact_duplicate_found_at_theta_1():
+    rng = np.random.default_rng(2)
+    doc = rng.integers(0, 50, size=40).astype(np.int64)
+    data = [np.concatenate([rng.integers(0, 50, size=10), doc,
+                            rng.integers(0, 50, size=10)])]
+    scheme = MultisetScheme(seed=3, k=16)
+    index = AlignmentIndex(scheme=scheme, method="mono_active").build(data)
+    res = index_results(index, doc, theta=1.0)
+    assert (0, 10, 49) in res       # the exact copy is always retrieved
+
+
+def test_disjoint_query_returns_nothing():
+    rng = np.random.default_rng(6)
+    data = [rng.integers(0, 20, size=30).astype(np.int64)]
+    q = rng.integers(100, 120, size=10).astype(np.int64)
+    scheme = MultisetScheme(seed=7, k=16)
+    index = AlignmentIndex(scheme=scheme, method="mono_active").build(data)
+    assert index_results(index, q, theta=0.2) == set()
+
+
+def test_index_state_dict_roundtrip():
+    rng = np.random.default_rng(8)
+    data = [rng.integers(0, 10, size=25).astype(np.int64) for _ in range(2)]
+    scheme = MultisetScheme(seed=9, k=8)
+    index = AlignmentIndex(scheme=scheme, method="mono_active").build(data)
+    state = index.state_dict()
+    index2 = AlignmentIndex(scheme=MultisetScheme(seed=9, k=8))
+    index2.load_state_dict(state)
+    q = data[0][2:18]
+    a = index_results(index, q, 0.5)
+    b = index_results(index2, q, 0.5)
+    assert a == b and a

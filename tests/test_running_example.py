@@ -1,0 +1,114 @@
+"""Exact reproduction of the paper's running example (Fig. 1, Examples 1-9).
+
+T = ABABAABBCC with the toy hash function from the Fig. 1 caption.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (allalign_partition, generate_keys_multiset,
+                        jaccard_multiset, minhash_gid_grid_multiset,
+                        monotonic_partition, validate_partition)
+
+HMAP = {(0, 1): 2, (0, 2): 5, (0, 3): 8, (0, 4): 12,
+        (1, 1): 9, (1, 2): 4, (1, 3): 16, (1, 4): 1,
+        (2, 1): 3, (2, 2): 6}
+
+
+class ToyHash:
+    def __call__(self, t, x):
+        t = np.atleast_1d(np.asarray(t))
+        x = np.atleast_1d(np.asarray(x))
+        return np.array([HMAP[(int(a), int(b))] for a, b in zip(t, x)],
+                        dtype=np.uint64)
+
+
+@pytest.fixture
+def example():
+    tok = {"A": 0, "B": 1, "C": 2}
+    tokens = np.array([tok[ch] for ch in "ABABAABBCC"], dtype=np.int64)
+    return tokens, ToyHash()
+
+
+def test_example_1_multiset_jaccard():
+    # T = ABBC, S = BCD -> J = 2/5
+    t = np.array([0, 1, 1, 2])
+    s = np.array([1, 2, 3])
+    assert jaccard_multiset(t, s) == pytest.approx(2 / 5)
+
+
+def test_example_2_minhash_of_T(example):
+    tokens, h = example
+    grid, table = minhash_gid_grid_multiset(tokens, h)
+    assert table[grid[0, 9]] == 1          # h(T) = h(B,4) = 1
+    assert table[grid[2, 5]] == 2          # h(T[3,6]) = 2 (Example 6)
+
+
+def test_example_7_key_counts(example):
+    tokens, h = example
+    keys_all = generate_keys_multiset(tokens, h, active=False)
+    keys_act = generate_keys_multiset(tokens, h, active=True)
+    assert len(keys_all) == 23             # Example 7: 23 keys in K(T)
+    assert len(keys_act) == 14             # Fig 1(e): 14 active keys
+
+
+def test_example_7_key_1_3_hash(example):
+    tokens, h = example
+    keys = generate_keys_multiset(tokens, h, active=False)
+    # key (1,3) 1-indexed -> (0,2): hash h(A, f(A, T[1,3])) = h(A,2) = 5
+    mask = (keys.p == 0) & (keys.q == 2)
+    assert mask.sum() == 1
+    gid = int(keys.gid[np.flatnonzero(mask)[0]])
+    assert keys.gid_key[gid] == 5
+
+
+def test_example_9_monotonic_partitioning(example):
+    tokens, h = example
+    keys = generate_keys_multiset(tokens, h, active=False)
+    # first visited key is (2,8) (1-indexed) with hash value 1
+    assert (int(keys.p[0]) + 1, int(keys.q[0]) + 1) == (2, 8)
+    part = monotonic_partition(keys)
+    assert len(part) == 13                 # Fig 1(b): 13 compact windows
+    # first window is <T, h, 1, 1, 2, 8, 10> (1-indexed)
+    first = (int(part.a[0]) + 1, int(part.b[0]) + 1,
+             int(part.c[0]) + 1, int(part.d[0]) + 1)
+    assert first == (1, 2, 8, 10)
+    assert part.gid_key[int(part.gid[0])] == 1
+
+
+def test_example_4_compact_window_covers_hash(example):
+    tokens, h = example
+    grid, table = minhash_gid_grid_multiset(tokens, h)
+    # <T,h,1,1,2,8,10>: all (i,j) in [1,2]x[8,10] (1-indexed) have minhash 1
+    assert all(table[grid[i, j]] == 1 for i in range(0, 2) for j in range(7, 10))
+    # <T,h,2,4,5,5,10>: minhash 2
+    assert all(table[grid[i, j]] == 2 for i in range(3, 5) for j in range(4, 10))
+
+
+def test_partitions_validate_and_agree(example):
+    tokens, h = example
+    grid, table = minhash_gid_grid_multiset(tokens, h)
+    k_all = generate_keys_multiset(tokens, h, active=False)
+    k_act = generate_keys_multiset(tokens, h, active=True)
+    p_all = monotonic_partition(k_all)
+    p_act = monotonic_partition(k_act)
+    validate_partition(p_all, grid, table)
+    validate_partition(p_act, grid, table)
+    # §6.1: active optimization does not change generated windows
+    for f in ("a", "b", "c", "d", "gid"):
+        va, vb = getattr(p_all, f), getattr(p_act, f)
+        if f == "gid":
+            va = [p_all.gid_key[int(g)] for g in va]
+            vb = [p_act.gid_key[int(g)] for g in vb]
+            assert va == vb
+        else:
+            assert np.array_equal(va, vb)
+    p_alla = allalign_partition(k_all)
+    validate_partition(p_alla, grid, table)
+
+
+def test_total_coverage_count(example):
+    tokens, h = example
+    part = monotonic_partition(generate_keys_multiset(tokens, h, active=True))
+    n = len(tokens)
+    assert part.covered_cells() == n * (n + 1) // 2

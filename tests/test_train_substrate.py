@@ -1,0 +1,211 @@
+"""Optimizer, checkpointing (fault tolerance + elasticity), trainer loop,
+dedup data plane, and the sharded index."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import (ContaminationChecker, DedupFilter, HashWordTokenizer,
+                        default_scheme, make_training_data, synthetic_corpus)
+from repro.models import RunFlags
+from repro.train import OptConfig, adamw_update, init_opt_state, lr_at
+from repro.train.checkpoint import (latest_step, restore_checkpoint,
+                                    save_checkpoint)
+from repro.train.loop import Trainer, TrainerConfig
+
+
+# --------------------------------------------------------------------------
+# optimizer
+# --------------------------------------------------------------------------
+
+def test_adamw_minimizes_quadratic():
+    oc = OptConfig(lr=0.1, warmup_steps=1, decay_steps=200,
+                   weight_decay=0.0, clip_norm=10.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    opt = init_opt_state(params)
+    loss = lambda p: jnp.sum(jnp.square(p["w"]))
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw_update(params, g, opt, oc)
+    assert float(loss(params)) < 1e-3
+
+
+def test_lr_schedule_warmup_and_decay():
+    oc = OptConfig(lr=1e-3, warmup_steps=10, decay_steps=100,
+                   min_lr_ratio=0.1)
+    assert float(lr_at(oc, jnp.int32(0))) < 2e-4
+    assert abs(float(lr_at(oc, jnp.int32(10))) - 1e-3) < 1e-4
+    assert float(lr_at(oc, jnp.int32(100))) <= 1.01e-4 + 1e-6
+
+
+def test_grad_clipping_bounds_update():
+    from repro.train import clip_by_global_norm
+    g = {"a": jnp.full((4,), 100.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) > 100
+    total = jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(clipped)))
+    assert abs(float(total) - 1.0) < 1e-5
+
+
+def test_grad_compression_error_feedback():
+    from repro.train import compress_grads
+    g = {"w": jnp.array([1.0 + 1e-4, -2.0])}
+    comp, err = compress_grads(g, "bf16")
+    # bf16 quantization error is captured in the feedback buffer
+    back = jax.tree.map(lambda c, e: c.astype(jnp.float32) + e, comp, err)
+    np.testing.assert_allclose(np.asarray(back["w"]), np.asarray(g["w"]),
+                               rtol=0, atol=1e-7)
+
+
+# --------------------------------------------------------------------------
+# checkpointing: atomic commit, resume, elasticity
+# --------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    tree = {"params": {"w": jnp.arange(12.0).reshape(3, 4)},
+            "opt": {"step": jnp.int32(7)}}
+    for s in (1, 2, 3, 4):
+        save_checkpoint(tmp_path, s, tree, keep=2)
+    assert latest_step(tmp_path) == 4
+    got, step = restore_checkpoint(tmp_path, 4)
+    assert step == 4
+    np.testing.assert_array_equal(np.asarray(got["params"]["w"]),
+                                  np.arange(12.0).reshape(3, 4))
+    # keep=2 garbage-collects older steps
+    import pathlib
+    steps = sorted(p.name for p in pathlib.Path(tmp_path).glob("step_*"))
+    assert len(steps) == 2
+
+
+def test_checkpoint_skips_uncommitted(tmp_path):
+    tree = {"w": jnp.zeros(3)}
+    save_checkpoint(tmp_path, 1, tree)
+    save_checkpoint(tmp_path, 2, tree)
+    # simulate a crash mid-write of step 3: no COMMITTED marker
+    d = tmp_path / "step_00000003"
+    d.mkdir()
+    (d / "manifest.json").write_text("{}")
+    assert latest_step(tmp_path) == 2
+
+
+def test_checkpoint_elastic_reshard(tmp_path):
+    """Save sharded on a (2,) mesh slice, restore replicated (new mesh)."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    devs = jax.devices()
+    mesh = Mesh(np.array(devs[:1]).reshape(1), ("data",))
+    x = jax.device_put(jnp.arange(8.0),
+                       NamedSharding(mesh, P("data")))
+    save_checkpoint(tmp_path, 5, {"x": x})
+    got, _ = restore_checkpoint(
+        tmp_path, 5, shardings={"x": NamedSharding(mesh, P())})
+    np.testing.assert_array_equal(np.asarray(got["x"]), np.arange(8.0))
+
+
+# --------------------------------------------------------------------------
+# trainer end-to-end (CPU, tiny config)
+# --------------------------------------------------------------------------
+
+def test_trainer_loss_decreases_and_resumes(tmp_path):
+    cfg = get_config("qwen1.5-4b").reduced(vocab=512)
+    tc = TrainerConfig(steps=30, batch_size=4, seq_len=32, log_every=0,
+                       ckpt_every=20, ckpt_dir=str(tmp_path), n_docs=300)
+    oc = OptConfig(lr=5e-3, warmup_steps=5, decay_steps=500)
+    out = Trainer(cfg, tc, ocfg=oc).run()
+    first = float(np.mean(out["losses"][:3]))
+    last = float(np.mean(out["losses"][-3:]))
+    assert last < first, (first, last)
+    assert latest_step(tmp_path) == 20
+    # resume from step 20 and continue to 40
+    tc2 = dataclasses.replace(tc, steps=40)
+    out2 = Trainer(cfg, tc2, ocfg=oc).run(resume=True)
+    assert out2["steps"] == 20      # only 20 more steps
+    assert float(np.mean(out2["losses"][-3:])) < first
+
+
+def test_trainer_with_dedup_drops_planted_duplicates():
+    cfg = get_config("qwen1.5-4b").reduced(vocab=512)
+    tc = TrainerConfig(steps=2, batch_size=2, seq_len=32, log_every=0,
+                       n_docs=120, dedup_theta=0.55)
+    out = Trainer(cfg, tc).run()
+    assert out["dedup"]["dropped"] > 5          # planted dup_fraction=0.25
+    assert out["dedup"]["admitted"] > 50
+
+
+# --------------------------------------------------------------------------
+# data plane: dedup + contamination via the paper's index
+# --------------------------------------------------------------------------
+
+def test_dedup_filter_exact_and_near_duplicates():
+    tok = HashWordTokenizer(vocab=4096)
+    f = DedupFilter(theta=0.6)
+    base = tok.encode("the quick brown fox jumps over the lazy dog " * 8)
+    assert f.admit(base)
+    assert not f.admit(base)                       # exact dup dropped
+    near = base.copy()
+    near[::17] = (near[::17] + 7) % 4096           # ~6% token edits
+    assert not f.admit(near)                       # near dup dropped
+    other = tok.encode("completely different words about lattice "
+                       "entropy quantum manifold " * 10)
+    assert f.admit(other)
+
+
+def test_contamination_checker_finds_leak():
+    rng = np.random.default_rng(3)
+    train = [rng.integers(4, 4000, 150).astype(np.int64) for _ in range(12)]
+    test = [rng.integers(4, 4000, 80).astype(np.int64) for _ in range(6)]
+    # plant: test doc 2 contains train doc 5's span
+    test[2] = np.concatenate([test[2][:10], train[5][20:100]])
+    cc = ContaminationChecker(theta=0.5).fit(train)
+    hits = cc.check(test)
+    assert any(h["test_doc"] == 2 and h["train_doc"] == 5 for h in hits)
+    assert all(h["test_doc"] == 2 for h in hits)   # no false positives
+
+
+def test_sharded_index_matches_flat_index():
+    from repro.core import AlignmentIndex, query
+    from repro.core.sharded_index import ShardedAlignmentIndex
+    scheme = default_scheme("weighted", seed=5, k=16)
+    scheme_flat = default_scheme("weighted", seed=5, k=16)
+    rng = np.random.default_rng(7)
+    docs = [rng.integers(0, 500, 60).astype(np.int64) for _ in range(9)]
+    docs[4] = docs[1].copy()                        # a planted duplicate
+    sharded = ShardedAlignmentIndex(scheme=scheme, n_shards=3).build(docs)
+    flat = AlignmentIndex(scheme=scheme_flat).build(docs)
+    q = docs[1][5:50]
+    r1 = sharded.query(q, 0.5)
+    r2 = query(flat, q, 0.5)
+    assert {a.text_id for a in r1} == {a.text_id for a in r2}
+    assert sharded.num_windows == flat.num_windows
+
+
+def test_sharded_index_recovers_lost_shard(tmp_path):
+    scheme = default_scheme("weighted", seed=5, k=8)
+    rng = np.random.default_rng(7)
+    docs = [rng.integers(0, 500, 40).astype(np.int64) for _ in range(6)]
+    idx = ShardedOrNone = None
+    from repro.core.sharded_index import ShardedAlignmentIndex
+    idx = ShardedAlignmentIndex(scheme=scheme, n_shards=3).build(docs)
+    idx.save(tmp_path)
+    # simulate losing shard 1 on disk
+    (tmp_path / "shard_1.pkl").unlink()
+    idx2 = ShardedAlignmentIndex(scheme=scheme, n_shards=3)
+    lost = idx2.restore(tmp_path)
+    assert lost == [1]
+    for gid in idx2.docs_of_shard(1):               # rebuild only shard 1
+        idx2.shards[1].add_text(docs[gid])
+    r1 = {a.text_id for a in idx.query(docs[2], 0.5)}
+    r2 = {a.text_id for a in idx2.query(docs[2], 0.5)}
+    assert r1 == r2
+
+
+def test_tokenizer_deterministic_and_in_range():
+    tok = HashWordTokenizer(vocab=1000)
+    a = tok.encode("Hello World hello")
+    b = tok.encode("hello world hello")
+    np.testing.assert_array_equal(a, b)             # lowercasing
+    assert a[0] == a[2]
+    assert (a >= 4).all() and (a < 1000).all()
