@@ -8,8 +8,6 @@ Paper claims reproduced (scaled to this container):
 
 from __future__ import annotations
 
-import numpy as np
-
 from repro.core import UniversalHash, mono_active_multiset, mono_all_multiset
 
 from .common import controlled_f_text, print_table, save_result, timed, \

@@ -1,17 +1,25 @@
 """§6 query-latency study: latency vs corpus size and threshold θ, plus
 end-to-end recall of planted near-duplicates (the accuracy-guarantee side:
 every subsequence with estimated Jaccard >= θ must be returned).
+
+Also benchmarks the serving-side index layouts: frozen CSR arrays vs the
+mutable dict-of-lists build layout (resident bytes + single-query latency),
+and the batched query engine (`batch_query`) vs a per-query loop across
+batch sizes — the MONO headline claims (index size, query throughput).
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import AlignmentIndex, query
-from repro.core.oracle import jaccard_multiset
+from repro.core import AlignmentIndex, batch_query, query
 from repro.data.dedup import default_scheme
 
 from .common import print_table, save_result, timed, zipf_text
+
+
+def _blocks(results):
+    return [(a.text_id, a.blocks) for a in results]
 
 
 def run(quick: bool = True) -> dict:
@@ -39,14 +47,64 @@ def run(quick: bool = True) -> dict:
     # recall of a planted exact sub-duplicate at theta=0.9
     found = any(a.text_id == 3 for a in query(idx, qtext, 0.9))
 
+    # ---- frozen CSR layout vs dict layout + batched query engine ----------
+    # serving configuration: the paper's default sketch width (k = 16)
+    scheme = default_scheme("multiset", seed=33, k=16)
+    n_docs = 24 if quick else 64
+    docs = [zipf_text(900, seed=500 + i) for i in range(n_docs)]
+    dict_idx = AlignmentIndex(scheme=scheme).build(docs)
+    frozen_idx = AlignmentIndex(scheme=scheme)
+    frozen_idx.load_state_dict(dict_idx.state_dict())
+    frozen_idx.freeze()
+    dict_bytes, frozen_bytes = dict_idx.nbytes(), frozen_idx.nbytes()
+
+    theta = 0.6
+    rng = np.random.default_rng(7)
+
+    def make_queries(n):
+        offs = rng.integers(0, 700, size=n)
+        return [docs[i % n_docs][int(o):int(o) + 120].copy()
+                for i, o in enumerate(offs)]
+
+    q1 = make_queries(1)[0]
+    _, t_dict = timed(lambda: query(dict_idx, q1, theta), repeat=3)
+    _, t_frozen = timed(lambda: query(frozen_idx, q1, theta), repeat=3)
+    rows_frozen = [
+        {"layout": "dict", "index_MB": dict_bytes / 1e6, "query_s": t_dict},
+        {"layout": "frozen_csr", "index_MB": frozen_bytes / 1e6,
+         "query_s": t_frozen},
+    ]
+
+    batch_sizes = [1, 4, 16] if quick else [1, 4, 16, 64]
+    rows_batch, speedup_at, equal_all = [], {}, True
+    for bs in batch_sizes:
+        qs = make_queries(bs)
+        loop_res, t_loop = timed(
+            lambda: [query(dict_idx, q, theta) for q in qs], repeat=2)
+        bat_res, t_bat = timed(
+            lambda: batch_query(frozen_idx, qs, theta), repeat=2)
+        equal = [_blocks(r) for r in loop_res] == [_blocks(r) for r in bat_res]
+        equal_all = equal_all and equal
+        speedup_at[bs] = t_loop / t_bat
+        rows_batch.append({"batch": bs, "looped_s": t_loop,
+                           "batched_s": t_bat, "speedup": t_loop / t_bat,
+                           "batched_qps": bs / t_bat, "equal": equal})
+
     print_table("query latency vs corpus size (theta=0.6)", rows_sz)
     print_table("query latency vs theta", rows_theta)
+    print_table("index layout: dict vs frozen CSR", rows_frozen)
+    print_table("batched query engine vs per-query loop (theta=0.6)",
+                rows_batch)
     claims = {
         "planted_dup_found_at_high_theta": bool(found),
         "results_monotone_in_theta": all(
             rows_theta[i]["result_cells"] >= rows_theta[i + 1]["result_cells"]
             for i in range(len(rows_theta) - 1)),
+        "frozen_index_smaller_than_dict": frozen_bytes < dict_bytes,
+        "batched_equals_looped": bool(equal_all),
+        "batched_speedup_ge_3x_at_16": speedup_at[16] >= 3.0,
     }
-    rec = {"vs_size": rows_sz, "vs_theta": rows_theta, "claims": claims}
+    rec = {"vs_size": rows_sz, "vs_theta": rows_theta,
+           "layouts": rows_frozen, "batched": rows_batch, "claims": claims}
     save_result("query", rec)
     return rec

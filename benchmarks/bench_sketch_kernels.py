@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.kernels import multiset_sketch
 from repro.kernels.ref import minhash_sketch_ref
 
 from .common import print_table, save_result, timed

@@ -5,8 +5,6 @@ paper's ratio plots, vs n and vs f (multi-set Jaccard).
 
 from __future__ import annotations
 
-import numpy as np
-
 from repro.core import (AlignmentIndex, MultisetScheme, UniversalHash,
                         allalign_multiset, mono_active_multiset, query)
 

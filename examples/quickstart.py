@@ -4,7 +4,6 @@ and find every subsequence aligned with a query (the paper's Definition 1).
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import numpy as np
 
 from repro.core import AlignmentIndex, WeightedScheme, query
 from repro.core.weights import WeightFn

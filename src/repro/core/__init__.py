@@ -1,6 +1,7 @@
 # The paper's primary contribution: near-duplicate text alignment under
 # weighted Jaccard similarity via MonoActive compact-window partitioning.
 from .allalign import allalign_icws, allalign_multiset, allalign_partition
+from .frozen import FrozenTable
 from .hashing import MixHash, UniversalHash
 from .icws import ICWS
 from .index import AlignmentIndex, MultisetScheme, WeightedScheme
@@ -11,7 +12,8 @@ from .oracle import (jaccard_multiset, jaccard_weighted,
                      validate_partition)
 from .partition import (Partition, mono_active_icws, mono_active_multiset,
                         mono_all_icws, mono_all_multiset, monotonic_partition)
-from .query import Alignment, estimate_similarity, query
+from .query import Alignment, batch_query, estimate_similarity, query
+from .sharded_index import ShardedAlignmentIndex
 from .weights import WeightFn
 
 __all__ = [
@@ -23,4 +25,5 @@ __all__ = [
     "allalign_partition", "allalign_multiset", "allalign_icws",
     "minhash_gid_grid_multiset", "minhash_gid_grid_icws", "validate_partition",
     "jaccard_multiset", "jaccard_weighted", "query", "estimate_similarity",
+    "FrozenTable", "batch_query", "ShardedAlignmentIndex",
 ]

@@ -1,0 +1,175 @@
+"""Frozen CSR-style inverted tables (the serving-side index layout).
+
+A built ``AlignmentIndex`` stores each of its k tables as a Python dict
+``key -> list[(tid, a, b, c, d)]``.  That layout is ideal for incremental
+builds but terrible for serving: every posting is a 5-tuple of boxed ints
+(~240 B/window vs 20 B of payload) and probes chase pointers.  Following the
+frozen-layout direction of BagMinHash (Ertl '18), ``freeze_table`` compacts
+one dict table into three contiguous arrays:
+
+  keys    uint64 (nkeys,)    sorted packed hash identities
+  offsets int64  (nkeys+1,)  CSR row pointers into ``windows``
+  windows int32  (nwin, 5)   (tid, a, b, c, d) rows, grouped by key
+
+Lookup is ``np.searchsorted`` (O(log nkeys)); a batch of probes is a single
+vectorized searchsorted, which is what the batched query engine
+(``repro.core.query.batch_query``) rides on.
+
+Key packing
+-----------
+Multiset tables key by ``int(h)`` (a 61/64-bit hash) -> stored directly as
+uint64.  ICWS tables key by the exact integer identity ``(token, k_int)``
+(DESIGN.md §6) -> packed as ``(token << 32) | (k_int - kint_min)``; tokens
+are vocabulary ids (< 2**32) and observed k_int spans are tiny, so the pack
+is exact.  Probe keys that fall outside the packable range simply miss —
+they cannot equal any stored key.
+"""
+
+from __future__ import annotations
+
+import sys
+from dataclasses import dataclass
+
+import numpy as np
+
+KIND_EMPTY = "empty"
+KIND_INT = "int"
+KIND_PAIR = "pair"
+
+_MISS = np.uint64(0xFFFFFFFFFFFFFFFF)  # sentinel for unpackable probe keys
+
+
+def _concat_ranges(starts: np.ndarray, counts: np.ndarray) -> np.ndarray:
+    """Concatenate [s, s+c) ranges into one index vector, vectorized."""
+    total = int(counts.sum())
+    if total == 0:
+        return np.empty(0, np.int64)
+    rep_starts = np.repeat(starts, counts)
+    ends = np.cumsum(counts)
+    seq = np.arange(total, dtype=np.int64) - np.repeat(ends - counts, counts)
+    return rep_starts + seq
+
+
+@dataclass
+class FrozenTable:
+    """One immutable CSR inverted table (one sketch coordinate)."""
+
+    kind: str
+    keys: np.ndarray        # uint64 (nkeys,), sorted
+    offsets: np.ndarray     # int64 (nkeys + 1,)
+    windows: np.ndarray     # int32 (nwin, 5): tid, a, b, c, d
+    kint_min: int = 0       # pair-pack bias (kind == "pair" only)
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_dict(cls, table: dict) -> "FrozenTable":
+        if not table:
+            return cls(kind=KIND_EMPTY, keys=np.empty(0, np.uint64),
+                       offsets=np.zeros(1, np.int64),
+                       windows=np.empty((0, 5), np.int32))
+        first = next(iter(table))
+        kind = KIND_PAIR if isinstance(first, tuple) else KIND_INT
+        kint_min = 0
+        if kind == KIND_PAIR:
+            toks = np.fromiter((k[0] for k in table), np.int64, len(table))
+            kints = np.fromiter((k[1] for k in table), np.int64, len(table))
+            if toks.min() < 0 or toks.max() >= 1 << 32:
+                raise ValueError("token id out of uint32 range: cannot "
+                                 "pack (token, k_int) keys for freezing")
+            kint_min = int(kints.min())
+            if int(kints.max()) - kint_min >= 1 << 32:
+                raise ValueError("k_int span exceeds uint32: cannot pack "
+                                 "(token, k_int) keys for freezing")
+            packed = (toks.astype(np.uint64) << np.uint64(32)) | \
+                (kints - kint_min).astype(np.uint64)
+        else:
+            packed = np.fromiter((int(k) for k in table), np.uint64,
+                                 len(table))
+        order = np.argsort(packed, kind="stable")
+        packed = packed[order]
+        items = list(table.values())
+        counts = np.array([len(items[i]) for i in order], np.int64)
+        offsets = np.zeros(len(packed) + 1, np.int64)
+        np.cumsum(counts, out=offsets[1:])
+        windows = np.empty((int(offsets[-1]), 5), np.int32)
+        row = 0
+        for i in order:
+            wins = items[i]
+            windows[row:row + len(wins)] = wins
+            row += len(wins)
+        return cls(kind=kind, keys=packed, offsets=offsets, windows=windows,
+                   kint_min=kint_min)
+
+    # -- probing ------------------------------------------------------------
+
+    def encode(self, values) -> np.ndarray:
+        """Pack a list of probe keys -> uint64 (P,); unpackable -> _MISS."""
+        if self.kind == KIND_PAIR:
+            toks = np.array([v[0] for v in values], np.int64)
+            kints = np.array([v[1] for v in values], np.int64)
+            rel = kints - self.kint_min
+            ok = (toks >= 0) & (toks < 1 << 32) & (rel >= 0) & (rel < 1 << 32)
+            packed = (np.where(ok, toks, 0).astype(np.uint64) << np.uint64(32)) \
+                | np.where(ok, rel, 0).astype(np.uint64)
+            return np.where(ok, packed, _MISS)
+        if self.kind == KIND_INT:
+            return np.array([int(v) for v in values], np.uint64)
+        return np.full(len(values), _MISS, np.uint64)
+
+    def probe(self, packed: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorized lookup: packed (P,) u64 -> CSR (starts, ends) int64.
+
+        Misses get an empty range (start == end == 0).
+        """
+        n = len(self.keys)
+        if n == 0:
+            z = np.zeros(len(packed), np.int64)
+            return z, z
+        pos = np.searchsorted(self.keys, packed)
+        safe = np.where(pos < n, pos, 0)
+        hit = (pos < n) & (self.keys[safe] == packed)
+        starts = np.where(hit, self.offsets[safe], 0)
+        ends = np.where(hit, self.offsets[safe + 1], 0)
+        return starts, ends
+
+    def get(self, v, default=None):
+        """dict.get-compatible single lookup -> int32 (m, 5) rows."""
+        packed = self.encode([v])
+        s, e = self.probe(packed)
+        if e[0] > s[0]:
+            return self.windows[s[0]:e[0]]
+        return default if default is not None else self.windows[:0]
+
+    # -- introspection / persistence ----------------------------------------
+
+    def __len__(self) -> int:
+        return len(self.keys)
+
+    @property
+    def nbytes(self) -> int:
+        return self.keys.nbytes + self.offsets.nbytes + self.windows.nbytes
+
+    def state_dict(self) -> dict:
+        return {"kind": self.kind, "keys": self.keys, "offsets": self.offsets,
+                "windows": self.windows, "kint_min": self.kint_min}
+
+    @classmethod
+    def from_state(cls, state: dict) -> "FrozenTable":
+        return cls(kind=state["kind"],
+                   keys=np.asarray(state["keys"], np.uint64),
+                   offsets=np.asarray(state["offsets"], np.int64),
+                   windows=np.asarray(state["windows"], np.int32),
+                   kint_min=int(state["kint_min"]))
+
+
+def dict_tables_nbytes(tables: list[dict]) -> int:
+    """Resident size of dict-of-lists-of-tuples tables (recursive sizeof)."""
+    total = 0
+    for table in tables:
+        total += sys.getsizeof(table)
+        for key, wins in table.items():
+            total += sys.getsizeof(key) + sys.getsizeof(wins)
+            for w in wins:
+                total += sys.getsizeof(w) + sum(sys.getsizeof(x) for x in w)
+    return total

@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import numpy as np
 
-from .hashing import UniversalHash
 from .icws import ICWS
 from .keys import occurrence_lists
 from .partition import Partition

@@ -1,6 +1,16 @@
 """Query processing (Algorithm 2): sketch the query, probe the k inverted
 lists, plane-sweep the collided compact windows for cells covered >= ⌈kθ⌉
 times (those subsequences have estimated Jaccard >= θ, Eq. 2/Eq. 5).
+
+Two execution paths over the same algorithm:
+
+* ``query``       — one query at a time; works on mutable (dict) and frozen
+  indexes alike.
+* ``batch_query`` — the serving path: sketches the whole batch at once,
+  probes each of the k coordinates for all queries in a single vectorized
+  ``searchsorted`` (frozen CSR tables), and groups the collided windows by
+  (query, text) with one lexsort before the per-pair plane sweep.  Returns
+  block-for-block the same results as looping ``query``.
 """
 
 from __future__ import annotations
@@ -11,6 +21,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from .frozen import _concat_ranges
 from .index import AlignmentIndex
 
 
@@ -52,36 +63,32 @@ def _sweep_text(windows: list[tuple[int, int, int, int]], m: int
     xs = np.unique(np.concatenate([a, b + 1]))
     ys = np.unique(np.concatenate([c, d + 1]))
     nx, ny = len(xs), len(ys)
-    diff = np.zeros((nx + 1, ny + 1), dtype=np.int32)
     xi_a = np.searchsorted(xs, a)
     xi_b = np.searchsorted(xs, b + 1)
     yi_c = np.searchsorted(ys, c)
     yi_d = np.searchsorted(ys, d + 1)
-    np.add.at(diff, (xi_a, yi_c), 1)
-    np.add.at(diff, (xi_a, yi_d), -1)
-    np.add.at(diff, (xi_b, yi_c), -1)
-    np.add.at(diff, (xi_b, yi_d), 1)
-    count = np.cumsum(np.cumsum(diff, axis=0), axis=1)[:nx, :ny]
-    hot = count >= m
-    blocks: list[tuple[int, int, int, int]] = []
+    # one bincount scatter of the four +-1 corner pulses (C fast path)
+    stride = ny + 1
+    pos = np.concatenate([xi_a * stride + yi_c, xi_b * stride + yi_d])
+    neg = np.concatenate([xi_a * stride + yi_d, xi_b * stride + yi_c])
+    diff = (np.bincount(pos, minlength=(nx + 1) * stride)
+            - np.bincount(neg, minlength=(nx + 1) * stride)
+            ).reshape(nx + 1, stride).astype(np.int32)
+    count = np.cumsum(np.cumsum(diff, axis=0), axis=1)
     # xs[i]..xs[i+1]-1 stripes; the last compressed coord is always an
     # exclusive upper bound (b+1 / d+1), so hot cannot extend past it.
-    for xi in range(nx - 1):
-        row = hot[xi]
-        if not row.any():
-            continue
-        j = 0
-        while j < ny - 1:
-            if row[j]:
-                j2 = j
-                while j2 + 1 < ny - 1 and row[j2 + 1]:
-                    j2 += 1
-                blocks.append((int(xs[xi]), int(xs[xi + 1] - 1),
-                               int(ys[j]), int(ys[j2 + 1] - 1)))
-                j = j2 + 1
-            else:
-                j += 1
-    return blocks
+    hot = count[:nx - 1, :ny - 1] >= m
+    if not hot.any():
+        return []
+    # maximal horizontal runs per stripe, vectorized: +1/-1 edges of the
+    # zero-padded hot mask mark run starts / one-past-run ends
+    hpad = np.zeros((nx - 1, ny + 1), dtype=np.int8)
+    hpad[:, 1:ny] = hot
+    edges = np.diff(hpad, axis=1)
+    rs, cs = np.nonzero(edges == 1)       # run starts (row-major)
+    _, ce = np.nonzero(edges == -1)       # aligned exclusive run ends
+    return [(int(xs[r]), int(xs[r + 1] - 1), int(ys[c0]), int(ys[c1] - 1))
+            for r, c0, c1 in zip(rs, cs, ce)]
 
 
 def query(index: AlignmentIndex, query_tokens, theta: float
@@ -91,14 +98,102 @@ def query(index: AlignmentIndex, query_tokens, theta: float
     m = max(1, math.ceil(k * theta))
     sketch = index.scheme.sketch(query_tokens)
     per_text: dict[int, list] = defaultdict(list)
+    ncoords: dict[int, int] = defaultdict(int)
     for i in range(k):
+        prev = None
         for (tid, a, b, c, d) in index.lookup(i, sketch[i]):
             per_text[tid].append((a, b, c, d))
+            if tid != prev:                 # postings are grouped by tid
+                ncoords[tid] += 1
+                prev = tid
     results = []
     for tid, wins in sorted(per_text.items()):
+        # windows from one coordinate are disjoint (a cell's min-hash is
+        # unique), so coverage >= m needs >= m distinct coordinates — skip
+        # the sweep when that is impossible
+        if ncoords[tid] < m:
+            continue
         blocks = _sweep_text(wins, m)
         if blocks:
-            results.append(Alignment(text_id=tid, blocks=blocks))
+            results.append(Alignment(text_id=int(tid), blocks=blocks))
+    return results
+
+
+def _gather_coord(index: AlignmentIndex, i: int, probe_keys: list
+                  ) -> tuple[np.ndarray, np.ndarray]:
+    """All windows colliding with the B probe keys on coordinate ``i``:
+    (query ids (M,), windows (M, 5) int64)."""
+    if index.is_frozen:
+        table = index.frozen[i]
+        packed = table.encode(probe_keys)
+        starts, ends = table.probe(packed)
+        counts = ends - starts
+        qids = np.repeat(np.arange(len(probe_keys), dtype=np.int64), counts)
+        rows = table.windows[_concat_ranges(starts, counts)]
+        return qids, rows.astype(np.int64)
+    qid_chunks, win_chunks = [], []
+    for b, key in enumerate(probe_keys):
+        wins = index.tables[i].get(key)
+        if wins:
+            qid_chunks.append(np.full(len(wins), b, np.int64))
+            win_chunks.append(np.asarray(wins, np.int64))
+    if not qid_chunks:
+        return np.empty(0, np.int64), np.empty((0, 5), np.int64)
+    return np.concatenate(qid_chunks), np.concatenate(win_chunks)
+
+
+def batch_query(index: AlignmentIndex, queries, theta: float, *,
+                sketches: list[list] | None = None,
+                sketch_backend: str = "exact") -> list[list[Alignment]]:
+    """Definition-1 alignment for a batch of queries (the serving path).
+
+    ``sketches`` short-circuits sketching when the caller already holds the
+    batch's sketch coordinates (the sharded fan-out computes them once and
+    reuses them on every shard).  ``sketch_backend="pallas"`` routes a
+    weighted scheme's sketching through the fused device kernel in one
+    launch (f32; see ``WeightedScheme.sketch_batch``).
+    """
+    B = len(queries)
+    if B == 0:
+        return []
+    k = index.scheme.k
+    m = max(1, math.ceil(k * theta))
+    if sketches is None:
+        sketches = index.scheme.sketch_batch(queries, backend=sketch_backend)
+
+    qid_chunks, win_chunks, cid_chunks = [], [], []
+    for i in range(k):
+        qids, wins = _gather_coord(index, i, [sketches[b][i]
+                                              for b in range(B)])
+        if len(qids):
+            qid_chunks.append(qids)
+            win_chunks.append(wins)
+            cid_chunks.append(np.full(len(qids), i, np.int64))
+    results: list[list[Alignment]] = [[] for _ in range(B)]
+    if not qid_chunks:
+        return results
+    qid_all = np.concatenate(qid_chunks)
+    win_all = np.concatenate(win_chunks)
+    cid_all = np.concatenate(cid_chunks)
+
+    # one lexsort groups the collided windows by (query, text); each group
+    # is a contiguous slice handed to the plane sweep
+    order = np.lexsort((win_all[:, 0], qid_all))
+    qid_all, win_all, cid_all = qid_all[order], win_all[order], cid_all[order]
+    change = (qid_all[1:] != qid_all[:-1]) | \
+        (win_all[1:, 0] != win_all[:-1, 0])
+    bounds = np.flatnonzero(change) + 1
+    for lo, hi in zip(np.concatenate([[0], bounds]),
+                      np.concatenate([bounds, [len(qid_all)]])):
+        # same distinct-coordinate prefilter as ``query`` (the stable sort
+        # keeps each group's coordinate ids ascending)
+        cids = cid_all[lo:hi]
+        if 1 + np.count_nonzero(cids[1:] != cids[:-1]) < m:
+            continue
+        blocks = _sweep_text(win_all[lo:hi, 1:5], m)
+        if blocks:
+            results[int(qid_all[lo])].append(
+                Alignment(text_id=int(win_all[lo, 0]), blocks=blocks))
     return results
 
 

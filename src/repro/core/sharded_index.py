@@ -19,7 +19,7 @@ from pathlib import Path
 import numpy as np
 
 from .index import AlignmentIndex
-from .query import Alignment, query
+from .query import Alignment, batch_query, query
 
 
 def shard_of(doc_id: int, n_shards: int) -> int:
@@ -56,14 +56,46 @@ class ShardedAlignmentIndex:
     def query(self, tokens, theta: float) -> list[Alignment]:
         """Fan-out / union; local ids remapped into the global space."""
         out: list[Alignment] = []
-        inverse = {}
-        for gid, (s, lid) in enumerate(self.doc_map):
-            inverse[(s, lid)] = gid
+        inverse = self._inverse_doc_map()
         for s, shard in enumerate(self.shards):
             for al in query(shard, tokens, theta):
                 out.append(Alignment(text_id=inverse[(s, al.text_id)],
                                      blocks=al.blocks))
         return sorted(out, key=lambda a: a.text_id)
+
+    def batch_query(self, texts, theta: float) -> list[list[Alignment]]:
+        """Batched fan-out: sketch the batch once (shards share the hash
+        family), probe every shard's tables with the same sketches, union
+        per query in the global id space."""
+        if not texts:
+            return []
+        sketches = self.scheme.sketch_batch(texts)
+        inverse = self._inverse_doc_map()
+        per_q: list[list[Alignment]] = [[] for _ in texts]
+        for s, shard in enumerate(self.shards):
+            res = batch_query(shard, texts, theta, sketches=sketches)
+            for qi, als in enumerate(res):
+                per_q[qi].extend(
+                    Alignment(text_id=inverse[(s, al.text_id)],
+                              blocks=al.blocks) for al in als)
+        return [sorted(r, key=lambda a: a.text_id) for r in per_q]
+
+    def freeze(self) -> "ShardedAlignmentIndex":
+        """Freeze every shard into the CSR serving layout (idempotent)."""
+        for shard in self.shards:
+            shard.freeze()
+        return self
+
+    @property
+    def is_frozen(self) -> bool:
+        return all(s.is_frozen for s in self.shards)
+
+    def nbytes(self) -> int:
+        return sum(s.nbytes() for s in self.shards)
+
+    def _inverse_doc_map(self) -> dict[tuple[int, int], int]:
+        return {(s, lid): gid
+                for gid, (s, lid) in enumerate(self.doc_map)}
 
     @property
     def num_windows(self) -> int:

@@ -1,13 +1,16 @@
 """Pallas TPU kernels for ICWS (improved consistent weighted sampling).
 
-Two kernels over the (K hash functions x T distinct tokens) grid:
+Three kernels over the (K hash functions x T distinct tokens) grid:
 
-* `icws_hash_grid`  -- materializes (k_int, a) for every (k, t): feeds the
+* `icws_hash_grid`    -- materializes (k_int, a) for every (k, t): feeds the
   MonoActive partitioner's active-hash generation (the paper's indexing
   hot loop).
-* `icws_sketch`     -- fused hash + running arg-min reduction: produces the
-  k-coordinate CWS sketch of a text without materializing the grid (one
+* `icws_sketch`       -- fused hash + running arg-min reduction: produces
+  the k-coordinate CWS sketch of a text without materializing the grid (one
   HBM pass; this is the query/sketching fast path).
+* `icws_sketch_batch` -- the same fused reduction with a leading batch grid
+  axis: the sketches of a whole query batch in ONE pallas launch (the
+  `batch_query` serving path).
 
 Tiling: (BK, BT) = (8, 128) f32 blocks in VMEM -- one (sublane x lane)
 register tile per step; the grid's T axis is innermost so the arg-min
@@ -129,3 +132,70 @@ def icws_sketch(r, c, beta, w, *, interpret: bool = True):
         interpret=interpret,
     )(pad2(r), pad2(c), pad2(beta), wp)
     return mina[:K, 0], argt[:K, 0], kint[:K, 0]
+
+
+def _sketch_batch_kernel(r_ref, c_ref, b_ref, w_ref,
+                         mina_ref, argt_ref, kint_ref):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        mina_ref[...] = jnp.full(mina_ref.shape, _BIG, mina_ref.dtype)
+        argt_ref[...] = jnp.full(argt_ref.shape, -1, argt_ref.dtype)
+        kint_ref[...] = jnp.zeros(kint_ref.shape, kint_ref.dtype)
+
+    r = r_ref[0]                        # (BK, BT)
+    c = c_ref[0]
+    beta = b_ref[0]
+    w = w_ref[0]                        # (1, BT) -- broadcast over K rows
+    valid = w > 0.0
+    lw = jnp.log(jnp.where(valid, w, 1.0))
+    kint = jnp.floor(lw / r + beta)
+    a = jnp.where(valid, c * jnp.exp(-r * (kint - beta) - r), _BIG)
+
+    loc = jnp.argmin(a, axis=1)                       # (BK,)
+    rows = jnp.arange(a.shape[0])
+    amin = a[rows, loc]
+    upd = amin < mina_ref[0, :, 0]
+    tglob = (j * BT + loc).astype(jnp.int32)
+    mina_ref[0, :, 0] = jnp.where(upd, amin, mina_ref[0, :, 0])
+    argt_ref[0, :, 0] = jnp.where(upd, tglob, argt_ref[0, :, 0])
+    kint_ref[0, :, 0] = jnp.where(upd, kint[rows, loc].astype(jnp.int32),
+                                  kint_ref[0, :, 0])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def icws_sketch_batch(r, c, beta, w, *, interpret: bool = True):
+    """Batched fused CWS sketch, one launch for the whole query batch.
+
+    r,c,beta (B,K,T) f32; w (B,T) f32 (w<=0 = padding mask) ->
+    (min_a (B,K) f32, argmin_token (B,K) i32, k_int (B,K) i32).
+    """
+    B, K, T = r.shape
+    Kp, Tp = -(-K // BK) * BK, -(-T // BT) * BT
+    pad3 = lambda x: jnp.pad(x, ((0, 0), (0, Kp - K), (0, Tp - T)),
+                             constant_values=1.0)
+    wp = jnp.pad(w, ((0, 0), (0, Tp - T)))[:, None, :]
+    grid = (B, Kp // BK, Tp // BT)
+    mina, argt, kint = pl.pallas_call(
+        _sketch_batch_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BK, BT), lambda b, i, j: (b, i, j)),
+            pl.BlockSpec((1, BK, BT), lambda b, i, j: (b, i, j)),
+            pl.BlockSpec((1, BK, BT), lambda b, i, j: (b, i, j)),
+            pl.BlockSpec((1, 1, BT), lambda b, i, j: (b, 0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, BK, 1), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, BK, 1), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, BK, 1), lambda b, i, j: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Kp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, Kp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, Kp, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(pad3(r), pad3(c), pad3(beta), wp)
+    return mina[:, :K, 0], argt[:, :K, 0], kint[:, :K, 0]

@@ -14,9 +14,9 @@ import numpy as np
 
 from ..core.icws import _token_params
 from .decode_attention import decode_attention_pallas
-from .icws_hash import icws_hash_grid, icws_sketch
+from .icws_hash import icws_hash_grid, icws_sketch, icws_sketch_batch
 from .minhash_sketch import minhash_sketch
-from .ref import (decode_attention_ref, icws_hash_grid_ref, icws_sketch_ref,
+from .ref import (decode_attention_ref, icws_sketch_ref,
                   minhash_sketch_ref, selective_scan_ref)
 from .selective_scan import selective_scan_pallas
 
@@ -56,6 +56,40 @@ def cws_sketch(seed: int, k: int, tokens, weights, *,
     return toks[argt], kint, mina
 
 
+def cws_sketch_batch(seed: int, k: int, token_lists, weight_lists, *,
+                     interpret: bool | None = None):
+    """CWS sketch identities for a batch of texts in ONE pallas launch.
+
+    token_lists[b]: distinct token ids of text b; weight_lists[b]: their
+    w(t, f) > 0.  Returns per-text identity lists [(token, k_int), ...] of
+    length k — the sketch-coordinate format `batch_query` probes with.
+    """
+    B = len(token_lists)
+    if B == 0:
+        return []
+    Tmax = max(1, max(len(t) for t in token_lists))
+    r = np.empty((B, k, Tmax), np.float32)
+    c = np.empty_like(r)
+    be = np.empty_like(r)
+    w = np.zeros((B, Tmax), np.float32)          # w<=0 masks the padding
+    toks = np.zeros((B, Tmax), np.int64)
+    for b, (tl, wl) in enumerate(zip(token_lists, weight_lists)):
+        t = len(tl)
+        rb, cb, bb = icws_token_params(seed, k, tl)
+        r[b, :, :t], c[b, :, :t], be[b, :, :t] = rb, cb, bb
+        r[b, :, t:] = c[b, :, t:] = be[b, :, t:] = 1.0
+        w[b, :t] = np.asarray(wl, np.float32)
+        toks[b, :t] = np.asarray(tl, np.int64)
+    interp = _default_interpret() if interpret is None else interpret
+    _mina, argt, kint = icws_sketch_batch(jnp.asarray(r), jnp.asarray(c),
+                                          jnp.asarray(be), jnp.asarray(w),
+                                          interpret=interp)
+    argt = np.asarray(argt)
+    kint = np.asarray(kint)
+    return [[(int(toks[b, argt[b, i]]), int(kint[b, i])) for i in range(k)]
+            for b in range(B)]
+
+
 def multiset_sketch(tokens, occ, seeds, *, use_pallas: bool = True,
                     interpret: bool | None = None):
     """Batched multiset min-hash sketches (B, K) u32."""
@@ -86,7 +120,8 @@ def fused_selective_scan(dt, Bc, Cc, x, A, D, *, use_pallas: bool = True,
     return selective_scan_ref(dt, Bc, Cc, x, A, D)
 
 
-__all__ = ["cws_sketch", "multiset_sketch", "flash_decode_attention",
-           "fused_selective_scan", "icws_token_params", "icws_hash_grid",
-           "icws_sketch", "minhash_sketch", "decode_attention_pallas",
+__all__ = ["cws_sketch", "cws_sketch_batch", "multiset_sketch",
+           "flash_decode_attention", "fused_selective_scan",
+           "icws_token_params", "icws_hash_grid", "icws_sketch",
+           "icws_sketch_batch", "minhash_sketch", "decode_attention_pallas",
            "selective_scan_pallas"]

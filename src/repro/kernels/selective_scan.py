@@ -34,15 +34,19 @@ def _sel_scan_kernel(dt_ref, b_ref, c_ref, x_ref, a_ref, d_ref,
     D = d_ref[...]                           # (1, BD)
 
     def step(t, h):
-        dt_t = dt_ref[0, t, :]               # (BD,)
-        x_t = x_ref[0, t, :]
-        B_t = b_ref[0, t, :]                 # (ds,)
-        C_t = c_ref[0, t, :]
+        # all-Slice indexers: jax 0.4.x interpret-mode discharge cannot mix
+        # plain-int axes with a traced index (fori_loop t)
+        row = lambda ref: pl.load(
+            ref, (pl.dslice(0, 1), pl.dslice(t, 1), slice(None)))[0, 0]
+        dt_t = row(dt_ref)                   # (BD,)
+        x_t = row(x_ref)
+        B_t = row(b_ref)                     # (ds,)
+        C_t = row(c_ref)
         a = jnp.exp(dt_t[:, None] * A)       # (BD, ds)
         h = a * h + (dt_t * x_t)[:, None] * B_t[None, :]
         y_t = jnp.sum(h * C_t[None, :], axis=1) + D[0] * x_t
-        pl.store(y_ref, (0, pl.dslice(t, 1), slice(None)),
-                 y_t[None, :].astype(y_ref.dtype))
+        pl.store(y_ref, (pl.dslice(0, 1), pl.dslice(t, 1), slice(None)),
+                 y_t[None, None, :].astype(y_ref.dtype))
         return h
 
     h = jax.lax.fori_loop(0, dt_ref.shape[1], step, h_scr[...])

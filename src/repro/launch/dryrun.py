@@ -11,18 +11,17 @@ import traceback     # noqa: E402
 from pathlib import Path  # noqa: E402
 
 import jax           # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 
-from repro.configs import (ARCH_IDS, SHAPES, TRAIN_MICROBATCHES, arch_cells,
-                           get_config)  # noqa: E402
+from repro.configs import (ARCH_IDS, SHAPES,  # noqa: E402
+                           TRAIN_MICROBATCHES, arch_cells, get_config)
 from repro.launch.hlo_stats import roofline_terms  # noqa: E402
 from repro.launch.hlo_walk import analyze_hlo  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch.specs import cell_arguments  # noqa: E402
 from repro.models import RunFlags  # noqa: E402
 from repro.models.config import ModelConfig  # noqa: E402
-from repro.train import OptConfig, make_prefill_step, make_serve_step, \
-    make_train_step  # noqa: E402
+from repro.train import (OptConfig, make_prefill_step,  # noqa: E402
+                         make_serve_step, make_train_step)
 
 
 def flags_for(cfg: ModelConfig, shape_name: str,

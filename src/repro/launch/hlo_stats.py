@@ -17,7 +17,6 @@ with G the replica-group size parsed from `replica_groups`.
 
 from __future__ import annotations
 
-import math
 import re
 from dataclasses import dataclass, field
 

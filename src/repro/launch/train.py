@@ -17,7 +17,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import numpy as np
 
 
 def main():
@@ -33,8 +32,7 @@ def main():
     args = ap.parse_args()
 
     from repro.configs import TRAIN_MICROBATCHES, get_config
-    from repro.launch.mesh import TPU_XLA_FLAGS, make_host_mesh, \
-        make_production_mesh
+    from repro.launch.mesh import TPU_XLA_FLAGS, make_production_mesh
     from repro.train import OptConfig
     from repro.train.loop import Trainer, TrainerConfig
 

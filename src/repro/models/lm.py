@@ -10,9 +10,7 @@ attention block is applied inside the scan under `lax.cond` on layer index.
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp

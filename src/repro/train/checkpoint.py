@@ -15,7 +15,6 @@ marker) is skipped automatically (fault tolerance).
 from __future__ import annotations
 
 import json
-import math
 import shutil
 import threading
 from pathlib import Path

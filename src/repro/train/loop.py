@@ -7,7 +7,6 @@ import time
 from dataclasses import dataclass, field
 
 import jax
-import numpy as np
 
 from ..data.corpus import make_training_data
 from ..data.dedup import DedupFilter

@@ -3,7 +3,6 @@ path, and the multi-pod dry-run."""
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

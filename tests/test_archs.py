@@ -10,7 +10,7 @@ import pytest
 
 from repro.configs import ARCH_IDS, arch_cells, get_config
 from repro.models import (RunFlags, decode_step, forward, init_params,
-                          lm_loss, prefill)
+                          prefill)
 from repro.train import OptConfig, init_opt_state, make_train_step
 
 FLAGS = RunFlags(q_chunk=4, scan_chunk=4, moe_mode="dense",

@@ -12,8 +12,11 @@ from repro.configs import ARCH_IDS, arch_cells
 
 DRYRUN = Path(__file__).resolve().parent.parent / "results" / "dryrun"
 
-pytestmark = pytest.mark.skipif(not DRYRUN.exists(),
-                                reason="dry-run results not generated")
+pytestmark = [
+    pytest.mark.slow,
+    pytest.mark.skipif(not DRYRUN.exists(),
+                       reason="dry-run results not generated"),
+]
 
 
 def _cells():

@@ -1,0 +1,206 @@
+"""Frozen CSR index + batched query engine: lookup parity with the dict
+tables, batch_query == looped query, kernel-batch sketch equality, and
+frozen persistence round-trips (flat and sharded)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (AlignmentIndex, FrozenTable, MultisetScheme,
+                        ShardedAlignmentIndex, WeightedScheme, WeightFn,
+                        batch_query, query)
+
+
+def _corpus(rng, n_docs=6, vocab=30, n=50):
+    return [rng.integers(0, vocab, size=n).astype(np.int64)
+            for _ in range(n_docs)]
+
+
+def _queries(rng, docs, n=5):
+    qs = [docs[i % len(docs)][5:30].copy() for i in range(n)]
+    qs.append(rng.integers(1000, 1030, size=12).astype(np.int64))  # miss
+    return qs
+
+
+def _frozen_copy(idx):
+    clone = AlignmentIndex(scheme=idx.scheme, method=idx.method)
+    clone.load_state_dict(idx.state_dict())
+    return clone.freeze()
+
+
+def _blocks(results):
+    return [(a.text_id, a.blocks) for a in results]
+
+
+SCHEMES = {
+    "multiset": lambda: MultisetScheme(seed=13, k=8),
+    "mix": lambda: MultisetScheme(seed=13, k=8, family="mix"),
+    "weighted": lambda: WeightedScheme(weight=WeightFn(tf="raw"), seed=21,
+                                       k=8),
+}
+
+
+# --------------------------------------------------------------------------
+# frozen table layout
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", list(SCHEMES))
+def test_frozen_lookup_parity_with_dict_tables(kind):
+    rng = np.random.default_rng(0)
+    idx = AlignmentIndex(scheme=SCHEMES[kind]()).build(_corpus(rng))
+    frozen = _frozen_copy(idx)
+    for i, table in enumerate(idx.tables):
+        assert len(frozen.frozen[i]) == len(table)
+        for key, wins in table.items():
+            got = frozen.lookup(i, key)
+            assert [tuple(int(x) for x in row) for row in got] == wins
+    # absent keys miss cleanly on every key type
+    assert len(frozen.frozen[0].get((10**9, 10**9)
+                                    if kind == "weighted" else 10**18)) == 0
+
+
+def test_frozen_is_contiguous_and_much_smaller():
+    rng = np.random.default_rng(1)
+    idx = AlignmentIndex(scheme=MultisetScheme(seed=3, k=8)).build(
+        _corpus(rng, n_docs=10, n=200))
+    frozen = _frozen_copy(idx)
+    for t in frozen.frozen:
+        assert t.keys.dtype == np.uint64 and t.windows.dtype == np.int32
+        assert np.all(t.keys[:-1] < t.keys[1:])          # sorted, unique
+        assert t.offsets[0] == 0 and t.offsets[-1] == len(t.windows)
+        assert np.all(np.diff(t.offsets) >= 0)
+    assert frozen.nbytes() * 5 < idx.nbytes()
+
+
+def test_freeze_is_idempotent_and_blocks_adds():
+    rng = np.random.default_rng(2)
+    idx = AlignmentIndex(scheme=MultisetScheme(seed=5, k=4)).build(
+        _corpus(rng, n_docs=2))
+    idx.freeze()
+    tables = idx.frozen
+    assert idx.freeze().frozen is tables                 # idempotent
+    with pytest.raises(RuntimeError):
+        idx.add_text(rng.integers(0, 9, 10).astype(np.int64))
+
+
+def test_frozen_table_pair_packing_rejects_oversized_tokens():
+    with pytest.raises(ValueError):
+        FrozenTable.from_dict({(1 << 33, 0): [(0, 0, 1, 2, 3)]})
+
+
+# --------------------------------------------------------------------------
+# batched query engine
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", list(SCHEMES))
+@pytest.mark.parametrize("theta", [0.3, 0.6, 1.0])
+def test_batch_query_equals_looped_query(kind, theta):
+    rng = np.random.default_rng(3)
+    docs = _corpus(rng)
+    qs = _queries(rng, docs)
+    idx = AlignmentIndex(scheme=SCHEMES[kind]()).build(docs)
+    frozen = _frozen_copy(idx)
+    looped = [_blocks(query(idx, q, theta)) for q in qs]
+    assert [_blocks(r) for r in batch_query(frozen, qs, theta)] == looped
+    # the engine also runs (identically) over the mutable dict tables
+    assert [_blocks(r) for r in batch_query(idx, qs, theta)] == looped
+    # and single-query on the frozen layout agrees too
+    assert [_blocks(query(frozen, q, theta)) for q in qs] == looped
+
+
+def test_batch_query_empty_batch_and_no_hits():
+    rng = np.random.default_rng(4)
+    idx = AlignmentIndex(scheme=MultisetScheme(seed=7, k=8)).build(
+        _corpus(rng, n_docs=2))
+    idx.freeze()
+    assert batch_query(idx, [], 0.5) == []
+    miss = [rng.integers(500, 520, 10).astype(np.int64)]
+    assert batch_query(idx, miss, 0.5) == [[]]
+
+
+def test_sketch_batch_matches_sketch():
+    rng = np.random.default_rng(5)
+    texts = [rng.integers(0, 25, size=40).astype(np.int64) for _ in range(4)]
+    for kind in SCHEMES:
+        scheme = SCHEMES[kind]()
+        assert scheme.sketch_batch(texts) == \
+            [scheme.sketch(t) for t in texts]
+
+
+def test_pallas_batch_sketch_matches_single_kernel():
+    """icws_sketch_batch must agree coordinate-for-coordinate with per-text
+    icws_sketch (identical f32 math, batched grid)."""
+    import jax.numpy as jnp
+
+    from repro.kernels import icws_sketch, icws_sketch_batch, \
+        icws_token_params
+
+    rng = np.random.default_rng(6)
+    K = 16
+    token_lists = [np.sort(rng.choice(5000, size=int(n), replace=False))
+                   .astype(np.int64) for n in rng.integers(3, 150, size=4)]
+    weight_lists = [rng.integers(1, 9, size=len(t)).astype(np.float64)
+                    for t in token_lists]
+    Tmax = max(len(t) for t in token_lists)
+    r = np.ones((len(token_lists), K, Tmax), np.float32)
+    c = np.ones_like(r)
+    be = np.ones_like(r)
+    w = np.zeros((len(token_lists), Tmax), np.float32)
+    for b, (tl, wl) in enumerate(zip(token_lists, weight_lists)):
+        t = len(tl)
+        r[b, :, :t], c[b, :, :t], be[b, :, :t] = icws_token_params(0, K, tl)
+        w[b, :t] = wl
+    _, argt_b, kint_b = icws_sketch_batch(jnp.asarray(r), jnp.asarray(c),
+                                          jnp.asarray(be), jnp.asarray(w))
+    for b, (tl, wl) in enumerate(zip(token_lists, weight_lists)):
+        rb, cb, bb = icws_token_params(0, K, tl)
+        _, argt, kint = icws_sketch(rb, cb, bb,
+                                    jnp.asarray(wl, jnp.float32))
+        assert np.array_equal(np.asarray(argt), np.asarray(argt_b[b]))
+        assert np.array_equal(np.asarray(kint), np.asarray(kint_b[b]))
+
+
+def test_pallas_sketch_backend_end_to_end():
+    """batch_query with the device sketching backend finds a planted
+    near-duplicate (identities may differ from exact on argmin near-ties,
+    so assert retrieval, not bit-parity)."""
+    rng = np.random.default_rng(7)
+    docs = _corpus(rng, n_docs=4, vocab=60, n=80)
+    scheme = WeightedScheme(weight=WeightFn(tf="raw"), seed=9, k=8)
+    idx = AlignmentIndex(scheme=scheme).build(docs).freeze()
+    res = batch_query(idx, [docs[2][10:60].copy()], 0.5,
+                      sketch_backend="pallas")
+    assert any(a.text_id == 2 for a in res[0])
+
+
+# --------------------------------------------------------------------------
+# flat + sharded persistence of the frozen layout
+# --------------------------------------------------------------------------
+
+def test_frozen_state_dict_roundtrip_without_refreeze():
+    rng = np.random.default_rng(8)
+    docs = _corpus(rng)
+    idx = AlignmentIndex(scheme=MultisetScheme(seed=9, k=8)).build(docs)
+    idx.freeze()
+    clone = AlignmentIndex(scheme=MultisetScheme(seed=9, k=8))
+    clone.load_state_dict(idx.state_dict())
+    assert clone.is_frozen and not clone.tables
+    q = docs[0][2:40]
+    assert _blocks(query(clone, q, 0.5)) == _blocks(query(idx, q, 0.5))
+
+
+@pytest.mark.parametrize("kind", ["multiset", "weighted"])
+def test_sharded_frozen_save_restore_roundtrip(tmp_path, kind):
+    rng = np.random.default_rng(9)
+    docs = _corpus(rng, n_docs=9)
+    qs = _queries(rng, docs, n=4)
+    sharded = ShardedAlignmentIndex(scheme=SCHEMES[kind](),
+                                    n_shards=3).build(docs)
+    looped = [_blocks(sharded.query(q, 0.5)) for q in qs]
+    sharded.freeze()
+    assert [_blocks(r) for r in sharded.batch_query(qs, 0.5)] == looped
+    sharded.save(tmp_path)
+
+    restored = ShardedAlignmentIndex(scheme=SCHEMES[kind](), n_shards=3)
+    lost = restored.restore(tmp_path)
+    assert lost == [] and restored.is_frozen
+    assert [_blocks(r) for r in restored.batch_query(qs, 0.5)] == looped

@@ -1,6 +1,5 @@
 """Pallas kernels (interpret=True) vs pure-jnp oracles: shape/dtype sweeps."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,6 +1,7 @@
 """Property-based tests (hypothesis) for the system's invariants."""
 
 import numpy as np
+import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
@@ -10,6 +11,8 @@ from repro.core import (ICWS, MixHash, UniversalHash, WeightFn,
                         minhash_gid_grid_icws, minhash_gid_grid_multiset,
                         monotonic_partition, validate_partition)
 from repro.core.hashing import MERSENNE61, mod_m61, mulmod_m61
+
+pytestmark = pytest.mark.slow          # tier-2: many-example property runs
 
 texts = st.lists(st.integers(min_value=0, max_value=6), min_size=1,
                  max_size=36)

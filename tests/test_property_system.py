@@ -8,11 +8,14 @@ import math
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.models.layers import (attention, moe_dense, moe_scatter,
                                  repeat_kv)
 from repro.sharding import resolve_spec
+
+pytestmark = pytest.mark.slow          # tier-2: many-example property runs
 
 
 class FakeMesh:

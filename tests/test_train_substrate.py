@@ -9,13 +9,14 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.data import (ContaminationChecker, DedupFilter, HashWordTokenizer,
-                        default_scheme, make_training_data, synthetic_corpus)
-from repro.models import RunFlags
+from repro.data import (ContaminationChecker, DedupFilter,
+                        HashWordTokenizer, default_scheme)
 from repro.train import OptConfig, adamw_update, init_opt_state, lr_at
 from repro.train.checkpoint import (latest_step, restore_checkpoint,
                                     save_checkpoint)
 from repro.train.loop import Trainer, TrainerConfig
+
+pytestmark = pytest.mark.slow          # tier-2: full trainer-loop runs
 
 
 # --------------------------------------------------------------------------
