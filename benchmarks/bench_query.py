@@ -12,8 +12,11 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import AlignmentIndex, batch_query, query
-from repro.data.dedup import default_scheme
+import tempfile
+from pathlib import Path
+
+from repro.core import IndexBuilder, SearchIndex, batch_query, make_scheme, \
+    query
 
 from .common import print_table, save_result, timed, zipf_text
 
@@ -27,17 +30,17 @@ def run(quick: bool = True) -> dict:
     k = 8
     sizes = [4, 16] if quick else [4, 16, 64]
     for n_docs in sizes:
-        scheme = default_scheme("multiset", seed=31, k=k)
+        scheme = make_scheme("multiset", seed=31, k=k)
         docs = [zipf_text(1200, seed=300 + i) for i in range(n_docs)]
-        idx = AlignmentIndex(scheme=scheme).build(docs)
+        idx = IndexBuilder(scheme=scheme).build(docs)
         qtext = docs[0][100:220].copy()
         res, t = timed(lambda: query(idx, qtext, 0.6), repeat=3)
         rows_sz.append({"docs": n_docs, "windows": idx.num_windows,
                         "query_s": t, "hits": len(res)})
 
-    scheme = default_scheme("multiset", seed=32, k=k)
+    scheme = make_scheme("multiset", seed=32, k=k)
     docs = [zipf_text(1500, seed=400 + i) for i in range(8)]
-    idx = AlignmentIndex(scheme=scheme).build(docs)
+    idx = IndexBuilder(scheme=scheme).build(docs)
     qtext = docs[3][200:320].copy()
     for theta in (0.3, 0.6, 0.9):
         res, t = timed(lambda: query(idx, qtext, theta), repeat=3)
@@ -49,13 +52,11 @@ def run(quick: bool = True) -> dict:
 
     # ---- frozen CSR layout vs dict layout + batched query engine ----------
     # serving configuration: the paper's default sketch width (k = 16)
-    scheme = default_scheme("multiset", seed=33, k=16)
+    scheme = make_scheme("multiset", seed=33, k=16)
     n_docs = 24 if quick else 64
     docs = [zipf_text(900, seed=500 + i) for i in range(n_docs)]
-    dict_idx = AlignmentIndex(scheme=scheme).build(docs)
-    frozen_idx = AlignmentIndex(scheme=scheme)
-    frozen_idx.load_state_dict(dict_idx.state_dict())
-    frozen_idx.freeze()
+    dict_idx = IndexBuilder(scheme=scheme).build(docs)
+    frozen_idx = dict_idx.freeze()
     dict_bytes, frozen_bytes = dict_idx.nbytes(), frozen_idx.nbytes()
 
     theta = 0.6
@@ -75,6 +76,21 @@ def run(quick: bool = True) -> dict:
          "query_s": t_frozen},
     ]
 
+    # save -> mmap-load -> query: the versioned-store serving path (PR 2);
+    # arrays stay on disk and page in through the OS cache
+    with tempfile.TemporaryDirectory() as tmp:
+        store = str(Path(tmp) / "idx")
+        _, t_save = timed(lambda: frozen_idx.save(store))
+        mmap_idx, t_load = timed(lambda: SearchIndex.load(store, mmap=True))
+        mmap_res, t_mmap = timed(lambda: query(mmap_idx, q1, theta), repeat=3)
+        mmap_equal = _blocks(mmap_res) == _blocks(query(frozen_idx, q1, theta))
+        rows_frozen.append({"layout": "mmap_store",
+                            "index_MB": frozen_bytes / 1e6,
+                            "query_s": t_mmap})
+        rows_mmap = [{"save_s": t_save, "load_s": t_load, "query_s": t_mmap,
+                      "mmap_backed": mmap_idx.is_mmap(),
+                      "equal": mmap_equal}]
+
     batch_sizes = [1, 4, 16] if quick else [1, 4, 16, 64]
     rows_batch, speedup_at, equal_all = [], {}, True
     for bs in batch_sizes:
@@ -92,7 +108,8 @@ def run(quick: bool = True) -> dict:
 
     print_table("query latency vs corpus size (theta=0.6)", rows_sz)
     print_table("query latency vs theta", rows_theta)
-    print_table("index layout: dict vs frozen CSR", rows_frozen)
+    print_table("index layout: dict vs frozen CSR vs mmap store", rows_frozen)
+    print_table("save -> mmap-load -> query (versioned store)", rows_mmap)
     print_table("batched query engine vs per-query loop (theta=0.6)",
                 rows_batch)
     claims = {
@@ -103,8 +120,11 @@ def run(quick: bool = True) -> dict:
         "frozen_index_smaller_than_dict": frozen_bytes < dict_bytes,
         "batched_equals_looped": bool(equal_all),
         "batched_speedup_ge_3x_at_16": speedup_at[16] >= 3.0,
+        "mmap_store_serves_identically": bool(mmap_equal)
+        and bool(rows_mmap[0]["mmap_backed"]),
     }
     rec = {"vs_size": rows_sz, "vs_theta": rows_theta,
-           "layouts": rows_frozen, "batched": rows_batch, "claims": claims}
+           "layouts": rows_frozen, "mmap_store": rows_mmap,
+           "batched": rows_batch, "claims": claims}
     save_result("query", rec)
     return rec

@@ -12,10 +12,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Aligner
 from repro.configs import get_config
-from repro.core import AlignmentIndex, query
-from repro.data import PackedDataset, default_scheme, synthetic_corpus, \
-    HashWordTokenizer
+from repro.data import PackedDataset, synthetic_corpus, HashWordTokenizer
 from repro.models import RunFlags, decode_step, init_params, prefill
 from repro.train import OptConfig, init_opt_state, make_train_step
 
@@ -48,9 +47,7 @@ def main():
             print(f"step {i+1} loss {float(m['loss']):.3f}")
 
     # index the training corpus with the paper's structure
-    index = AlignmentIndex(scheme=default_scheme("multiset", seed=5, k=24))
-    for d in train_docs:
-        index.add_text(d)
+    aligner = Aligner.build(train_docs, similarity="multiset", seed=5, k=24)
 
     # greedy-decode continuations of the secret prefix
     prompt = jnp.asarray(secret[:8][None, :], jnp.int32)
@@ -66,7 +63,7 @@ def main():
     gen = np.asarray(out_tokens, np.int64)
 
     overlap = np.mean(gen[:len(secret) - 8] == secret[8:8 + len(gen)])
-    hits = query(index, gen, 0.5)
+    hits = aligner.find(gen, 0.5)
     mem_docs = {h.text_id for h in hits}
     print(f"\ngenerated 40 tokens; token-overlap with memorized doc: "
           f"{overlap:.0%}")

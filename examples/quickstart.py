@@ -1,13 +1,13 @@
-"""Quickstart: build a weighted-Jaccard alignment index over a small corpus
-and find every subsequence aligned with a query (the paper's Definition 1).
+"""Quickstart: build a TF-IDF weighted-Jaccard alignment index over a small
+corpus and find every subsequence aligned with a query (the paper's
+Definition 1) — three calls on the `Aligner` facade: build, find, save/load.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
+import tempfile
 
-from repro.core import AlignmentIndex, WeightedScheme, query
-from repro.core.weights import WeightFn
-from repro.data import HashWordTokenizer
+from repro.api import Aligner
 
 CORPUS = [
     "the quick brown fox jumps over the lazy dog and then naps in the sun",
@@ -20,26 +20,14 @@ QUERY = "the quick brown fox jumps over the lazy dog"
 
 
 def main():
-    tok = HashWordTokenizer(vocab=32_000)
-    docs = tok.encode_batch(CORPUS)
+    # one call: tokenize, fit TF-IDF weights from the corpus, build the
+    # k inverted indexes of compact windows
+    aligner = Aligner.build(CORPUS, similarity="tfidf", k=32)
+    print(f"indexed {aligner.num_docs} docs, {aligner.num_windows} compact "
+          f"windows (k={aligner.config.k})")
 
-    # TF-IDF weighted Jaccard: raw-count TF x smooth IDF over this corpus
-    doc_freq = {}
-    for d in docs:
-        for t in set(d.tolist()):
-            doc_freq[t] = doc_freq.get(t, 0) + 1
-    weight = WeightFn(tf="raw", idf="smooth", n_docs=len(docs),
-                      doc_freq=doc_freq)
-    scheme = WeightedScheme(weight=weight, seed=0, k=32)
-
-    index = AlignmentIndex(scheme=scheme, method="mono_active")
-    index.build(docs)
-    print(f"indexed {index.num_texts} docs, {index.num_windows} compact "
-          f"windows (k={scheme.k})")
-
-    q = tok.encode(QUERY)
     for theta in (0.8, 0.5, 0.3):
-        hits = query(index, q, theta)
+        hits = aligner.find(QUERY, theta)
         print(f"\ntheta={theta}: {len(hits)} aligned text(s)")
         for h in hits:
             il, ih, jl, jh = h.blocks[0]
@@ -48,8 +36,20 @@ def main():
                   f"~ \"{' '.join(words[:12])}...\"")
 
     # sanity: doc 0 contains the query verbatim -> must align at theta=0.8
-    assert any(h.text_id == 0 for h in query(index, q, 0.8))
+    assert any(h.text_id == 0 for h in aligner.find(QUERY, 0.8))
     print("\nOK: verbatim container found at theta=0.8")
+
+    # build -> serve: persist the frozen CSR layout and serve it back
+    # memory-mapped (a >RAM corpus would page windows in on demand)
+    with tempfile.TemporaryDirectory() as store:
+        aligner.save(store)
+        server = Aligner.load(store, mmap=True)
+        batch = server.find_batch([QUERY, CORPUS[2]], theta=0.5)
+        assert [[h.text_id for h in r] for r in batch] == \
+            [[h.text_id for h in aligner.find(q, 0.5)]
+             for q in (QUERY, CORPUS[2])]
+        print(f"OK: saved -> mmap-loaded -> served {len(batch)} queries "
+              f"block-identically ({server!r})")
 
 
 if __name__ == "__main__":

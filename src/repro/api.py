@@ -1,0 +1,284 @@
+"""`repro.api` — the one-object service facade over the paper's pipeline.
+
+The workload is index-once/query-many: build k inverted indexes of compact
+windows over a corpus, then serve threshold-θ alignment queries.  The
+:class:`Aligner` makes that lifecycle explicit::
+
+    from repro.api import Aligner
+
+    aligner = Aligner.build(corpus, similarity="tfidf", k=32)   # build
+    hits = aligner.find(query, theta=0.8)                       # query
+    aligner.save("idx_dir")                                     # freeze+persist
+
+    server = Aligner.load("idx_dir", mmap=True)                 # serve (mmap)
+    results = server.find_batch(queries, theta=0.8)
+
+``build`` fits the weight function from the corpus (``WeightFn.fit``),
+constructs the sketch scheme through the :func:`repro.core.make_scheme`
+registry, and indexes every document — sharded across
+:class:`~repro.core.sharded_index.ShardedAlignmentIndex` when
+``shards > 1``.  ``save`` freezes the dict build tables into immutable CSR
+``SearchIndex`` arrays and writes the versioned directory store;
+``load(mmap=True)`` maps those arrays back with ``np.load(mmap_mode="r")``
+so a larger-than-RAM corpus serves queries through the OS page cache.
+
+Documents and queries may be token arrays or plain strings — strings are
+encoded with the (deterministic, stateless) tokenizer, which round-trips
+through the store manifest.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from pathlib import Path
+
+import numpy as np
+
+from .core import make_scheme, query as _query, batch_query as _batch_query
+from .core.builder import IndexBuilder
+from .core.query import Alignment
+from .core.search import SearchIndex
+from .core.sharded_index import ShardedAlignmentIndex
+from .core.store import load_index, read_manifest, save_index
+from .core.weights import WeightFn
+
+_ALIGNER_META = "aligner.json"
+
+
+@dataclass(frozen=True)
+class AlignerConfig:
+    """Everything ``Aligner.build`` needs besides the corpus.
+
+    similarity: "tfidf" (corpus-fitted TF-IDF weighted Jaccard, the
+        default), "weighted" (TF-only weighted Jaccard, corpus-free), or
+        "multiset" (unweighted multi-set Jaccard).
+    k: sketch width (number of hash functions / inverted tables).
+    shards: >1 builds a sharded index (per-shard checkpoints, fan-out).
+    method: compact-window partitioner ("mono_active", "mono_all",
+        "allalign").
+    tf / idf: weight-function kinds (Table 1); ``idf=None`` picks the
+        similarity's default ("smooth" for tfidf, "unary" for weighted).
+    family: multiset hash family ("universal" or "mix").
+    """
+
+    similarity: str = "tfidf"
+    k: int = 16
+    shards: int = 1
+    method: str = "mono_active"
+    seed: int = 0
+    tf: str = "raw"
+    idf: str | None = None
+    family: str = "universal"
+
+    def make_scheme(self, corpus=None):
+        idf = self.idf or {"tfidf": "smooth"}.get(self.similarity, "unary")
+        return make_scheme(self.similarity, seed=self.seed, k=self.k,
+                           tf=self.tf, idf=idf, family=self.family,
+                           corpus=corpus)
+
+
+class Aligner:
+    """Build→serve facade: index a corpus once, serve alignment queries.
+
+    Construct via :meth:`build` (fresh index) or :meth:`load` (saved
+    store); the raw constructor wires pre-built parts together and is
+    mostly internal.
+    """
+
+    def __init__(self, index, *, config: AlignerConfig | None = None,
+                 tokenizer=None):
+        self._index = index
+        self.config = config or AlignerConfig()
+        self.tokenizer = tokenizer
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def build(cls, corpus, *, similarity: str = "tfidf", k: int = 16,
+              shards: int = 1, method: str = "mono_active", seed: int = 0,
+              tf: str = "raw", idf: str | None = None,
+              family: str = "universal", tokenizer=None,
+              config: AlignerConfig | None = None) -> "Aligner":
+        """Fit weights from ``corpus``, construct the scheme, and index
+        every document.  ``corpus`` is an iterable of token arrays or
+        strings (strings are tokenized; pass ``tokenizer=`` to control
+        how, else a default ``HashWordTokenizer`` is used)."""
+        if config is None:
+            config = AlignerConfig(similarity=similarity, k=k, shards=shards,
+                                   method=method, seed=seed, tf=tf, idf=idf,
+                                   family=family)
+        docs = list(corpus)
+        if docs and isinstance(docs[0], str) and tokenizer is None:
+            from .data.tokenizer import HashWordTokenizer
+            tokenizer = HashWordTokenizer()
+        self = cls(None, config=config, tokenizer=tokenizer)
+        token_docs = [self._tokens(d) for d in docs]
+        scheme = config.make_scheme(corpus=token_docs)
+        if config.shards > 1:
+            self._index = ShardedAlignmentIndex(
+                scheme=scheme, n_shards=config.shards, method=config.method)
+        else:
+            self._index = IndexBuilder(scheme=scheme, method=config.method)
+        self._index.build(token_docs)
+        return self
+
+    # -- lifecycle ----------------------------------------------------------
+
+    @property
+    def is_frozen(self) -> bool:
+        return self._index.is_frozen
+
+    def add(self, text) -> int:
+        """Index one more document (build stage only); returns its doc id."""
+        if self.is_frozen:
+            raise RuntimeError(
+                "this Aligner serves a frozen index; adds belong to the "
+                "build stage — build a new index (Aligner.build) to grow "
+                "the corpus")
+        return self._index.add_text(self._tokens(text))
+
+    def freeze(self) -> "Aligner":
+        """Finalize the build: compact every table into the immutable CSR
+        serving layout (idempotent)."""
+        self._index = self._index.freeze()
+        return self
+
+    # -- queries ------------------------------------------------------------
+
+    def find(self, text, theta: float) -> list[Alignment]:
+        """All indexed subsequences aligned with ``text`` at estimated
+        (weighted) Jaccard >= theta (paper Definition 1)."""
+        tokens = self._tokens(text)
+        if isinstance(self._index, ShardedAlignmentIndex):
+            return self._index.query(tokens, theta)
+        return _query(self._index, tokens, theta)
+
+    def find_batch(self, texts, theta: float, *,
+                   backend: str = "exact") -> list[list[Alignment]]:
+        """Batched :meth:`find` (the serving path — one vectorized probe
+        per coordinate).  ``backend="pallas"`` sketches weighted queries
+        on-device in one fused launch."""
+        tokens = [self._tokens(t) for t in texts]
+        if isinstance(self._index, ShardedAlignmentIndex):
+            return self._index.batch_query(tokens, theta, backend=backend)
+        return _batch_query(self._index, tokens, theta,
+                            sketch_backend=backend)
+
+    # -- persistence --------------------------------------------------------
+
+    def save(self, path) -> "Aligner":
+        """Freeze (if still building) and write the versioned store: JSON
+        manifests + raw ``.npy`` arrays per frozen table, one directory per
+        index (per shard when sharded)."""
+        self.freeze()
+        root = Path(path)
+        if isinstance(self._index, ShardedAlignmentIndex):
+            self._index.save(root)
+        else:
+            save_index(self._index, root)
+        meta = {"similarity": self.config.similarity,
+                "tokenizer": _tokenizer_spec(self.tokenizer)}
+        (root / _ALIGNER_META).write_text(json.dumps(meta))
+        return self
+
+    @classmethod
+    def load(cls, path, *, mmap: bool = True) -> "Aligner":
+        """Load a saved store and serve from it.  ``mmap=True`` (default)
+        maps the table arrays read-only instead of materializing them —
+        the serving mode for larger-than-RAM indexes."""
+        root = Path(path)
+        meta = {}
+        if (root / _ALIGNER_META).exists():
+            meta = json.loads((root / _ALIGNER_META).read_text())
+        if (root / "meta.json").exists():               # sharded layout
+            smeta = json.loads((root / "meta.json").read_text())
+            from .core import scheme_from_spec
+            manifest_scheme = smeta["scheme"]
+            index = ShardedAlignmentIndex(
+                scheme=scheme_from_spec(manifest_scheme),
+                n_shards=smeta["n_shards"], method=smeta["method"])
+            index.restore(root, missing_ok=False, mmap=mmap)
+        else:                                           # flat layout
+            index = load_index(root, mmap=mmap)
+            manifest_scheme = read_manifest(root)["scheme"]
+        weight = manifest_scheme.get("weight") or {}
+        config = AlignerConfig(
+            similarity=meta.get("similarity", manifest_scheme["kind"]),
+            k=manifest_scheme["k"], seed=manifest_scheme["seed"],
+            method=index.method,
+            tf=weight.get("tf", "raw"), idf=weight.get("idf"),
+            family=manifest_scheme.get("family", "universal"),
+            shards=(index.n_shards
+                    if isinstance(index, ShardedAlignmentIndex) else 1))
+        return cls(index, config=config,
+                   tokenizer=_tokenizer_from_spec(meta.get("tokenizer")))
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def scheme(self):
+        return self._index.scheme
+
+    @property
+    def num_docs(self) -> int:
+        if isinstance(self._index, ShardedAlignmentIndex):
+            return len(self._index.doc_map)
+        return self._index.num_texts
+
+    @property
+    def num_windows(self) -> int:
+        return self._index.num_windows
+
+    def nbytes(self) -> int:
+        return self._index.nbytes()
+
+    def __repr__(self) -> str:
+        stage = "serve" if self.is_frozen else "build"
+        return (f"Aligner(similarity={self.config.similarity!r}, "
+                f"k={self.config.k}, shards={self.config.shards}, "
+                f"docs={self.num_docs}, windows={self.num_windows}, "
+                f"stage={stage!r})")
+
+    # -- helpers ------------------------------------------------------------
+
+    def _tokens(self, text) -> np.ndarray:
+        if isinstance(text, str):
+            if self.tokenizer is None:
+                # inventing a tokenizer here would encode the query with a
+                # vocabulary the index was never built with (silent garbage)
+                raise ValueError(
+                    "this Aligner has no tokenizer (the corpus was token "
+                    "arrays, or the build tokenizer did not round-trip "
+                    "through the store); pass token arrays, or set "
+                    ".tokenizer to the one used at build time")
+            return np.asarray(self.tokenizer.encode(text), np.int64)
+        return np.asarray(text, np.int64)
+
+
+def _tokenizer_spec(tok) -> dict | None:
+    from .data.tokenizer import ByteTokenizer, HashWordTokenizer
+    if tok is None:
+        return None
+    if isinstance(tok, HashWordTokenizer):
+        return {"kind": "hash_word", "vocab": tok.vocab,
+                "lowercase": tok.lowercase}
+    if isinstance(tok, ByteTokenizer):
+        return {"kind": "byte"}
+    return None          # custom tokenizers don't round-trip; pass anew
+
+
+def _tokenizer_from_spec(spec: dict | None):
+    if not spec:
+        return None
+    from .data.tokenizer import ByteTokenizer, HashWordTokenizer
+    if spec["kind"] == "hash_word":
+        return HashWordTokenizer(vocab=spec["vocab"],
+                                 lowercase=spec["lowercase"])
+    if spec["kind"] == "byte":
+        return ByteTokenizer()
+    return None
+
+
+__all__ = ["Aligner", "AlignerConfig", "WeightFn", "Alignment",
+           "SearchIndex", "IndexBuilder"]

@@ -1,10 +1,16 @@
 # The paper's primary contribution: near-duplicate text alignment under
 # weighted Jaccard similarity via MonoActive compact-window partitioning.
+#
+# Build→serve lifecycle (PR 2): IndexBuilder (mutable dict tables) freezes
+# into SearchIndex (immutable CSR tables + versioned mmap-able store);
+# AlignmentIndex remains as a deprecation shim over the pair, and
+# repro.api.Aligner is the one-object facade.
 from .allalign import allalign_icws, allalign_multiset, allalign_partition
+from .builder import IndexBuilder
 from .frozen import FrozenTable
 from .hashing import MixHash, UniversalHash
 from .icws import ICWS
-from .index import AlignmentIndex, MultisetScheme, WeightedScheme
+from .index import AlignmentIndex
 from .keys import (KeySet, count_active_hashes, generate_keys_icws,
                    generate_keys_multiset, occurrence_lists)
 from .oracle import (jaccard_multiset, jaccard_weighted,
@@ -13,12 +19,18 @@ from .oracle import (jaccard_multiset, jaccard_weighted,
 from .partition import (Partition, mono_active_icws, mono_active_multiset,
                         mono_all_icws, mono_all_multiset, monotonic_partition)
 from .query import Alignment, batch_query, estimate_similarity, query
+from .schemes import (MultisetScheme, WeightedScheme, make_scheme,
+                      scheme_from_spec, scheme_spec)
+from .search import SearchIndex
 from .sharded_index import ShardedAlignmentIndex
+from .store import load_index, read_manifest, save_index
 from .weights import WeightFn
 
 __all__ = [
     "ICWS", "UniversalHash", "MixHash", "WeightFn", "KeySet", "Partition",
-    "AlignmentIndex", "MultisetScheme", "WeightedScheme", "Alignment",
+    "AlignmentIndex", "IndexBuilder", "SearchIndex", "MultisetScheme",
+    "WeightedScheme", "make_scheme", "scheme_spec", "scheme_from_spec",
+    "Alignment",
     "generate_keys_multiset", "generate_keys_icws", "occurrence_lists",
     "count_active_hashes", "monotonic_partition", "mono_all_multiset",
     "mono_active_multiset", "mono_all_icws", "mono_active_icws",
@@ -26,4 +38,5 @@ __all__ = [
     "minhash_gid_grid_multiset", "minhash_gid_grid_icws", "validate_partition",
     "jaccard_multiset", "jaccard_weighted", "query", "estimate_similarity",
     "FrozenTable", "batch_query", "ShardedAlignmentIndex",
+    "save_index", "load_index", "read_manifest",
 ]

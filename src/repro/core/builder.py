@@ -1,0 +1,112 @@
+"""Mutable build-side index (Algorithm 1): dict tables, incremental adds.
+
+``IndexBuilder`` is the *build* half of the build→serve lifecycle.  It
+partitions each added text under all k hash functions and appends the
+compact windows to per-coordinate dict tables
+``key -> list[(tid, a, b, c, d)]`` — ideal for incremental construction,
+terrible for serving.  ``freeze()`` hands off to the immutable
+:class:`repro.core.search.SearchIndex` (contiguous CSR arrays, vectorized
+probes, mmap-able persistence); the builder itself never changes
+personality and stays usable afterwards.
+
+``query``/``batch_query`` accept a builder directly (dict-table probes), so
+admit-as-you-go workloads like :class:`repro.data.dedup.DedupFilter` never
+need to freeze.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable
+
+import numpy as np
+
+from .allalign import allalign_partition
+from .frozen import FrozenTable, dict_tables_nbytes
+from .partition import monotonic_partition
+
+_METHODS = {
+    "mono_all": (monotonic_partition, False),
+    "mono_active": (monotonic_partition, True),
+    "allalign": (allalign_partition, False),
+}
+
+
+@dataclass
+class IndexBuilder:
+    """k inverted dict-tables of compact windows over a growing collection."""
+
+    scheme: object
+    method: str = "mono_active"
+    tables: list[dict] = field(default_factory=list)
+    num_texts: int = 0
+    num_windows: int = 0
+    text_lengths: list[int] = field(default_factory=list)
+
+    def __post_init__(self):
+        if not self.tables:
+            self.tables = [dict() for _ in range(self.scheme.k)]
+
+    # the query engine duck-types on this flag to pick its probe path
+    @property
+    def is_frozen(self) -> bool:
+        return False
+
+    def add_text(self, tokens) -> int:
+        """Partition one text under all k hash functions and index it."""
+        tid = self.num_texts
+        self.num_texts += 1
+        self.text_lengths.append(len(tokens))
+        partition_fn, active = _METHODS[self.method]
+        from .keys import occurrence_lists
+        occ = occurrence_lists(np.asarray(tokens, dtype=np.int64))
+        for i in range(self.scheme.k):
+            keys = self.scheme.keys(tokens, i, active, occ=occ)
+            part = partition_fn(keys)
+            self.num_windows += len(part)
+            table = self.tables[i]
+            for w in range(len(part)):
+                v = part.gid_key[int(part.gid[w])]
+                table.setdefault(v, []).append(
+                    (tid, int(part.a[w]), int(part.b[w]),
+                     int(part.c[w]), int(part.d[w])))
+        return tid
+
+    def build(self, texts: Iterable) -> "IndexBuilder":
+        for tokens in texts:
+            self.add_text(tokens)
+        return self
+
+    def lookup(self, i: int, v):
+        """Postings of hash identity ``v`` in table ``i``."""
+        return self.tables[i].get(v, [])
+
+    def nbytes(self) -> int:
+        """Resident size estimate (recursive ``sys.getsizeof``)."""
+        return dict_tables_nbytes(self.tables)
+
+    def freeze(self):
+        """Compact into an immutable :class:`SearchIndex` (build→serve
+        handoff).  The builder is left untouched; callers that are done
+        building simply drop it."""
+        from .search import SearchIndex
+        return SearchIndex(
+            scheme=self.scheme, method=self.method,
+            tables=[FrozenTable.from_dict(t) for t in self.tables],
+            num_texts=self.num_texts, num_windows=self.num_windows,
+            text_lengths=list(self.text_lengths))
+
+    # -- persistence (build-time checkpoints; serve-side uses the store) ----
+
+    def state_dict(self) -> dict:
+        return {"method": self.method, "num_texts": self.num_texts,
+                "num_windows": self.num_windows,
+                "text_lengths": list(self.text_lengths),
+                "tables": self.tables}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.method = state["method"]
+        self.num_texts = state["num_texts"]
+        self.num_windows = state["num_windows"]
+        self.text_lengths = list(state["text_lengths"])
+        self.tables = state["tables"]

@@ -1,257 +1,125 @@
-"""Indexing (Algorithm 1): k inverted indexes of compact windows.
+"""Deprecated: the pre-PR-2 dual-personality ``AlignmentIndex``.
 
-The index maps, per sketch coordinate i ∈ [k], a hash-value identity to the
-list of compact windows carrying it: I_i[v] -> [(text_id, a, b, c, d), ...].
+The index API was split into an explicit build→serve lifecycle:
 
-Schemes:
-  * ``MultisetScheme``  — integer universal min-hash (§2), index key int(h).
-  * ``WeightedScheme``  — ICWS (§5), index key (token, k_int).
+  * :class:`repro.core.builder.IndexBuilder` — mutable dict tables,
+    ``add_text``/``build``.
+  * :class:`repro.core.search.SearchIndex` — immutable CSR tables,
+    mmap-able persistence (``save``/``load``), produced by
+    ``IndexBuilder.freeze()``.
+  * :class:`repro.api.Aligner` — the one-object facade most callers want.
 
-Partition methods: "mono_active" (default), "mono_all", "allalign".
+``AlignmentIndex`` remains as a thin shim so existing code and pickled
+checkpoints keep working: it delegates to an internal ``IndexBuilder``
+until ``freeze()``, then to a ``SearchIndex``, preserving the legacy
+surface (``tables``/``frozen`` attributes, ``state_dict`` round-trip, the
+``RuntimeError`` on post-freeze ``add_text``).  New code should use the
+split types or the facade directly.
+
+``MultisetScheme``/``WeightedScheme`` moved to :mod:`repro.core.schemes`
+and are re-exported here unchanged.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Iterable
+import warnings
 
-import numpy as np
-
-from .allalign import allalign_partition
-from .frozen import FrozenTable, dict_tables_nbytes
-from .hashing import UniversalHash
-from .icws import ICWS
-from .keys import generate_keys_icws, generate_keys_multiset
-from .partition import monotonic_partition
-from .weights import WeightFn
+from .builder import _METHODS, IndexBuilder  # noqa: F401  (re-export)
+from .schemes import MultisetScheme, WeightedScheme  # noqa: F401
+from .search import SearchIndex
 
 
-@dataclass
-class MultisetScheme:
-    """Sketch scheme for multi-set Jaccard (standard min-hash over (t, x)).
-
-    family="universal" is the paper's linear family (§2.2).  family="mix"
-    (splitmix64) is our beyond-paper variant: the linear family is an
-    arithmetic progression in x, which empirically inflates the number of
-    active hash values (≈1.7× at f=256) over the idealized i.i.d. analysis
-    of Lemma 11 — splitmix removes that structure, shrinking keys, windows,
-    and thus the index (see EXPERIMENTS.md §Beyond-paper).
-    """
-
-    seed: int = 0
-    k: int = 16
-    family: str = "universal"
-    hashers: list = field(init=False)
-
-    def __post_init__(self):
-        from .hashing import MixHash
-        cls = {"universal": UniversalHash, "mix": MixHash}[self.family]
-        self.hashers = cls.from_seed(self.seed, self.k)
-
-    def keys(self, tokens, i: int, active: bool, occ=None):
-        return generate_keys_multiset(tokens, self.hashers[i], active=active,
-                                      occ=occ)
-
-    def sketch(self, tokens) -> list:
-        """k min-hash identities of a whole text (Eq. 1)."""
-        from .keys import occurrence_lists
-        occ = occurrence_lists(np.asarray(tokens, dtype=np.int64))
-        out = []
-        for h in self.hashers:
-            best = None
-            for t, pos in occ.items():
-                hv = h(np.full(len(pos), t, dtype=np.int64),
-                       np.arange(1, len(pos) + 1))
-                m = int(hv.min())
-                if best is None or m < best:
-                    best = m
-            out.append(best)
-        return out
-
-    def sketch_batch(self, texts, *, backend: str = "exact") -> list[list]:
-        """Sketches of many texts; bit-identical to per-text ``sketch``
-        (integer hashes are exact on every backend, so ``backend`` is
-        accepted for signature parity and ignored).
-
-        One vectorized hash call per (text, hasher) over the flat (t, x)
-        grid instead of a Python loop per token — the batched query
-        engine's sketching path.
-        """
-        from .keys import _flat_grid, occurrence_lists
-        out = []
-        for tokens in texts:
-            occ = occurrence_lists(np.asarray(tokens, dtype=np.int64))
-            _toks, _fs, t_rep, x_rep, _bounds = _flat_grid(occ)
-            out.append([int(h(t_rep, x_rep).min()) for h in self.hashers])
-        return out
-
-
-@dataclass
-class WeightedScheme:
-    """Sketch scheme for weighted Jaccard (ICWS over (t, w(t, f)))."""
-
-    weight: WeightFn
-    seed: int = 0
-    k: int = 16
-    hashers: list[ICWS] = field(init=False)
-
-    def __post_init__(self):
-        self.hashers = ICWS.from_seed(self.seed, self.k)
-
-    def keys(self, tokens, i: int, active: bool, occ=None):
-        return generate_keys_icws(tokens, self.hashers[i], self.weight,
-                                  active=active, occ=occ)
-
-    def sketch(self, tokens) -> list:
-        from .keys import occurrence_lists
-        occ = occurrence_lists(np.asarray(tokens, dtype=np.int64))
-        toks = np.array(sorted(occ), dtype=np.int64)
-        freqs = np.array([len(occ[int(t)]) for t in toks], dtype=np.int64)
-        w = self.weight(toks, freqs)
-        out = []
-        for h in self.hashers:
-            t_star, k_star, _a = h.min_hash(toks, w)
-            out.append((t_star, k_star))
-        return out
-
-    def sketch_batch(self, texts, *, backend: str = "exact") -> list[list]:
-        """Sketches of many texts.
-
-        backend="exact"  — per-text float64 host math, bit-identical to
-        ``sketch`` (the default; what result-parity guarantees assume).
-        backend="pallas" — all texts through the fused ``icws_sketch_batch``
-        kernel in one launch (f32 device math; identities can differ from
-        the exact path only on argmin near-ties).
-        """
-        if backend == "pallas":
-            from ..kernels.ops import cws_sketch_batch
-            from .keys import occurrence_lists
-            token_lists, weight_lists = [], []
-            for tokens in texts:
-                occ = occurrence_lists(np.asarray(tokens, dtype=np.int64))
-                toks = np.array(sorted(occ), dtype=np.int64)
-                freqs = np.array([len(occ[int(t)]) for t in toks],
-                                 dtype=np.int64)
-                token_lists.append(toks)
-                weight_lists.append(self.weight(toks, freqs))
-            return cws_sketch_batch(self.seed, self.k, token_lists,
-                                    weight_lists)
-        return [self.sketch(t) for t in texts]
-
-
-_METHODS = {
-    "mono_all": (monotonic_partition, False),
-    "mono_active": (monotonic_partition, True),
-    "allalign": (allalign_partition, False),
-}
-
-
-@dataclass
 class AlignmentIndex:
-    """k inverted indexes of compact windows over a text collection.
+    """Deprecated facade over ``IndexBuilder`` + ``SearchIndex``.
 
-    Two storage regimes:
-
-    * **mutable** (after ``build``/``add_text``): each table is a Python
-      dict ``key -> list[(tid, a, b, c, d)]``.
-    * **frozen** (after ``freeze``): each table is a contiguous CSR
-      :class:`~repro.core.frozen.FrozenTable`; ``add_text`` is rejected and
-      lookups become vectorized ``searchsorted`` probes (~10x smaller
-      resident size, and the layout ``batch_query`` requires).
+    Starts in the build state; ``freeze()`` switches to an immutable
+    ``SearchIndex`` in place.  Prefer the split types (or ``repro.api.
+    Aligner``) in new code — they make the lifecycle explicit instead of
+    changing behavior at runtime.
     """
 
-    scheme: MultisetScheme | WeightedScheme
-    method: str = "mono_active"
-    tables: list[dict] = field(default_factory=list)
-    num_texts: int = 0
-    num_windows: int = 0
-    text_lengths: list[int] = field(default_factory=list)
-    frozen: list[FrozenTable] | None = None
+    def __init__(self, scheme=None, method: str = "mono_active", *,
+                 _impl=None):
+        if _impl is None:
+            _impl = IndexBuilder(scheme=scheme, method=method)
+        self._impl = _impl
+        warnings.warn(
+            "AlignmentIndex is deprecated; use repro.api.Aligner or the "
+            "IndexBuilder/SearchIndex pair (repro.core.builder/search)",
+            DeprecationWarning, stacklevel=2)
 
-    def __post_init__(self):
-        if not self.tables and self.frozen is None:
-            self.tables = [dict() for _ in range(self.scheme.k)]
+    # -- lifecycle ----------------------------------------------------------
 
     @property
     def is_frozen(self) -> bool:
-        return self.frozen is not None
+        return self._impl.is_frozen
 
     def freeze(self) -> "AlignmentIndex":
-        """Compact every dict table into a CSR FrozenTable (idempotent).
-
-        Drops the dict tables afterwards — freezing is the build->serve
-        handoff, not a view.
-        """
-        if self.frozen is None:
-            self.frozen = [FrozenTable.from_dict(t) for t in self.tables]
-            self.tables = []
+        """Compact into the CSR serving layout (idempotent).  Drops the
+        dict tables — freezing is the build->serve handoff, not a view."""
+        if not self._impl.is_frozen:
+            self._impl = self._impl.freeze()
         return self
 
-    def nbytes(self) -> int:
-        """Resident size of the inverted tables (frozen: exact array bytes;
-        mutable: recursive ``sys.getsizeof`` estimate)."""
-        if self.frozen is not None:
-            return sum(t.nbytes for t in self.frozen)
-        return dict_tables_nbytes(self.tables)
-
     def add_text(self, tokens) -> int:
-        """Partition one text under all k hash functions and index it."""
-        if self.frozen is not None:
+        if self._impl.is_frozen:
             raise RuntimeError("index is frozen; freeze() is a build->serve "
                                "handoff and does not support further adds")
-        tid = self.num_texts
-        self.num_texts += 1
-        self.text_lengths.append(len(tokens))
-        partition_fn, active = _METHODS[self.method]
-        from .keys import occurrence_lists
-        occ = occurrence_lists(np.asarray(tokens, dtype=np.int64))
-        for i in range(self.scheme.k):
-            keys = self.scheme.keys(tokens, i, active, occ=occ)
-            part = partition_fn(keys)
-            self.num_windows += len(part)
-            table = self.tables[i]
-            for w in range(len(part)):
-                v = part.gid_key[int(part.gid[w])]
-                table.setdefault(v, []).append(
-                    (tid, int(part.a[w]), int(part.b[w]),
-                     int(part.c[w]), int(part.d[w])))
-        return tid
+        return self._impl.add_text(tokens)
 
-    def build(self, texts: Iterable) -> "AlignmentIndex":
+    def build(self, texts) -> "AlignmentIndex":
         for tokens in texts:
             self.add_text(tokens)
         return self
 
-    def lookup(self, i: int, v):
-        """Postings of hash identity ``v`` in table ``i``: a list of
-        (tid, a, b, c, d) tuples (mutable) or an int32 (m, 5) row view
-        (frozen) — both iterate as 5-sequences."""
-        if self.frozen is not None:
-            return self.frozen[i].get(v)
-        return self.tables[i].get(v, [])
+    # -- legacy attribute surface ------------------------------------------
 
-    # -- persistence (used by the sharded/distributed index) ---------------
+    @property
+    def scheme(self):
+        return self._impl.scheme
+
+    @property
+    def method(self) -> str:
+        return self._impl.method
+
+    @property
+    def tables(self) -> list:
+        return [] if self._impl.is_frozen else self._impl.tables
+
+    @property
+    def frozen(self):
+        return self._impl.tables if self._impl.is_frozen else None
+
+    @property
+    def num_texts(self) -> int:
+        return self._impl.num_texts
+
+    @property
+    def num_windows(self) -> int:
+        return self._impl.num_windows
+
+    @property
+    def text_lengths(self) -> list[int]:
+        return self._impl.text_lengths
+
+    def lookup(self, i: int, v):
+        return self._impl.lookup(i, v)
+
+    def nbytes(self) -> int:
+        return self._impl.nbytes()
+
+    # -- persistence (legacy dict-state; the store format lives on
+    #    SearchIndex.save / repro.core.store) ------------------------------
 
     def state_dict(self) -> dict:
-        state = {
-            "method": self.method,
-            "num_texts": self.num_texts,
-            "num_windows": self.num_windows,
-            "text_lengths": self.text_lengths,
-            "tables": self.tables,
-        }
-        if self.frozen is not None:
-            state["frozen"] = [t.state_dict() for t in self.frozen]
-        return state
+        return self._impl.state_dict()
 
     def load_state_dict(self, state: dict) -> None:
-        self.method = state["method"]
-        self.num_texts = state["num_texts"]
-        self.num_windows = state["num_windows"]
-        self.text_lengths = list(state["text_lengths"])
-        self.tables = state["tables"]
         if state.get("frozen") is not None:
             # frozen arrays round-trip as-is — no re-freeze on restore
-            self.frozen = [FrozenTable.from_state(s) for s in state["frozen"]]
+            self._impl = SearchIndex.from_state(self._impl.scheme, state)
         else:
-            self.frozen = None
+            builder = IndexBuilder(scheme=self._impl.scheme,
+                                   method=state["method"])
+            builder.load_state_dict(state)
+            self._impl = builder

@@ -22,7 +22,6 @@ from dataclasses import dataclass
 import numpy as np
 
 from .frozen import _concat_ranges
-from .index import AlignmentIndex
 
 
 @dataclass
@@ -91,7 +90,7 @@ def _sweep_text(windows: list[tuple[int, int, int, int]], m: int
             for r, c0, c1 in zip(rs, cs, ce)]
 
 
-def query(index: AlignmentIndex, query_tokens, theta: float
+def query(index, query_tokens, theta: float
           ) -> list[Alignment]:
     """Near-duplicate text alignment (Definition 1) for one query."""
     k = index.scheme.k
@@ -119,7 +118,7 @@ def query(index: AlignmentIndex, query_tokens, theta: float
     return results
 
 
-def _gather_coord(index: AlignmentIndex, i: int, probe_keys: list
+def _gather_coord(index, i: int, probe_keys: list
                   ) -> tuple[np.ndarray, np.ndarray]:
     """All windows colliding with the B probe keys on coordinate ``i``:
     (query ids (M,), windows (M, 5) int64)."""
@@ -142,7 +141,7 @@ def _gather_coord(index: AlignmentIndex, i: int, probe_keys: list
     return np.concatenate(qid_chunks), np.concatenate(win_chunks)
 
 
-def batch_query(index: AlignmentIndex, queries, theta: float, *,
+def batch_query(index, queries, theta: float, *,
                 sketches: list[list] | None = None,
                 sketch_backend: str = "exact") -> list[list[Alignment]]:
     """Definition-1 alignment for a batch of queries (the serving path).
@@ -197,7 +196,7 @@ def batch_query(index: AlignmentIndex, queries, theta: float, *,
     return results
 
 
-def estimate_similarity(index: AlignmentIndex, query_tokens, data_tokens
+def estimate_similarity(index, query_tokens, data_tokens
                         ) -> float:
     """Sketch-estimated Jaccard between two full texts (Eq. 2 / Eq. 5)."""
     sq = index.scheme.sketch(query_tokens)

@@ -1,0 +1,239 @@
+"""Sketch schemes and the ``make_scheme`` registry.
+
+A *scheme* bundles the k hash functions of one similarity notion and knows
+how to (a) generate compact-window index keys for a text and (b) sketch a
+query.  Two families implement the paper:
+
+  * ``MultisetScheme``  — integer universal min-hash (§2) for multi-set
+    Jaccard; index key ``int(h)``.
+  * ``WeightedScheme``  — ICWS (§5) for weighted Jaccard; index key
+    ``(token, k_int)``.
+
+``make_scheme(similarity, ...)`` is the single construction point used by
+the :class:`repro.api.Aligner` facade and the data-plane filters:
+
+  * ``"multiset"`` — unweighted multi-set Jaccard.
+  * ``"weighted"`` — weighted Jaccard with a corpus-free weight function
+    (TF only; ``idf="unary"`` unless corpus stats are passed explicitly).
+  * ``"tfidf"``    — weighted Jaccard with a corpus-fitted TF-IDF weight
+    (requires ``corpus=`` so ``WeightFn.fit`` can count doc frequencies).
+
+Schemes round-trip through JSON (``scheme_spec`` / ``scheme_from_spec``) so
+the versioned index store (:mod:`repro.core.store`) can reconstruct the
+exact hash family when an index is loaded in a fresh process.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from .hashing import UniversalHash
+from .icws import ICWS
+from .keys import generate_keys_icws, generate_keys_multiset
+from .weights import WeightFn
+
+
+@dataclass
+class MultisetScheme:
+    """Sketch scheme for multi-set Jaccard (standard min-hash over (t, x)).
+
+    family="universal" is the paper's linear family (§2.2).  family="mix"
+    (splitmix64) is our beyond-paper variant: the linear family is an
+    arithmetic progression in x, which empirically inflates the number of
+    active hash values (≈1.7× at f=256) over the idealized i.i.d. analysis
+    of Lemma 11 — splitmix removes that structure, shrinking keys, windows,
+    and thus the index (see EXPERIMENTS.md §Beyond-paper).
+    """
+
+    seed: int = 0
+    k: int = 16
+    family: str = "universal"
+    hashers: list = field(init=False)
+
+    def __post_init__(self):
+        from .hashing import MixHash
+        cls = {"universal": UniversalHash, "mix": MixHash}[self.family]
+        self.hashers = cls.from_seed(self.seed, self.k)
+
+    def keys(self, tokens, i: int, active: bool, occ=None):
+        return generate_keys_multiset(tokens, self.hashers[i], active=active,
+                                      occ=occ)
+
+    def sketch(self, tokens) -> list:
+        """k min-hash identities of a whole text (Eq. 1)."""
+        from .keys import occurrence_lists
+        occ = occurrence_lists(np.asarray(tokens, dtype=np.int64))
+        out = []
+        for h in self.hashers:
+            best = None
+            for t, pos in occ.items():
+                hv = h(np.full(len(pos), t, dtype=np.int64),
+                       np.arange(1, len(pos) + 1))
+                m = int(hv.min())
+                if best is None or m < best:
+                    best = m
+            out.append(best)
+        return out
+
+    def sketch_batch(self, texts, *, backend: str = "exact") -> list[list]:
+        """Sketches of many texts; bit-identical to per-text ``sketch``
+        (integer hashes are exact on every backend, so ``backend`` is
+        accepted for signature parity and ignored).
+
+        One vectorized hash call per (text, hasher) over the flat (t, x)
+        grid instead of a Python loop per token — the batched query
+        engine's sketching path.
+        """
+        from .keys import _flat_grid, occurrence_lists
+        out = []
+        for tokens in texts:
+            occ = occurrence_lists(np.asarray(tokens, dtype=np.int64))
+            _toks, _fs, t_rep, x_rep, _bounds = _flat_grid(occ)
+            out.append([int(h(t_rep, x_rep).min()) for h in self.hashers])
+        return out
+
+
+@dataclass
+class WeightedScheme:
+    """Sketch scheme for weighted Jaccard (ICWS over (t, w(t, f)))."""
+
+    weight: WeightFn
+    seed: int = 0
+    k: int = 16
+    hashers: list[ICWS] = field(init=False)
+
+    def __post_init__(self):
+        self.hashers = ICWS.from_seed(self.seed, self.k)
+
+    def keys(self, tokens, i: int, active: bool, occ=None):
+        return generate_keys_icws(tokens, self.hashers[i], self.weight,
+                                  active=active, occ=occ)
+
+    def sketch(self, tokens) -> list:
+        from .keys import occurrence_lists
+        occ = occurrence_lists(np.asarray(tokens, dtype=np.int64))
+        toks = np.array(sorted(occ), dtype=np.int64)
+        freqs = np.array([len(occ[int(t)]) for t in toks], dtype=np.int64)
+        w = self.weight(toks, freqs)
+        out = []
+        for h in self.hashers:
+            t_star, k_star, _a = h.min_hash(toks, w)
+            out.append((t_star, k_star))
+        return out
+
+    def sketch_batch(self, texts, *, backend: str = "exact") -> list[list]:
+        """Sketches of many texts.
+
+        backend="exact"  — per-text float64 host math, bit-identical to
+        ``sketch`` (the default; what result-parity guarantees assume).
+        backend="pallas" — all texts through the fused ``icws_sketch_batch``
+        kernel in one launch (f32 device math; identities can differ from
+        the exact path only on argmin near-ties).
+        """
+        if backend == "pallas":
+            from ..kernels.ops import cws_sketch_batch
+            from .keys import occurrence_lists
+            token_lists, weight_lists = [], []
+            for tokens in texts:
+                occ = occurrence_lists(np.asarray(tokens, dtype=np.int64))
+                toks = np.array(sorted(occ), dtype=np.int64)
+                freqs = np.array([len(occ[int(t)]) for t in toks],
+                                 dtype=np.int64)
+                token_lists.append(toks)
+                weight_lists.append(self.weight(toks, freqs))
+            return cws_sketch_batch(self.seed, self.k, token_lists,
+                                    weight_lists)
+        return [self.sketch(t) for t in texts]
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable] = {}
+
+
+def register_scheme(name: str):
+    """Register a scheme factory under ``name`` (used by ``make_scheme``)."""
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+@register_scheme("multiset")
+def _make_multiset(*, seed=0, k=16, family="universal", **_ignored):
+    return MultisetScheme(seed=seed, k=k, family=family)
+
+
+@register_scheme("weighted")
+def _make_weighted(*, seed=0, k=16, tf="raw", idf="unary", weight=None,
+                   n_docs=None, doc_freq=None, **_ignored):
+    if weight is None:
+        weight = WeightFn(tf=tf, idf=idf, n_docs=n_docs, doc_freq=doc_freq)
+    return WeightedScheme(weight=weight, seed=seed, k=k)
+
+
+@register_scheme("tfidf")
+def _make_tfidf(*, seed=0, k=16, tf="raw", idf="smooth", weight=None,
+                corpus=None, **_ignored):
+    if weight is None:
+        if corpus is None:
+            raise ValueError(
+                'similarity="tfidf" fits IDF from document frequencies: '
+                "pass corpus= (token docs) or a pre-fitted weight=")
+        weight = WeightFn.fit(corpus, tf=tf, idf=idf)
+    return WeightedScheme(weight=weight, seed=seed, k=k)
+
+
+def make_scheme(similarity: str = "weighted", **kw):
+    """Construct a sketch scheme by similarity name.
+
+    See the module docstring for the registered names; extra keyword
+    arguments are forwarded to the factory (``seed``, ``k``, ``tf``,
+    ``idf``, ``family``, ``weight``, ``corpus``).
+    """
+    try:
+        factory = _REGISTRY[similarity]
+    except KeyError:
+        raise ValueError(f"unknown similarity {similarity!r}; registered: "
+                         f"{sorted(_REGISTRY)}") from None
+    return factory(**kw)
+
+
+# --------------------------------------------------------------------------
+# JSON round-trip (the versioned store's manifest entry)
+# --------------------------------------------------------------------------
+
+def scheme_spec(scheme) -> dict:
+    """JSON-serializable description sufficient to rebuild ``scheme``."""
+    if isinstance(scheme, MultisetScheme):
+        return {"kind": "multiset", "seed": scheme.seed, "k": scheme.k,
+                "family": scheme.family}
+    if isinstance(scheme, WeightedScheme):
+        w = scheme.weight
+        return {"kind": "weighted", "seed": scheme.seed, "k": scheme.k,
+                "weight": {"tf": w.tf, "idf": w.idf, "n_docs": w.n_docs,
+                           "doc_freq": ({str(t): c
+                                         for t, c in w.doc_freq.items()}
+                                        if w.doc_freq is not None else None)}}
+    raise TypeError(f"cannot serialize scheme of type {type(scheme)!r}")
+
+
+def scheme_from_spec(spec: dict):
+    """Inverse of ``scheme_spec``: rebuild the exact hash family."""
+    kind = spec["kind"]
+    if kind == "multiset":
+        return MultisetScheme(seed=spec["seed"], k=spec["k"],
+                              family=spec.get("family", "universal"))
+    if kind == "weighted":
+        w = spec["weight"]
+        doc_freq = ({int(t): int(c) for t, c in w["doc_freq"].items()}
+                    if w.get("doc_freq") is not None else None)
+        weight = WeightFn(tf=w["tf"], idf=w["idf"], n_docs=w.get("n_docs"),
+                          doc_freq=doc_freq)
+        return WeightedScheme(weight=weight, seed=spec["seed"], k=spec["k"])
+    raise ValueError(f"unknown scheme kind {kind!r} in manifest")

@@ -1,0 +1,95 @@
+"""Immutable serve-side index: frozen CSR tables, vectorized probes.
+
+``SearchIndex`` is the *serve* half of the build→serve lifecycle: a fixed
+set of :class:`~repro.core.frozen.FrozenTable` CSR tables plus the metadata
+the query engine needs.  It has no ``add_text`` — growing an index is the
+:class:`repro.core.builder.IndexBuilder`'s job — so there is no frozen/
+mutable personality switch to trip over at runtime.
+
+Persistence goes through the versioned directory store
+(:mod:`repro.core.store`): ``save(path)`` writes a JSON manifest plus one
+raw ``.npy`` file per table array, and ``SearchIndex.load(path, mmap=True)``
+maps those arrays back with ``np.load(mmap_mode="r")`` so a larger-than-RAM
+corpus serves queries without materializing ``windows``/``keys``/
+``offsets``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .frozen import FrozenTable
+
+
+@dataclass
+class SearchIndex:
+    """k immutable CSR inverted tables over a fixed collection."""
+
+    scheme: object
+    tables: list[FrozenTable]
+    method: str = "mono_active"
+    num_texts: int = 0
+    num_windows: int = 0
+    text_lengths: list[int] = field(default_factory=list)
+
+    # -- query-engine surface (duck-typed with IndexBuilder) ----------------
+
+    @property
+    def is_frozen(self) -> bool:
+        return True
+
+    @property
+    def frozen(self) -> list[FrozenTable]:
+        """The CSR tables, under the name the batched probe path uses."""
+        return self.tables
+
+    def lookup(self, i: int, v):
+        """Postings of hash identity ``v`` in table ``i``: an int32 (m, 5)
+        row view (iterates as 5-sequences, like the builder's tuples)."""
+        return self.tables[i].get(v)
+
+    def freeze(self) -> "SearchIndex":
+        """Already frozen; returns self so build/serve call sites compose."""
+        return self
+
+    def nbytes(self) -> int:
+        """Exact resident array bytes (mmap-backed arrays count virtual)."""
+        return sum(t.nbytes for t in self.tables)
+
+    def is_mmap(self) -> bool:
+        """True when every non-empty table array is memory-mapped."""
+        import numpy as np
+        arrays = [a for t in self.tables
+                  for a in (t.keys, t.offsets, t.windows) if a.size]
+        return bool(arrays) and all(isinstance(a, np.memmap) for a in arrays)
+
+    # -- persistence --------------------------------------------------------
+
+    def save(self, path) -> None:
+        """Write the versioned on-disk format (manifest + ``.npy`` arrays)."""
+        from .store import save_index
+        save_index(self, path)
+
+    @classmethod
+    def load(cls, path, *, mmap: bool = True) -> "SearchIndex":
+        """Load a saved index; ``mmap=True`` maps the table arrays instead
+        of reading them into RAM."""
+        from .store import load_index
+        return load_index(path, mmap=mmap)
+
+    # legacy dict-state round-trip (kept for the sharded pickle checkpoints)
+
+    def state_dict(self) -> dict:
+        return {"method": self.method, "num_texts": self.num_texts,
+                "num_windows": self.num_windows,
+                "text_lengths": list(self.text_lengths), "tables": [],
+                "frozen": [t.state_dict() for t in self.tables]}
+
+    @classmethod
+    def from_state(cls, scheme, state: dict) -> "SearchIndex":
+        return cls(scheme=scheme, method=state["method"],
+                   tables=[FrozenTable.from_state(s)
+                           for s in state["frozen"]],
+                   num_texts=state["num_texts"],
+                   num_windows=state["num_windows"],
+                   text_lengths=list(state["text_lengths"]))

@@ -1,12 +1,21 @@
 """Distributed (multi-host) index build & query fan-out.
 
 The corpus is sharded across data-parallel workers; each worker builds an
-independent AlignmentIndex over its shard (the skyline partitioner is
-host-side; device kernels produce sketches -- DESIGN.md §2.2).  Queries
-broadcast the k sketch coordinates (O(k) bytes) and union per-shard results.
-Each shard checkpoints independently: a lost worker rebuilds only its shard
-(fault tolerance), and shards can be re-split when the worker count changes
-(elasticity).
+independent :class:`~repro.core.builder.IndexBuilder` over its shard (the
+skyline partitioner is host-side; device kernels produce sketches --
+DESIGN.md §2.2).  Queries broadcast the k sketch coordinates (O(k) bytes)
+and union per-shard results.  Each shard checkpoints independently: a lost
+worker rebuilds only its shard (fault tolerance), and shards can be
+re-split when the worker count changes (elasticity).
+
+Persistence is two-format by lifecycle stage:
+
+* **frozen** shards (post ``freeze()``, :class:`SearchIndex`) are saved as
+  versioned ``shard_{s}/`` store directories (:mod:`repro.core.store`) —
+  JSON manifest + raw ``.npy`` arrays, restorable with ``mmap=True`` so a
+  larger-than-RAM corpus serves without materializing the tables.
+* **mutable** shards (mid-build ``IndexBuilder``) are pickled as
+  ``shard_{s}.pkl`` build-time checkpoints, as before.
 """
 
 from __future__ import annotations
@@ -18,8 +27,12 @@ from pathlib import Path
 
 import numpy as np
 
-from .index import AlignmentIndex
+from . import store as index_store
+from .builder import IndexBuilder
 from .query import Alignment, batch_query, query
+from .search import SearchIndex
+
+META_VERSION = 1
 
 
 def shard_of(doc_id: int, n_shards: int) -> int:
@@ -28,24 +41,31 @@ def shard_of(doc_id: int, n_shards: int) -> int:
 
 @dataclass
 class ShardedAlignmentIndex:
-    """n_shards independent AlignmentIndexes with a global doc-id space."""
+    """n_shards independent indexes with a global doc-id space."""
 
     scheme: object
     n_shards: int = 4
     method: str = "mono_active"
-    shards: list[AlignmentIndex] = field(init=False)
+    shards: list = field(init=False)
     doc_map: list[tuple[int, int]] = field(default_factory=list)
     # doc_map[global_id] = (shard, local_id)
+    _inverse: dict | None = field(default=None, init=False, repr=False)
 
     def __post_init__(self):
-        self.shards = [AlignmentIndex(scheme=self.scheme, method=self.method)
+        self.shards = [IndexBuilder(scheme=self.scheme, method=self.method)
                        for _ in range(self.n_shards)]
 
     def add_text(self, tokens) -> int:
         gid = len(self.doc_map)
         s = shard_of(gid, self.n_shards)
+        if self.shards[s].is_frozen:
+            raise RuntimeError(
+                f"shard {s} is frozen (SearchIndex); adds belong to the "
+                "build stage — rebuild the shard with an IndexBuilder to "
+                "grow it")
         lid = self.shards[s].add_text(np.asarray(tokens, np.int64))
         self.doc_map.append((s, lid))
+        self._inverse = None              # invalidate the cached inverse map
         return gid
 
     def build(self, texts) -> "ShardedAlignmentIndex":
@@ -63,13 +83,14 @@ class ShardedAlignmentIndex:
                                      blocks=al.blocks))
         return sorted(out, key=lambda a: a.text_id)
 
-    def batch_query(self, texts, theta: float) -> list[list[Alignment]]:
+    def batch_query(self, texts, theta: float, *,
+                    backend: str = "exact") -> list[list[Alignment]]:
         """Batched fan-out: sketch the batch once (shards share the hash
         family), probe every shard's tables with the same sketches, union
         per query in the global id space."""
         if not texts:
             return []
-        sketches = self.scheme.sketch_batch(texts)
+        sketches = self.scheme.sketch_batch(texts, backend=backend)
         inverse = self._inverse_doc_map()
         per_q: list[list[Alignment]] = [[] for _ in texts]
         for s, shard in enumerate(self.shards):
@@ -82,8 +103,7 @@ class ShardedAlignmentIndex:
 
     def freeze(self) -> "ShardedAlignmentIndex":
         """Freeze every shard into the CSR serving layout (idempotent)."""
-        for shard in self.shards:
-            shard.freeze()
+        self.shards = [shard.freeze() for shard in self.shards]
         return self
 
     @property
@@ -94,8 +114,12 @@ class ShardedAlignmentIndex:
         return sum(s.nbytes() for s in self.shards)
 
     def _inverse_doc_map(self) -> dict[tuple[int, int], int]:
-        return {(s, lid): gid
-                for gid, (s, lid) in enumerate(self.doc_map)}
+        """(shard, local_id) -> global_id, cached between queries (rebuilt
+        lazily after ``add_text``/``restore`` invalidate it)."""
+        if self._inverse is None or len(self._inverse) != len(self.doc_map):
+            self._inverse = {(s, lid): gid
+                             for gid, (s, lid) in enumerate(self.doc_map)}
+        return self._inverse
 
     @property
     def num_windows(self) -> int:
@@ -106,35 +130,75 @@ class ShardedAlignmentIndex:
     def save(self, root: str | Path):
         root = Path(root)
         root.mkdir(parents=True, exist_ok=True)
-        meta = {"n_shards": self.n_shards, "method": self.method,
-                "doc_map": self.doc_map}
+        from .schemes import scheme_spec
+        meta = {"meta_version": META_VERSION, "n_shards": self.n_shards,
+                "method": self.method, "doc_map": self.doc_map,
+                "scheme": scheme_spec(self.scheme)}
         for s, shard in enumerate(self.shards):
-            tmp = root / f"shard_{s}.pkl.tmp"
-            with open(tmp, "wb") as f:
-                pickle.dump(shard.state_dict(), f)
-            tmp.rename(root / f"shard_{s}.pkl")        # atomic commit
+            store_dir = root / f"shard_{s}"
+            pkl = root / f"shard_{s}.pkl"
+            if shard.is_frozen:
+                # scheme spec lives once in meta.json (a tfidf spec carries
+                # the corpus-wide doc-frequency table; don't write n copies)
+                index_store.save_index(shard, store_dir,
+                                       doc_map=self.docs_of_shard(s),
+                                       include_scheme=False)
+                pkl.unlink(missing_ok=True)       # drop stale checkpoint
+            else:
+                tmp = root / f"shard_{s}.pkl.tmp"
+                with open(tmp, "wb") as f:
+                    pickle.dump(shard.state_dict(), f)
+                tmp.rename(pkl)                   # atomic commit
+                if store_dir.exists():
+                    import shutil
+                    shutil.rmtree(store_dir)      # drop stale frozen store
         (root / "meta.json").write_text(json.dumps(meta))
 
-    def restore(self, root: str | Path, *, missing_ok: bool = True
-                ) -> list[int]:
+    def restore(self, root: str | Path, *, missing_ok: bool = True,
+                mmap: bool = False) -> list[int]:
         """Load shards from disk; returns the list of shard ids that were
         missing/corrupt and have been rebuilt empty (the caller re-adds only
-        those shards' documents -- partial recovery)."""
+        those shards' documents -- partial recovery).
+
+        ``mmap=True`` maps frozen shards' table arrays instead of reading
+        them into RAM (versioned store directories only; pickled build
+        checkpoints always materialize).
+        """
         root = Path(root)
         meta = json.loads((root / "meta.json").read_text())
-        assert meta["n_shards"] == self.n_shards, "elastic re-shard: rebuild"
+        if meta["n_shards"] != self.n_shards:
+            raise ValueError(
+                f"shard-count mismatch: checkpoint at {root} has "
+                f"{meta['n_shards']} shards but this index was built with "
+                f"n_shards={self.n_shards}; construct the index with the "
+                "checkpoint's shard count, or re-shard the corpus and "
+                "rebuild (elastic re-shard)")
         self.doc_map = [tuple(x) for x in meta["doc_map"]]
+        self._inverse = None
         lost = []
         for s in range(self.n_shards):
-            p = root / f"shard_{s}.pkl"
             try:
-                with open(p, "rb") as f:
-                    self.shards[s].load_state_dict(pickle.load(f))
+                self.shards[s] = self._load_shard(root, s, mmap=mmap)
             except Exception:
                 if not missing_ok:
                     raise
+                self.shards[s] = IndexBuilder(scheme=self.scheme,
+                                              method=self.method)
                 lost.append(s)
         return lost
+
+    def _load_shard(self, root: Path, s: int, *, mmap: bool):
+        store_dir = root / f"shard_{s}"
+        if index_store.is_index_store(store_dir):
+            return index_store.load_index(store_dir, mmap=mmap,
+                                          scheme=self.scheme)
+        with open(root / f"shard_{s}.pkl", "rb") as f:
+            state = pickle.load(f)
+        if state.get("frozen") is not None:
+            return SearchIndex.from_state(self.scheme, state)
+        builder = IndexBuilder(scheme=self.scheme, method=self.method)
+        builder.load_state_dict(state)
+        return builder
 
     def docs_of_shard(self, s: int) -> list[int]:
         return [gid for gid, (sh, _l) in enumerate(self.doc_map) if sh == s]

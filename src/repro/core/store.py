@@ -1,0 +1,143 @@
+"""Versioned on-disk format for frozen indexes (mmap-backed serving).
+
+One directory per index::
+
+    index_dir/
+      manifest.json           format/version, scheme spec, method, doc map,
+                              text lengths, per-table kinds
+      table_00.keys.npy       uint64 sorted packed hash identities
+      table_00.offsets.npy    int64 CSR row pointers
+      table_00.windows.npy    int32 (nwin, 5) compact-window rows
+      ...                     one triple per sketch coordinate
+
+The arrays are raw ``.npy`` files (not a zipped ``.npz``) precisely so
+``np.load(mmap_mode="r")`` can map them: a larger-than-RAM corpus then
+serves queries through the OS page cache without ever materializing
+``windows``/``keys``/``offsets``.  ``searchsorted`` probes touch O(log n)
+pages per key and the plane sweep reads only the collided rows.
+
+Writes are crash-safe by ordering: the arrays are written first and the
+manifest last, so a directory without a readable manifest is an aborted
+write, never a torn index.  ``FORMAT_VERSION`` is checked on load and
+unknown versions are rejected with ``ValueError`` (forward compatibility
+is an explicit migration, not a silent misread).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from .frozen import FrozenTable
+from .schemes import scheme_from_spec, scheme_spec
+
+FORMAT = "mono-index"
+FORMAT_VERSION = 1
+
+_ARRAYS = ("keys", "offsets", "windows")
+_DTYPES = {"keys": np.uint64, "offsets": np.int64, "windows": np.int32}
+
+
+def _table_path(root: Path, i: int, name: str) -> Path:
+    return root / f"table_{i:02d}.{name}.npy"
+
+
+def save_index(index, path, *, doc_map=None,
+               include_scheme: bool = True) -> None:
+    """Write ``index`` (a SearchIndex) as a versioned store directory.
+
+    ``doc_map`` optionally records the global doc id of each local text id
+    (used by the sharded store); ``None`` means the identity mapping.
+    ``include_scheme=False`` omits the scheme spec from the manifest (the
+    sharded store writes it once at the root instead of per shard — a
+    tfidf spec carries the corpus-wide doc-frequency table); such a store
+    can only be loaded with an explicit ``scheme=``.
+    """
+    root = Path(path)
+    root.mkdir(parents=True, exist_ok=True)
+    # invalidate any previous commit before touching its arrays: a crash
+    # mid-rewrite must leave "no manifest" (aborted write), never a stale
+    # manifest validating torn arrays
+    (root / "manifest.json").unlink(missing_ok=True)
+    for i, t in enumerate(index.tables):
+        for name in _ARRAYS:
+            np.save(_table_path(root, i, name), getattr(t, name))
+    manifest = {
+        "format": FORMAT,
+        "format_version": FORMAT_VERSION,
+        "scheme": scheme_spec(index.scheme) if include_scheme else None,
+        "method": index.method,
+        "num_texts": int(index.num_texts),
+        "num_windows": int(index.num_windows),
+        "text_lengths": [int(n) for n in index.text_lengths],
+        "doc_map": ([int(g) for g in doc_map]
+                    if doc_map is not None else None),
+        "tables": [{"kind": t.kind, "kint_min": int(t.kint_min)}
+                   for t in index.tables],
+    }
+    tmp = root / "manifest.json.tmp"
+    tmp.write_text(json.dumps(manifest))
+    tmp.rename(root / "manifest.json")          # atomic commit marker
+
+
+def read_manifest(path) -> dict:
+    """Read and validate a store directory's manifest."""
+    root = Path(path)
+    mpath = root / "manifest.json"
+    if not mpath.exists():
+        raise FileNotFoundError(f"{root} is not an index store "
+                                "(no manifest.json)")
+    manifest = json.loads(mpath.read_text())
+    if manifest.get("format") != FORMAT:
+        raise ValueError(f"{root}: not a {FORMAT} store "
+                         f"(format={manifest.get('format')!r})")
+    version = manifest.get("format_version")
+    if version != FORMAT_VERSION:
+        raise ValueError(
+            f"{root}: unsupported index format version {version!r} "
+            f"(this build reads version {FORMAT_VERSION}); re-save the "
+            "index with a matching build or migrate it explicitly")
+    return manifest
+
+
+def load_index(path, *, mmap: bool = True, scheme=None):
+    """Load a store directory back into a ``SearchIndex``.
+
+    ``mmap=True`` maps every table array with ``np.load(mmap_mode="r")``
+    (read-only ``np.memmap`` views); ``mmap=False`` reads them into RAM.
+    ``scheme`` overrides manifest reconstruction when the caller already
+    holds the (identical) hash family — the sharded fan-out shares one
+    scheme object across shards so sketches are computed once.
+    """
+    from .search import SearchIndex
+    root = Path(path)
+    manifest = read_manifest(root)
+    if scheme is None:
+        if manifest["scheme"] is None:
+            raise ValueError(
+                f"{root}: manifest carries no scheme spec (saved with "
+                "include_scheme=False, e.g. a sharded-store shard); pass "
+                "scheme= explicitly")
+        scheme = scheme_from_spec(manifest["scheme"])
+    mode = "r" if mmap else None
+    tables = []
+    for i, tmeta in enumerate(manifest["tables"]):
+        arrays = {}
+        for name in _ARRAYS:
+            a = np.load(_table_path(root, i, name), mmap_mode=mode)
+            if a.dtype != _DTYPES[name]:
+                raise ValueError(f"{root}: table {i} {name} has dtype "
+                                 f"{a.dtype}, expected {_DTYPES[name]}")
+            arrays[name] = a
+        tables.append(FrozenTable(kind=tmeta["kind"],
+                                  kint_min=int(tmeta["kint_min"]), **arrays))
+    return SearchIndex(scheme=scheme, method=manifest["method"],
+                       tables=tables, num_texts=manifest["num_texts"],
+                       num_windows=manifest["num_windows"],
+                       text_lengths=list(manifest["text_lengths"]))
+
+
+def is_index_store(path) -> bool:
+    return (Path(path) / "manifest.json").exists()

@@ -60,6 +60,24 @@ class WeightFn:
             raise ValueError(f"unknown tf kind {self.tf!r}")
         self._idf_fn = make_idf(self.idf, self.n_docs, self.doc_freq)
 
+    @classmethod
+    def fit(cls, docs, *, tf: str = "raw", idf: str = "smooth") -> "WeightFn":
+        """Fit corpus statistics (N, per-token doc frequency) from token
+        docs and return the corresponding TF-IDF weight function.
+
+        ``idf="unary"`` needs no statistics but is accepted for a uniform
+        construction path (``Aligner.build`` calls this for every weighted
+        similarity).
+        """
+        doc_freq: dict[int, int] = {}
+        n_docs = 0
+        for d in docs:
+            n_docs += 1
+            for t in np.unique(np.asarray(d, dtype=np.int64)):
+                t = int(t)
+                doc_freq[t] = doc_freq.get(t, 0) + 1
+        return cls(tf=tf, idf=idf, n_docs=n_docs, doc_freq=doc_freq)
+
     def __call__(self, t, x) -> np.ndarray:
         """Weight of token(s) t at frequency(ies) x (broadcastable)."""
         tfv = TF_FUNCS[self.tf](x)

@@ -2,7 +2,7 @@
 and test-set contamination detection (the LLM applications motivating the
 paper -- Lee et al. '22, Magar & Schwartz '22).
 
-DedupFilter keeps an AlignmentIndex over admitted documents; a new document
+DedupFilter keeps an IndexBuilder over admitted documents; a new document
 is dropped when any of its prefixes/subsequences aligns with an indexed
 document above `theta` (weighted Jaccard, Eq. 5), i.e., when `query()`
 returns any block.  ContaminationChecker indexes the *training* corpus and
@@ -15,15 +15,14 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from ..core import AlignmentIndex, MultisetScheme, WeightedScheme, query
-from ..core.weights import WeightFn
+from ..core import IndexBuilder, make_scheme, query
 
 
 def default_scheme(kind: str = "weighted", *, seed: int = 0, k: int = 16,
                    tf: str = "raw", idf: str = "unary"):
-    if kind == "weighted":
-        return WeightedScheme(weight=WeightFn(tf=tf, idf=idf), seed=seed, k=k)
-    return MultisetScheme(seed=seed, k=k)
+    """Deprecated alias for :func:`repro.core.make_scheme` (kept so old
+    call sites and checkpoint scripts keep working)."""
+    return make_scheme(kind, seed=seed, k=k, tf=tf, idf=idf)
 
 
 @dataclass
@@ -34,13 +33,13 @@ class DedupFilter:
     scheme: object = None
     method: str = "mono_active"
     max_doc_tokens: int = 2048          # truncate pathological docs
-    index: AlignmentIndex = field(init=False)
+    index: IndexBuilder = field(init=False)
     stats: dict = field(default_factory=lambda: {"admitted": 0, "dropped": 0})
 
     def __post_init__(self):
         if self.scheme is None:
             self.scheme = default_scheme()
-        self.index = AlignmentIndex(scheme=self.scheme, method=self.method)
+        self.index = IndexBuilder(scheme=self.scheme, method=self.method)
 
     def admit(self, tokens) -> bool:
         tokens = np.asarray(tokens, np.int64)[:self.max_doc_tokens]
@@ -62,12 +61,12 @@ class ContaminationChecker:
     theta: float = 0.6
     scheme: object = None
     method: str = "mono_active"
-    index: AlignmentIndex = field(init=False)
+    index: IndexBuilder = field(init=False)
 
     def __post_init__(self):
         if self.scheme is None:
             self.scheme = default_scheme()
-        self.index = AlignmentIndex(scheme=self.scheme, method=self.method)
+        self.index = IndexBuilder(scheme=self.scheme, method=self.method)
 
     def fit(self, train_token_docs) -> "ContaminationChecker":
         for d in train_token_docs:

@@ -62,18 +62,15 @@ def main():
           f"({B * G / dt:.1f} tok/s, batch decode)")
 
     if args.memcheck:
-        from repro.core import AlignmentIndex, batch_query
-        from repro.data import default_scheme, synthetic_corpus, \
-            HashWordTokenizer
+        from repro.api import Aligner
+        from repro.data import synthetic_corpus, HashWordTokenizer
         tok = HashWordTokenizer(vocab=cfg.vocab)
         corpus = tok.encode_batch(synthetic_corpus(100, seed=0))
-        idx = AlignmentIndex(scheme=default_scheme("multiset", seed=2, k=16))
-        for d in corpus:
-            idx.add_text(d)
-        idx.freeze()                   # CSR serving layout
+        aligner = Aligner.build(corpus, similarity="multiset", seed=2,
+                                k=16).freeze()   # CSR serving layout
         t1 = time.time()
-        results = batch_query(idx, [np.asarray(gen[b], np.int64)
-                                    for b in range(B)], 0.5)
+        results = aligner.find_batch([np.asarray(gen[b], np.int64)
+                                      for b in range(B)], 0.5)
         flagged = sum(1 for r in results if r)
         print(f"memorization scan: {flagged}/{B} generations align with the "
               f"training corpus at theta=0.5 "

@@ -1,0 +1,329 @@
+"""PR 2 API surface: the `Aligner` facade lifecycle, the versioned
+mmap-backed index store, the IndexBuilder/SearchIndex split, and the
+deprecation shims that keep the pre-split entry points alive."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import Aligner, AlignerConfig
+from repro.core import (IndexBuilder, SearchIndex, batch_query, load_index,
+                        make_scheme, query, save_index, scheme_from_spec,
+                        scheme_spec)
+from repro.core.sharded_index import ShardedAlignmentIndex
+from repro.core.weights import WeightFn
+
+
+def _corpus(rng, n_docs=8, vocab=40, n=60):
+    docs = [rng.integers(0, vocab, size=n).astype(np.int64)
+            for _ in range(n_docs)]
+    if n_docs > 5:
+        docs[5] = docs[2].copy()                  # planted duplicate
+    return docs
+
+
+def _blocks(results):
+    return [(a.text_id, a.blocks) for a in results]
+
+
+def _batch_blocks(res):
+    return [_blocks(r) for r in res]
+
+
+SIMS = ["multiset", "weighted", "tfidf"]
+
+
+# --------------------------------------------------------------------------
+# Aligner end-to-end
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("similarity", SIMS)
+def test_aligner_end_to_end(similarity):
+    rng = np.random.default_rng(0)
+    docs = _corpus(rng)
+    a = Aligner.build(docs, similarity=similarity, k=8, seed=3)
+    hits = a.find(docs[2][5:50], 0.5)
+    assert {h.text_id for h in hits} >= {2, 5}
+    batch = a.find_batch([docs[2][5:50], docs[0][:30]], 0.5)
+    assert _blocks(batch[0]) == _blocks(hits)
+    # freeze and serve: identical results from the CSR layout
+    a.freeze()
+    assert a.is_frozen
+    assert _batch_blocks(a.find_batch([docs[2][5:50], docs[0][:30]], 0.5)) \
+        == _batch_blocks(batch)
+    with pytest.raises(RuntimeError):
+        a.add(docs[0])
+
+
+def test_aligner_add_then_find():
+    rng = np.random.default_rng(1)
+    docs = _corpus(rng, n_docs=4)
+    a = Aligner.build(docs[:3], similarity="multiset", k=8)
+    assert a.add(docs[3]) == 3
+    assert a.num_docs == 4
+    assert any(h.text_id == 3 for h in a.find(docs[3][5:50], 0.5))
+
+
+def test_aligner_on_strings_with_default_tokenizer():
+    corpus = ["the quick brown fox jumps over the lazy dog",
+              "completely unrelated words about pallas kernels",
+              "the quick brown fox jumps over a sleepy dog"]
+    a = Aligner.build(corpus, similarity="tfidf", k=16)
+    hits = a.find("the quick brown fox jumps", 0.5)
+    assert {h.text_id for h in hits} >= {0, 2}
+
+
+def test_aligner_config_object():
+    rng = np.random.default_rng(2)
+    docs = _corpus(rng, n_docs=4)
+    cfg = AlignerConfig(similarity="weighted", k=4, tf="log")
+    a = Aligner.build(docs, config=cfg)
+    assert a.config.k == 4 and a.scheme.k == 4
+    assert a.scheme.weight.tf == "log"
+
+
+# --------------------------------------------------------------------------
+# versioned mmap-backed store
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("similarity", ["multiset", "tfidf"])
+def test_mmap_roundtrip_block_identical(tmp_path, similarity):
+    rng = np.random.default_rng(3)
+    docs = _corpus(rng)
+    qs = [docs[2][5:50], docs[0][:30],
+          rng.integers(1000, 1040, 20).astype(np.int64)]       # + a miss
+    a = Aligner.build(docs, similarity=similarity, k=8, seed=7)
+    in_memory = _batch_blocks(a.find_batch(qs, 0.5))
+    a.save(tmp_path / "idx")
+
+    served = Aligner.load(tmp_path / "idx", mmap=True)
+    assert _batch_blocks(served.find_batch(qs, 0.5)) == in_memory
+    # the table arrays are memory-mapped, not materialized copies
+    assert served._index.is_mmap()
+    for t in served._index.tables:
+        for arr in (t.keys, t.offsets, t.windows):
+            if arr.size:
+                assert isinstance(arr, np.memmap)
+
+    # and the non-mmap load agrees too
+    ram = Aligner.load(tmp_path / "idx", mmap=False)
+    assert _batch_blocks(ram.find_batch(qs, 0.5)) == in_memory
+    assert not ram._index.is_mmap()
+
+
+def test_sharded_aligner_mmap_roundtrip(tmp_path):
+    rng = np.random.default_rng(4)
+    docs = _corpus(rng, n_docs=9)
+    qs = [docs[2][5:50], docs[7][:30]]
+    a = Aligner.build(docs, similarity="multiset", k=8, shards=3, seed=9)
+    expected = _batch_blocks(a.find_batch(qs, 0.5))
+    a.save(tmp_path / "idx")
+    served = Aligner.load(tmp_path / "idx", mmap=True)
+    assert served.config.shards == 3
+    assert _batch_blocks(served.find_batch(qs, 0.5)) == expected
+    for shard in served._index.shards:
+        assert shard.is_mmap()
+
+
+def test_unknown_manifest_version_rejected(tmp_path):
+    rng = np.random.default_rng(5)
+    a = Aligner.build(_corpus(rng, n_docs=3), similarity="multiset", k=4)
+    a.save(tmp_path / "idx")
+    mpath = tmp_path / "idx" / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    manifest["format_version"] = 99
+    mpath.write_text(json.dumps(manifest))
+    with pytest.raises(ValueError, match="format version"):
+        Aligner.load(tmp_path / "idx")
+
+
+def test_store_save_load_functions_direct(tmp_path):
+    rng = np.random.default_rng(6)
+    docs = _corpus(rng, n_docs=4)
+    scheme = make_scheme("weighted", seed=1, k=8, tf="raw")
+    search = IndexBuilder(scheme=scheme).build(docs).freeze()
+    save_index(search, tmp_path / "s", doc_map=[10, 11, 12, 13])
+    loaded = load_index(tmp_path / "s", mmap=True)
+    assert loaded.num_texts == 4 and loaded.method == search.method
+    q = docs[1][5:40]
+    assert _blocks(query(loaded, q, 0.5)) == _blocks(query(search, q, 0.5))
+    manifest = json.loads((tmp_path / "s" / "manifest.json").read_text())
+    assert manifest["doc_map"] == [10, 11, 12, 13]
+    assert manifest["text_lengths"] == [len(d) for d in docs]
+
+
+def test_scheme_spec_roundtrip():
+    for scheme in (make_scheme("multiset", seed=3, k=8, family="mix"),
+                   make_scheme("weighted", seed=5, k=4, tf="log"),
+                   make_scheme("tfidf", seed=7, k=4,
+                               corpus=[[1, 2, 2], [2, 3]])):
+        clone = scheme_from_spec(json.loads(json.dumps(scheme_spec(scheme))))
+        toks = np.array([1, 2, 2, 3, 1], np.int64)
+        assert clone.sketch(toks) == scheme.sketch(toks)
+
+
+# --------------------------------------------------------------------------
+# builder / search split
+# --------------------------------------------------------------------------
+
+def test_builder_stays_usable_after_freeze():
+    rng = np.random.default_rng(7)
+    docs = _corpus(rng, n_docs=4)
+    builder = IndexBuilder(scheme=make_scheme("multiset", seed=2, k=8))
+    builder.build(docs[:3])
+    search = builder.freeze()
+    assert isinstance(search, SearchIndex) and search.is_frozen
+    assert not builder.is_frozen
+    builder.add_text(docs[3])                    # no personality switch
+    assert builder.num_texts == 4 and search.num_texts == 3
+    assert not hasattr(search, "add_text")       # immutability by omission
+    assert search.freeze() is search
+
+
+def test_weightfn_fit_counts_doc_frequencies():
+    docs = [np.array([1, 1, 2], np.int64), np.array([2, 3], np.int64)]
+    w = WeightFn.fit(docs, tf="raw", idf="smooth")
+    assert w.n_docs == 2
+    assert w.doc_freq == {1: 1, 2: 2, 3: 1}
+    assert w(np.array([1]), np.array([1]))[0] > 0
+
+
+def test_make_scheme_rejects_unknown_similarity():
+    with pytest.raises(ValueError, match="unknown similarity"):
+        make_scheme("cosine")
+    with pytest.raises(ValueError, match="tfidf"):
+        make_scheme("tfidf")                     # needs corpus or weight
+
+
+# --------------------------------------------------------------------------
+# sharded persistence migration + satellites
+# --------------------------------------------------------------------------
+
+def test_sharded_restore_shard_count_mismatch_raises_value_error(tmp_path):
+    rng = np.random.default_rng(8)
+    docs = _corpus(rng, n_docs=6)
+    scheme = make_scheme("multiset", seed=1, k=4)
+    ShardedAlignmentIndex(scheme=scheme, n_shards=3).build(docs) \
+        .save(tmp_path)
+    other = ShardedAlignmentIndex(scheme=scheme, n_shards=4)
+    with pytest.raises(ValueError, match="shard-count mismatch"):
+        other.restore(tmp_path)
+
+
+def test_sharded_frozen_save_uses_versioned_store(tmp_path):
+    rng = np.random.default_rng(9)
+    docs = _corpus(rng, n_docs=6)
+    scheme = make_scheme("multiset", seed=1, k=4)
+    idx = ShardedAlignmentIndex(scheme=scheme, n_shards=2).build(docs)
+    idx.freeze()
+    idx.save(tmp_path)
+    assert (tmp_path / "shard_0" / "manifest.json").exists()
+    assert not (tmp_path / "shard_0.pkl").exists()
+    restored = ShardedAlignmentIndex(scheme=scheme, n_shards=2)
+    assert restored.restore(tmp_path, mmap=True) == []
+    assert all(s.is_mmap() for s in restored.shards)
+    q = docs[2][5:50]
+    assert _batch_blocks(restored.batch_query([q], 0.5)) == \
+        _batch_blocks(idx.batch_query([q], 0.5))
+
+
+def test_sharded_store_writes_scheme_once_at_root(tmp_path):
+    rng = np.random.default_rng(12)
+    docs = _corpus(rng, n_docs=6)
+    a = Aligner.build(docs, similarity="tfidf", k=4, shards=2)
+    a.save(tmp_path / "idx")
+    meta = json.loads((tmp_path / "idx" / "meta.json").read_text())
+    assert meta["scheme"]["kind"] == "weighted"
+    assert meta["scheme"]["weight"]["doc_freq"]          # fitted stats
+    for s in range(2):
+        shard = json.loads(
+            (tmp_path / "idx" / f"shard_{s}" / "manifest.json").read_text())
+        assert shard["scheme"] is None                   # not duplicated
+    served = Aligner.load(tmp_path / "idx", mmap=True)
+    q = docs[2][5:50]
+    assert _batch_blocks(served.find_batch([q], 0.5)) == \
+        _batch_blocks(a.find_batch([q], 0.5))
+
+
+def test_sharded_add_after_freeze_raises_without_corrupting_doc_map():
+    rng = np.random.default_rng(13)
+    docs = _corpus(rng, n_docs=6)
+    idx = ShardedAlignmentIndex(scheme=make_scheme("multiset", seed=1, k=4),
+                                n_shards=2).build(docs)
+    idx.freeze()
+    with pytest.raises(RuntimeError, match="frozen"):
+        idx.add_text(docs[0])
+    assert len(idx.doc_map) == len(docs)                 # no partial append
+
+
+def test_resave_over_existing_store_is_clean(tmp_path):
+    rng = np.random.default_rng(14)
+    docs = _corpus(rng, n_docs=4)
+    a = Aligner.build(docs, similarity="multiset", k=4)
+    a.save(tmp_path / "idx")
+    a.save(tmp_path / "idx")                             # overwrite in place
+    served = Aligner.load(tmp_path / "idx")
+    q = docs[1][5:40]
+    assert _batch_blocks(served.find_batch([q], 0.5)) == \
+        _batch_blocks(a.find_batch([q], 0.5))
+
+
+def test_loaded_config_round_trips_scheme_knobs(tmp_path):
+    rng = np.random.default_rng(15)
+    docs = _corpus(rng, n_docs=3)
+    Aligner.build(docs, similarity="multiset", k=4, family="mix") \
+        .save(tmp_path / "m")
+    assert Aligner.load(tmp_path / "m").config.family == "mix"
+    Aligner.build(docs, similarity="weighted", k=4, tf="log") \
+        .save(tmp_path / "w")
+    cfg = Aligner.load(tmp_path / "w").config
+    assert cfg.tf == "log" and cfg.idf == "unary"
+
+
+def test_string_query_without_tokenizer_raises():
+    rng = np.random.default_rng(16)
+    a = Aligner.build(_corpus(rng, n_docs=3), similarity="multiset", k=4)
+    with pytest.raises(ValueError, match="tokenizer"):
+        a.find("a string query", 0.5)
+
+
+def test_sharded_inverse_doc_map_cached_and_invalidated():
+    rng = np.random.default_rng(10)
+    docs = _corpus(rng, n_docs=6)
+    idx = ShardedAlignmentIndex(scheme=make_scheme("multiset", seed=1, k=4),
+                                n_shards=2).build(docs)
+    inv1 = idx._inverse_doc_map()
+    assert idx._inverse_doc_map() is inv1        # cached between queries
+    idx.add_text(docs[0])
+    inv2 = idx._inverse_doc_map()
+    assert inv2 is not inv1 and len(inv2) == len(docs) + 1
+
+
+# --------------------------------------------------------------------------
+# deprecation shims
+# --------------------------------------------------------------------------
+
+def test_legacy_entry_points_importable_and_working():
+    # the full pre-split surface must keep importing from repro.core
+    from repro.core import (AlignmentIndex, FrozenTable, MultisetScheme,
+                            ShardedAlignmentIndex, WeightedScheme, WeightFn)
+    from repro.core.index import AlignmentIndex as FromIndexModule
+    from repro.data import default_scheme
+    assert FromIndexModule is AlignmentIndex
+    assert isinstance(default_scheme("weighted", k=4).weight, WeightFn)
+    assert isinstance(default_scheme("multiset", k=4), MultisetScheme)
+    assert isinstance(make_scheme("weighted", k=4), WeightedScheme)
+    assert FrozenTable is not None and ShardedAlignmentIndex is not None
+
+    rng = np.random.default_rng(11)
+    docs = _corpus(rng, n_docs=4)
+    with pytest.warns(DeprecationWarning):
+        idx = AlignmentIndex(scheme=MultisetScheme(seed=1, k=8))
+    idx.build(docs)
+    looped = _blocks(query(idx, docs[2][5:50], 0.5))
+    idx.freeze()
+    assert idx.is_frozen and idx.tables == [] and idx.frozen is not None
+    assert _batch_blocks(batch_query(idx, [docs[2][5:50]], 0.5)) == [looped]
+    with pytest.raises(RuntimeError):
+        idx.add_text(docs[0])
