@@ -154,16 +154,22 @@ class Aligner:
             return self._index.query(tokens, theta)
         return _query(self._index, tokens, theta)
 
-    def find_batch(self, texts, theta: float, *,
-                   backend: str = "exact") -> list[list[Alignment]]:
-        """Batched :meth:`find` (the serving path — one vectorized probe
-        per coordinate).  ``backend="pallas"`` sketches weighted queries
-        on-device in one fused launch."""
+    def find_batch(self, texts, theta: float, *, backend: str = "exact",
+                   probe_backend: str = "numpy") -> list[list[Alignment]]:
+        """Batched :meth:`find` (the serving path — one fused arena probe
+        for the whole batch).  ``backend="pallas"`` sketches weighted
+        queries on-device in one fused launch; ``probe_backend`` picks the
+        frozen-index probe stage: ``"numpy"`` (default, one host
+        ``searchsorted`` over the arena), ``"pallas"`` (device-side binary
+        search), or ``"percoord"`` (legacy per-coordinate loop).  Sharded
+        indexes fan the probes out across a thread pool."""
         tokens = [self._tokens(t) for t in texts]
         if isinstance(self._index, ShardedAlignmentIndex):
-            return self._index.batch_query(tokens, theta, backend=backend)
+            return self._index.batch_query(tokens, theta, backend=backend,
+                                           probe_backend=probe_backend)
         return _batch_query(self._index, tokens, theta,
-                            sketch_backend=backend)
+                            sketch_backend=backend,
+                            probe_backend=probe_backend)
 
     # -- persistence --------------------------------------------------------
 

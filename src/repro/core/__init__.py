@@ -7,7 +7,7 @@
 # repro.api.Aligner is the one-object facade.
 from .allalign import allalign_icws, allalign_multiset, allalign_partition
 from .builder import IndexBuilder
-from .frozen import FrozenTable
+from .frozen import FrozenTable, ProbeArena
 from .hashing import MixHash, UniversalHash
 from .icws import ICWS
 from .index import AlignmentIndex
@@ -37,6 +37,6 @@ __all__ = [
     "allalign_partition", "allalign_multiset", "allalign_icws",
     "minhash_gid_grid_multiset", "minhash_gid_grid_icws", "validate_partition",
     "jaccard_multiset", "jaccard_weighted", "query", "estimate_similarity",
-    "FrozenTable", "batch_query", "ShardedAlignmentIndex",
+    "FrozenTable", "ProbeArena", "batch_query", "ShardedAlignmentIndex",
     "save_index", "load_index", "read_manifest",
 ]

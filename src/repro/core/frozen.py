@@ -23,6 +23,29 @@ uint64.  ICWS tables key by the exact integer identity ``(token, k_int)``
 are vocabulary ids (< 2**32) and observed k_int spans are tiny, so the pack
 is exact.  Probe keys that fall outside the packable range simply miss —
 they cannot equal any stored key.
+
+Probe arena
+-----------
+``ProbeArena`` fuses the k per-coordinate tables into ONE sorted key arena
+with one global CSR offsets array and one windows matrix, so a batch of B
+queries probes all B*k coordinates with a single ``searchsorted`` + gather
+instead of k separate host round-trips (the batched query engine's probe
+stage).  Two re-keying schemes, chosen at build time:
+
+* ``packed`` — when every stored key fits in 56 bits (ICWS pair keys with
+  small vocabularies), re-key as ``(coord << 56) | key``; the coordinate-
+  major concatenation of per-coordinate sorted segments is then globally
+  sorted and one plain ``searchsorted`` finds exact slots.
+* ``coord``  — when packing would overflow (61/64-bit multiset hashes),
+  keep the original 64-bit keys sorted by ``(key, coord)`` with a parallel
+  uint16 coordinate-tag array.  The probe is still one ``searchsorted`` on
+  the key alone, followed by a tiny vectorized advance over the duplicate
+  run (bounded by ``max_run``, the longest equal-key run — almost always 1
+  because the k hash functions are independent).
+
+Both schemes resolve to the same slot the lexicographic binary search in
+the Pallas kernel (``repro.kernels.probe_arena``) finds, so the NumPy and
+device probe backends are bit-for-bit interchangeable.
 """
 
 from __future__ import annotations
@@ -37,6 +60,19 @@ KIND_INT = "int"
 KIND_PAIR = "pair"
 
 _MISS = np.uint64(0xFFFFFFFFFFFFFFFF)  # sentinel for unpackable probe keys
+
+
+def _pack_pairs(toks: np.ndarray, kints: np.ndarray, kint_min
+                ) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized ``(token << 32) | (k_int - kint_min)`` pair packing with
+    its uint32 range checks: -> (packed u64 with ``_MISS`` on out-of-range,
+    valid mask).  ``kint_min`` may be a scalar (one table) or an array
+    broadcast against the inputs (the arena's per-coordinate biases)."""
+    rel = kints - kint_min
+    ok = (toks >= 0) & (toks < 1 << 32) & (rel >= 0) & (rel < 1 << 32)
+    packed = (np.where(ok, toks, 0).astype(np.uint64) << np.uint64(32)) | \
+        np.where(ok, rel, 0).astype(np.uint64)
+    return np.where(ok, packed, _MISS), ok
 
 
 def _concat_ranges(starts: np.ndarray, counts: np.ndarray) -> np.ndarray:
@@ -108,11 +144,8 @@ class FrozenTable:
         if self.kind == KIND_PAIR:
             toks = np.array([v[0] for v in values], np.int64)
             kints = np.array([v[1] for v in values], np.int64)
-            rel = kints - self.kint_min
-            ok = (toks >= 0) & (toks < 1 << 32) & (rel >= 0) & (rel < 1 << 32)
-            packed = (np.where(ok, toks, 0).astype(np.uint64) << np.uint64(32)) \
-                | np.where(ok, rel, 0).astype(np.uint64)
-            return np.where(ok, packed, _MISS)
+            packed, _ok = _pack_pairs(toks, kints, self.kint_min)
+            return packed
         if self.kind == KIND_INT:
             return np.array([int(v) for v in values], np.uint64)
         return np.full(len(values), _MISS, np.uint64)
@@ -161,6 +194,189 @@ class FrozenTable:
                    offsets=np.asarray(state["offsets"], np.int64),
                    windows=np.asarray(state["windows"], np.int32),
                    kint_min=int(state["kint_min"]))
+
+
+# --------------------------------------------------------------------------
+# fused probe arena
+# --------------------------------------------------------------------------
+
+PACK_SHIFT = 56                    # coord tag bits in "packed" mode
+_PACK_LIMIT = np.uint64(1) << np.uint64(PACK_SHIFT)
+
+MODE_PACKED = "packed"
+MODE_COORD = "coord"
+
+
+@dataclass
+class ProbeArena:
+    """All k frozen tables fused into one device-residable CSR structure.
+
+    See the module docstring for the two re-keying schemes.  ``windows``
+    rows are regrouped so each arena slot's CSR range is contiguous, which
+    keeps the batch gather a single ``_concat_ranges`` + fancy index.
+    """
+
+    mode: str
+    keys: np.ndarray          # uint64 (nslots,), globally sorted (see mode)
+    coords: np.ndarray        # uint16 (nslots,) coordinate tags ("coord"
+                              # mode; empty in "packed" mode)
+    offsets: np.ndarray       # int64 (nslots + 1,) global CSR row pointers
+    windows: np.ndarray       # int32 (nwin, 5): tid, a, b, c, d
+    kinds: list[str]          # per-coordinate table kind
+    kint_mins: np.ndarray     # int64 (k,) per-coordinate pair-pack bias
+    max_run: int = 1          # longest equal-key run ("coord" mode bound)
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_tables(cls, tables: list[FrozenTable],
+                    mode: str | None = None) -> "ProbeArena":
+        k = len(tables)
+        if mode is None:
+            packable = k <= (1 << (64 - PACK_SHIFT)) and all(
+                t.keys.size == 0 or np.uint64(t.keys.max()) < _PACK_LIMIT
+                for t in tables)
+            mode = MODE_PACKED if packable else MODE_COORD
+        kinds = [t.kind for t in tables]
+        kint_mins = np.array([t.kint_min for t in tables], np.int64)
+        key_chunks, coord_chunks, count_chunks, start_chunks, win_chunks = \
+            [], [], [], [], []
+        win_base = 0
+        for i, t in enumerate(tables):
+            key_chunks.append(t.keys)
+            coord_chunks.append(np.full(len(t.keys), i, np.uint16))
+            count_chunks.append(np.diff(t.offsets))
+            start_chunks.append(t.offsets[:-1] + win_base)
+            win_chunks.append(np.asarray(t.windows))
+            win_base += len(t.windows)
+        keys = np.concatenate(key_chunks) if key_chunks else \
+            np.empty(0, np.uint64)
+        coords = np.concatenate(coord_chunks) if coord_chunks else \
+            np.empty(0, np.uint16)
+        counts = np.concatenate(count_chunks) if count_chunks else \
+            np.empty(0, np.int64)
+        starts = np.concatenate(start_chunks) if start_chunks else \
+            np.empty(0, np.int64)
+        windows = np.concatenate(win_chunks) if win_chunks else \
+            np.empty((0, 5), np.int32)
+        max_run = 1
+        if mode == MODE_PACKED:
+            if keys.size and np.uint64(keys.max()) >= _PACK_LIMIT:
+                raise ValueError("keys exceed 56 bits: cannot re-key as "
+                                 "(coord << 56) | key; use mode='coord'")
+            # per-coordinate segments are sorted, so the coordinate-major
+            # concatenation is globally sorted once coord rides the top bits
+            keys = (coords.astype(np.uint64) << np.uint64(PACK_SHIFT)) | keys
+            coords = np.empty(0, np.uint16)
+            # windows are already grouped in slot order
+        else:
+            order = np.lexsort((coords, keys))   # key primary, coord tie
+            keys = np.ascontiguousarray(keys[order])
+            coords = np.ascontiguousarray(coords[order])
+            starts, counts = starts[order], counts[order]
+            windows = windows[_concat_ranges(starts, counts)]
+            if keys.size:
+                change = np.flatnonzero(keys[1:] != keys[:-1])
+                bounds = np.concatenate([[0], change + 1, [len(keys)]])
+                max_run = int(np.diff(bounds).max())
+        offsets = np.zeros(len(keys) + 1, np.int64)
+        np.cumsum(counts, out=offsets[1:])
+        return cls(mode=mode, keys=keys, coords=coords, offsets=offsets,
+                   windows=windows, kinds=kinds, kint_mins=kint_mins,
+                   max_run=max_run)
+
+    # -- probing ------------------------------------------------------------
+
+    @property
+    def k(self) -> int:
+        return len(self.kinds)
+
+    def encode_batch(self, sketches) -> tuple[np.ndarray, np.ndarray,
+                                              np.ndarray]:
+        """Pack a batch of sketches into flat probe arrays.
+
+        sketches: B lists of k identities (ints or (token, k_int) tuples).
+        Returns (probe_keys u64, probe_coords u16, valid bool), each
+        (B*k,) in (query-major, coordinate-minor) order.
+        """
+        B = len(sketches)
+        k = self.k
+        coords = np.tile(np.arange(k, dtype=np.uint16), B)
+        live = np.array([kind != KIND_EMPTY for kind in self.kinds], bool)
+        valid = np.tile(live, B)
+        if B and isinstance(sketches[0][0], (tuple, list, np.ndarray)):
+            ident = np.asarray(sketches, np.int64)          # (B, k, 2)
+            pkeys, ok = _pack_pairs(ident[..., 0], ident[..., 1],
+                                    self.kint_mins[None, :])
+            pkeys = pkeys.ravel()
+            valid &= ok.ravel()
+        else:
+            pkeys = np.array(sketches, np.uint64).reshape(-1)
+        if self.mode == MODE_PACKED:
+            # stored keys all fit in 56 bits, so wider probes cannot hit
+            valid &= pkeys < _PACK_LIMIT
+        return pkeys, coords, valid
+
+    def probe(self, pkeys: np.ndarray, coords: np.ndarray,
+              valid: np.ndarray, *, backend: str = "numpy",
+              interpret: bool | None = None
+              ) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorized arena lookup -> CSR (starts, ends) int64, one
+        ``searchsorted`` (or one Pallas launch) for the whole batch.
+        Misses get an empty range (start == end == 0)."""
+        n = len(self.keys)
+        if n == 0 or len(pkeys) == 0:
+            z = np.zeros(len(pkeys), np.int64)
+            return z, z
+        if self.mode == MODE_PACKED:
+            q = (coords.astype(np.uint64) << np.uint64(PACK_SHIFT)) | \
+                np.where(valid, pkeys, 0)
+            if backend == "pallas":
+                pos = self._pallas_search(q, np.zeros(len(q), np.uint32),
+                                          interpret=interpret)
+            else:
+                pos = np.searchsorted(self.keys, q)
+            safe = np.minimum(pos, n - 1)
+            hit = valid & (pos < n) & (self.keys[safe] == q)
+        else:
+            if backend == "pallas":
+                pos = self._pallas_search(pkeys, coords.astype(np.uint32),
+                                          interpret=interpret)
+            else:
+                pos = np.searchsorted(self.keys, pkeys)
+                # advance over the (tiny) duplicate run to the probe's
+                # coordinate; bounded by the longest equal-key run
+                for _ in range(self.max_run - 1):
+                    safe = np.minimum(pos, n - 1)
+                    adv = (pos < n) & (self.keys[safe] == pkeys) & \
+                        (self.coords[safe] < coords)
+                    if not adv.any():
+                        break
+                    pos = pos + adv
+            safe = np.minimum(pos, n - 1)
+            hit = valid & (pos < n) & (self.keys[safe] == pkeys) & \
+                (self.coords[safe] == coords)
+        starts = np.where(hit, self.offsets[safe], 0)
+        ends = np.where(hit, self.offsets[safe + 1], 0)
+        return starts, ends
+
+    def _pallas_search(self, qkeys: np.ndarray, qtags: np.ndarray, *,
+                       interpret: bool | None) -> np.ndarray:
+        from ..kernels.probe_arena import arena_search
+        if self.mode == MODE_COORD:
+            tags = np.ascontiguousarray(self.coords, dtype=np.uint32)
+        else:
+            tags = np.zeros(len(self.keys), np.uint32)
+        return np.asarray(arena_search(
+            np.asarray(self.keys), tags, qkeys, qtags, interpret=interpret),
+            dtype=np.int64)
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def nbytes(self) -> int:
+        return (self.keys.nbytes + self.coords.nbytes +
+                self.offsets.nbytes + self.windows.nbytes)
 
 
 def dict_tables_nbytes(tables: list[dict]) -> int:

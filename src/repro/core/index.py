@@ -105,6 +105,13 @@ class AlignmentIndex:
     def lookup(self, i: int, v):
         return self._impl.lookup(i, v)
 
+    def arena(self):
+        """Fused probe arena of the frozen tables (serving stage only)."""
+        if not self._impl.is_frozen:
+            raise RuntimeError("index is not frozen; the probe arena is a "
+                               "serving-stage structure — call freeze()")
+        return self._impl.arena()
+
     def nbytes(self) -> int:
         return self._impl.nbytes()
 

@@ -7,10 +7,17 @@ Two execution paths over the same algorithm:
 * ``query``       — one query at a time; works on mutable (dict) and frozen
   indexes alike.
 * ``batch_query`` — the serving path: sketches the whole batch at once,
-  probes each of the k coordinates for all queries in a single vectorized
-  ``searchsorted`` (frozen CSR tables), and groups the collided windows by
-  (query, text) with one lexsort before the per-pair plane sweep.  Returns
-  block-for-block the same results as looping ``query``.
+  probes ALL B*k (query, coordinate) pairs against the fused probe arena
+  (``repro.core.frozen.ProbeArena``) in ONE ``searchsorted`` + gather
+  (``probe_backend="numpy"``; ``"pallas"`` routes the binary search through
+  the device kernel, ``"percoord"`` keeps the legacy per-coordinate probe
+  loop, which is also what mutable dict indexes use), and groups the
+  collided windows by (query, text) with one lexsort.  The per-group plane
+  sweep goes through a grouped dispatcher: the many tiny groups of Zipf
+  traffic are batched through one vectorized small-group sweep
+  (``sweep="grouped"``, the default) and only large groups fall back to
+  the per-group ``_sweep_text``.  Every combination returns block-for-block
+  the same results as looping ``query``.
 """
 
 from __future__ import annotations
@@ -118,6 +125,98 @@ def query(index, query_tokens, theta: float
     return results
 
 
+_SMALL_GROUP_MAX = 32    # windows; larger groups use the per-group sweep
+_SMALL_CHUNK_CELLS = 1 << 22   # bound the batched difference-array footprint
+
+
+def _sweep_small_batch(arr: np.ndarray, sizes: np.ndarray, m: int
+                       ) -> list[list[tuple[int, int, int, int]]]:
+    """Vectorized ``_sweep_text`` over G small groups at once.
+
+    arr: int64 (G, S, 4) rectangle rows, padded past ``sizes[g]`` with
+    anything; returns per-group block lists identical to running
+    ``_sweep_text(arr[g, :sizes[g]], m)`` group by group.
+
+    Padding is normalized to zero-width rectangles at each group's max
+    boundary and given bincount weight 0, so padded entries contribute no
+    coverage and only duplicate existing compressed coordinates.  Duplicate
+    boundary values are harmless: searchsorted-left drops every pulse on
+    the first duplicate, making later duplicates exact pass-throughs, so
+    run starts/ends land on the same coordinate values as the
+    ``np.unique``-compressed per-group sweep; zero-width *stripes* are
+    masked cold because each stripe emits its own block.
+    """
+    G, S, _ = arr.shape
+    # chunk so the per-chunk difference array stays cache/RAM friendly even
+    # when a batch produces tens of thousands of small groups
+    per = max(1, _SMALL_CHUNK_CELLS // ((2 * S + 1) * (2 * S + 1)))
+    if G > per:
+        out = []
+        for lo in range(0, G, per):
+            out.extend(_sweep_small_batch(arr[lo:lo + per],
+                                          sizes[lo:lo + per], m))
+        return out
+    arr = arr.astype(np.int64, copy=True)
+    pad = np.arange(S)[None, :] >= sizes[:, None]            # (G, S)
+    a, b, c, d = arr[..., 0], arr[..., 1], arr[..., 2], arr[..., 3]
+    bmax = np.where(pad, np.iinfo(np.int64).min, b + 1).max(axis=1)
+    dmax = np.where(pad, np.iinfo(np.int64).min, d + 1).max(axis=1)
+    a[pad], c[pad] = 0, 0
+    b[pad], d[pad] = -1, -1
+    a += np.where(pad, bmax[:, None], 0)
+    b += np.where(pad, bmax[:, None], 0)
+    c += np.where(pad, dmax[:, None], 0)
+    d += np.where(pad, dmax[:, None], 0)
+
+    NX = 2 * S
+    xs = np.sort(np.concatenate([a, b + 1], axis=1), axis=1)  # (G, NX)
+    ys = np.sort(np.concatenate([c, d + 1], axis=1), axis=1)
+    # row-wise searchsorted in one call: bias each group's (small, < 2**31)
+    # coordinates into a disjoint int64 band
+    bias = np.arange(G, dtype=np.int64)[:, None] << 33
+    xs_f, ys_f = (xs + bias).ravel(), (ys + bias).ravel()
+    row0 = np.arange(G, dtype=np.int64)[:, None] * NX
+
+    def rs(flat_sorted, probes):
+        return np.searchsorted(flat_sorted,
+                               (probes + bias).ravel()).reshape(G, S) - row0
+
+    xi_a, xi_b = rs(xs_f, a), rs(xs_f, b + 1)
+    yi_c, yi_d = rs(ys_f, c), rs(ys_f, d + 1)
+
+    # one global bincount of the +-1 corner pulses (weight 0 on padding)
+    STR = NX + 1
+    cell0 = np.arange(G, dtype=np.int64)[:, None] * ((NX + 1) * STR)
+    w = np.where(pad, 0.0, 1.0).ravel()
+    ww = np.concatenate([w, w])
+    flat = lambda xi, yi: (cell0 + xi * STR + yi).ravel()
+    L = G * (NX + 1) * STR
+    pos = np.concatenate([flat(xi_a, yi_c), flat(xi_b, yi_d)])
+    neg = np.concatenate([flat(xi_a, yi_d), flat(xi_b, yi_c)])
+    diff = (np.bincount(pos, weights=ww, minlength=L)
+            - np.bincount(neg, weights=ww, minlength=L)
+            ).reshape(G, NX + 1, STR).astype(np.int32)
+    count = np.cumsum(np.cumsum(diff, axis=1), axis=2)
+    hot = count[:, :NX - 1, :NX - 1] >= m
+    hot &= (xs[:, 1:] > xs[:, :-1])[:, :, None]              # zero-width
+    out: list[list[tuple[int, int, int, int]]] = [[] for _ in range(G)]
+    if not hot.any():
+        return out
+    hpad = np.zeros((G, NX - 1, NX + 1), np.int8)
+    hpad[:, :, 1:NX] = hot
+    edges = np.diff(hpad, axis=2)
+    gs, rows, cs = np.nonzero(edges == 1)     # run starts, row-major
+    _, _, ce = np.nonzero(edges == -1)        # aligned exclusive run ends
+    flat_blocks = np.stack([xs[gs, rows], xs[gs, rows + 1] - 1,
+                            ys[gs, cs], ys[gs, ce] - 1], axis=1).tolist()
+    grp = np.searchsorted(gs, np.arange(G + 1))   # gs ascending (row-major)
+    for g in range(G):
+        lo, hi = grp[g], grp[g + 1]
+        if hi > lo:
+            out[g] = [tuple(r) for r in flat_blocks[lo:hi]]
+    return out
+
+
 def _gather_coord(index, i: int, probe_keys: list
                   ) -> tuple[np.ndarray, np.ndarray]:
     """All windows colliding with the B probe keys on coordinate ``i``:
@@ -141,9 +240,27 @@ def _gather_coord(index, i: int, probe_keys: list
     return np.concatenate(qid_chunks), np.concatenate(win_chunks)
 
 
+def _gather_arena(index, sketches, probe_backend: str
+                  ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """One-shot probe of ALL B*k coordinates against the fused arena:
+    (query ids (M,), windows (M, 5) int64, coordinate ids (M,))."""
+    arena = index.arena()
+    k = arena.k
+    pkeys, coords, valid = arena.encode_batch(sketches)
+    starts, ends = arena.probe(
+        pkeys, coords, valid,
+        backend="pallas" if probe_backend == "pallas" else "numpy")
+    counts = ends - starts
+    rows = arena.windows[_concat_ranges(starts, counts)]
+    probe_ids = np.repeat(np.arange(len(pkeys), dtype=np.int64), counts)
+    return probe_ids // k, rows.astype(np.int64), probe_ids % k
+
+
 def batch_query(index, queries, theta: float, *,
                 sketches: list[list] | None = None,
-                sketch_backend: str = "exact") -> list[list[Alignment]]:
+                sketch_backend: str = "exact",
+                probe_backend: str = "numpy",
+                sweep: str = "grouped") -> list[list[Alignment]]:
     """Definition-1 alignment for a batch of queries (the serving path).
 
     ``sketches`` short-circuits sketching when the caller already holds the
@@ -151,15 +268,39 @@ def batch_query(index, queries, theta: float, *,
     reuses them on every shard).  ``sketch_backend="pallas"`` routes a
     weighted scheme's sketching through the fused device kernel in one
     launch (f32; see ``WeightedScheme.sketch_batch``).
+
+    ``probe_backend`` picks the frozen-index probe stage: ``"numpy"``
+    (default) probes the fused arena with one host ``searchsorted`` per
+    batch, ``"pallas"`` runs the arena binary search on device, and
+    ``"percoord"`` keeps the legacy k-probe loop (mutable dict indexes
+    always take that path).  ``sweep="grouped"`` batches small (query,
+    text) groups through the vectorized small-group sweep; ``"loop"``
+    sweeps every group individually.  All combinations are block-identical.
     """
     B = len(queries)
     if B == 0:
         return []
-    k = index.scheme.k
-    m = max(1, math.ceil(k * theta))
+    m = max(1, math.ceil(index.scheme.k * theta))
     if sketches is None:
         sketches = index.scheme.sketch_batch(queries, backend=sketch_backend)
+    gathered = batch_probe(index, sketches, probe_backend=probe_backend)
+    return _sweep_gathered(gathered, B, m, sweep)
 
+
+def batch_probe(index, sketches, *, probe_backend: str = "numpy"
+                ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """The probe stage of ``batch_query``: all windows colliding with the
+    batch's sketches, as (query ids (M,), windows (M, 5) int64, coordinate
+    ids (M,)).
+
+    Pure NumPy/mmap work that releases the GIL in searchsorted/gather —
+    the sharded fan-out overlaps THIS stage across shards with a thread
+    pool and keeps the (GIL-bound) sweep stage serial.
+    """
+    B = len(sketches)
+    k = index.scheme.k
+    if index.is_frozen and probe_backend != "percoord":
+        return _gather_arena(index, sketches, probe_backend)
     qid_chunks, win_chunks, cid_chunks = [], [], []
     for i in range(k):
         qids, wins = _gather_coord(index, i, [sketches[b][i]
@@ -168,28 +309,68 @@ def batch_query(index, queries, theta: float, *,
             qid_chunks.append(qids)
             win_chunks.append(wins)
             cid_chunks.append(np.full(len(qids), i, np.int64))
-    results: list[list[Alignment]] = [[] for _ in range(B)]
     if not qid_chunks:
+        return (np.empty(0, np.int64), np.empty((0, 5), np.int64),
+                np.empty(0, np.int64))
+    return (np.concatenate(qid_chunks), np.concatenate(win_chunks),
+            np.concatenate(cid_chunks))
+
+
+def _sweep_gathered(gathered, B: int, m: int, sweep: str
+                    ) -> list[list[Alignment]]:
+    """Group the gathered windows by (query, text) and plane-sweep each
+    group (the second stage of ``batch_query``)."""
+    qid_all, win_all, cid_all = gathered
+    results: list[list[Alignment]] = [[] for _ in range(B)]
+    if not len(qid_all):
         return results
-    qid_all = np.concatenate(qid_chunks)
-    win_all = np.concatenate(win_chunks)
-    cid_all = np.concatenate(cid_chunks)
 
     # one lexsort groups the collided windows by (query, text); each group
-    # is a contiguous slice handed to the plane sweep
+    # is a contiguous slice handed to the plane sweep.  Both gather orders
+    # (coordinate-major and query-major) are coordinate-ascending within a
+    # (query, text) group, which the stable sort preserves.
     order = np.lexsort((win_all[:, 0], qid_all))
     qid_all, win_all, cid_all = qid_all[order], win_all[order], cid_all[order]
+    n = len(qid_all)
     change = (qid_all[1:] != qid_all[:-1]) | \
         (win_all[1:, 0] != win_all[:-1, 0])
     bounds = np.flatnonzero(change) + 1
-    for lo, hi in zip(np.concatenate([[0], bounds]),
-                      np.concatenate([bounds, [len(qid_all)]])):
-        # same distinct-coordinate prefilter as ``query`` (the stable sort
-        # keeps each group's coordinate ids ascending)
-        cids = cid_all[lo:hi]
-        if 1 + np.count_nonzero(cids[1:] != cids[:-1]) < m:
-            continue
-        blocks = _sweep_text(win_all[lo:hi, 1:5], m)
+    starts = np.concatenate([[0], bounds])
+    ends = np.concatenate([bounds, [n]])
+    # vectorized distinct-coordinate prefilter (same as ``query``): count
+    # coordinate changes per group with one reduceat
+    cid_step = np.empty(n, bool)
+    cid_step[0] = True
+    cid_step[1:] = cid_all[1:] != cid_all[:-1]
+    cid_step[starts] = True
+    distinct = np.add.reduceat(cid_step, starts)
+    keep = distinct >= m
+    sizes = ends - starts
+
+    small_results: dict[int, list] = {}
+    if sweep == "grouped":
+        sm_ids = np.flatnonzero(keep & (sizes <= _SMALL_GROUP_MAX))
+        # size buckets keep the padded width S tight for the (dominant)
+        # tiny groups instead of paying the largest small group everywhere
+        for b_lo, b_hi in ((0, 8), (8, 16), (16, _SMALL_GROUP_MAX)):
+            ids = sm_ids[(sizes[sm_ids] > b_lo) & (sizes[sm_ids] <= b_hi)]
+            if not len(ids):
+                continue
+            s_starts, s_sizes = starts[ids], sizes[ids]
+            G, S = len(ids), int(s_sizes.max())
+            arr = np.zeros((G, S, 4), np.int64)
+            rows = win_all[_concat_ranges(s_starts, s_sizes), 1:5]
+            slot = np.arange(len(rows)) - np.repeat(
+                np.cumsum(s_sizes) - s_sizes, s_sizes)
+            arr[np.repeat(np.arange(G), s_sizes), slot] = rows
+            for g, blocks in zip(ids, _sweep_small_batch(arr, s_sizes, m)):
+                small_results[int(g)] = blocks
+
+    for g in np.flatnonzero(keep):
+        g = int(g)
+        lo = starts[g]
+        blocks = small_results[g] if g in small_results else \
+            _sweep_text(win_all[lo:ends[g], 1:5], m)
         if blocks:
             results[int(qid_all[lo])].append(
                 Alignment(text_id=int(win_all[lo, 0]), blocks=blocks))
@@ -198,7 +379,14 @@ def batch_query(index, queries, theta: float, *,
 
 def estimate_similarity(index, query_tokens, data_tokens
                         ) -> float:
-    """Sketch-estimated Jaccard between two full texts (Eq. 2 / Eq. 5)."""
+    """Sketch-estimated Jaccard between two full texts (Eq. 2 / Eq. 5):
+    one vectorized equality over the k sketch coordinates."""
     sq = index.scheme.sketch(query_tokens)
     sd = index.scheme.sketch(data_tokens)
-    return float(np.mean([1.0 if x == y else 0.0 for x, y in zip(sq, sd)]))
+    if sq and isinstance(sq[0], (tuple, list)):
+        # ICWS identities: exact (token, k_int) pairs -> (k, 2) int64
+        eq = np.asarray(sq, np.int64) == np.asarray(sd, np.int64)
+        return float(np.mean(eq.all(axis=1)))
+    # multiset identities: 61/64-bit hashes -> uint64 (the frozen tables'
+    # key packing)
+    return float(np.mean(np.array(sq, np.uint64) == np.array(sd, np.uint64)))

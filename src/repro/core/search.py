@@ -18,7 +18,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-from .frozen import FrozenTable
+from .frozen import FrozenTable, ProbeArena
 
 
 @dataclass
@@ -31,6 +31,7 @@ class SearchIndex:
     num_texts: int = 0
     num_windows: int = 0
     text_lengths: list[int] = field(default_factory=list)
+    _arena: ProbeArena | None = field(default=None, repr=False, compare=False)
 
     # -- query-engine surface (duck-typed with IndexBuilder) ----------------
 
@@ -47,6 +48,14 @@ class SearchIndex:
         """Postings of hash identity ``v`` in table ``i``: an int32 (m, 5)
         row view (iterates as 5-sequences, like the builder's tuples)."""
         return self.tables[i].get(v)
+
+    def arena(self) -> ProbeArena:
+        """The fused probe arena over all k tables (one-searchsorted batch
+        probes).  Built lazily from the tables and cached; a store load
+        restores the persisted arena instead (mmap-able)."""
+        if self._arena is None:
+            self._arena = ProbeArena.from_tables(self.tables)
+        return self._arena
 
     def freeze(self) -> "SearchIndex":
         """Already frozen; returns self so build/serve call sites compose."""

@@ -21,6 +21,7 @@ Persistence is two-format by lifecycle stage:
 from __future__ import annotations
 
 import json
+import math
 import pickle
 from dataclasses import dataclass, field
 from pathlib import Path
@@ -29,7 +30,7 @@ import numpy as np
 
 from . import store as index_store
 from .builder import IndexBuilder
-from .query import Alignment, batch_query, query
+from .query import Alignment, _sweep_gathered, batch_probe, query
 from .search import SearchIndex
 
 META_VERSION = 1
@@ -50,6 +51,7 @@ class ShardedAlignmentIndex:
     doc_map: list[tuple[int, int]] = field(default_factory=list)
     # doc_map[global_id] = (shard, local_id)
     _inverse: dict | None = field(default=None, init=False, repr=False)
+    _pool: object = field(default=None, init=False, repr=False)
 
     def __post_init__(self):
         self.shards = [IndexBuilder(scheme=self.scheme, method=self.method)
@@ -84,17 +86,46 @@ class ShardedAlignmentIndex:
         return sorted(out, key=lambda a: a.text_id)
 
     def batch_query(self, texts, theta: float, *,
-                    backend: str = "exact") -> list[list[Alignment]]:
+                    sketches: list[list] | None = None,
+                    backend: str = "exact", probe_backend: str = "numpy",
+                    fanout: str = "threaded") -> list[list[Alignment]]:
         """Batched fan-out: sketch the batch once (shards share the hash
         family), probe every shard's tables with the same sketches, union
-        per query in the global id space."""
+        per query in the global id space.
+
+        ``fanout="threaded"`` (default) overlaps the per-shard *probe*
+        stage (:func:`repro.core.query.batch_probe`) with a thread pool —
+        NumPy releases the GIL inside searchsorted/gather and mmap-backed
+        shards overlap page-ins — and then runs the GIL-bound plane-sweep
+        stage serially (threading it just convoys on the GIL);
+        ``"serial"`` keeps the fully sequential loop.  Results are merged
+        in shard order either way, so the two are block-identical.
+        ``probe_backend`` picks each shard's probe path, and ``sketches``
+        short-circuits sketching when the caller already holds the batch's
+        sketch coordinates (shards share the hash family, so they are
+        computed once regardless).
+        """
         if not texts:
             return []
-        sketches = self.scheme.sketch_batch(texts, backend=backend)
+        if sketches is None:
+            sketches = self.scheme.sketch_batch(texts, backend=backend)
         inverse = self._inverse_doc_map()
+        B = len(texts)
+        m = max(1, math.ceil(self.scheme.k * theta))
+
+        def probe_shard(shard):
+            return batch_probe(shard, sketches, probe_backend=probe_backend)
+
+        if fanout == "threaded" and self.n_shards > 1:
+            gathered = list(self._fanout_pool().map(probe_shard,
+                                                    self.shards))
+        else:
+            gathered = [probe_shard(shard) for shard in self.shards]
+        shard_results = [_sweep_gathered(g, B, m, "grouped")
+                         for g in gathered]
+
         per_q: list[list[Alignment]] = [[] for _ in texts]
-        for s, shard in enumerate(self.shards):
-            res = batch_query(shard, texts, theta, sketches=sketches)
+        for s, res in enumerate(shard_results):
             for qi, als in enumerate(res):
                 per_q[qi].extend(
                     Alignment(text_id=inverse[(s, al.text_id)],
@@ -112,6 +143,20 @@ class ShardedAlignmentIndex:
 
     def nbytes(self) -> int:
         return sum(s.nbytes() for s in self.shards)
+
+    def _fanout_pool(self):
+        """Reused fan-out thread pool (spawning one per batch_query would
+        pay n_shards thread start/joins on every serving call).  Lifetime
+        is tied to the index: when it is dropped, CPython's executor
+        weakref callback wakes the idle workers and they exit — no
+        explicit shutdown needed."""
+        if self._pool is None:
+            import os
+            from concurrent.futures import ThreadPoolExecutor
+            self._pool = ThreadPoolExecutor(
+                max_workers=min(self.n_shards, os.cpu_count() or 1),
+                thread_name_prefix="shard-fanout")
+        return self._pool
 
     def _inverse_doc_map(self) -> dict[tuple[int, int], int]:
         """(shard, local_id) -> global_id, cached between queries (rebuilt

@@ -4,11 +4,22 @@ One directory per index::
 
     index_dir/
       manifest.json           format/version, scheme spec, method, doc map,
-                              text lengths, per-table kinds
+                              text lengths, per-table kinds, arena meta
       table_00.keys.npy       uint64 sorted packed hash identities
       table_00.offsets.npy    int64 CSR row pointers
       table_00.windows.npy    int32 (nwin, 5) compact-window rows
       ...                     one triple per sketch coordinate
+      arena.keys.npy          fused probe arena: one sorted key array,
+      arena.coords.npy        coordinate tags ("coord" mode; empty in
+      arena.offsets.npy       "packed" mode), global CSR offsets, and the
+      arena.windows.npy       slot-regrouped windows matrix
+
+The arena quadruple is the serving-side fast path (one searchsorted per
+batch); it roughly doubles the windows bytes on disk but restores mmap'd
+like the tables, so the batched probe never materializes a rebuild.
+Stores written before the arena existed (or with the files deleted) still
+load — the arena is then rebuilt lazily from the tables on first batched
+query.
 
 The arrays are raw ``.npy`` files (not a zipped ``.npz``) precisely so
 ``np.load(mmap_mode="r")`` can map them: a larger-than-RAM corpus then
@@ -30,7 +41,7 @@ from pathlib import Path
 
 import numpy as np
 
-from .frozen import FrozenTable
+from .frozen import FrozenTable, ProbeArena
 from .schemes import scheme_from_spec, scheme_spec
 
 FORMAT = "mono-index"
@@ -38,10 +49,17 @@ FORMAT_VERSION = 1
 
 _ARRAYS = ("keys", "offsets", "windows")
 _DTYPES = {"keys": np.uint64, "offsets": np.int64, "windows": np.int32}
+_ARENA_ARRAYS = ("keys", "coords", "offsets", "windows")
+_ARENA_DTYPES = {"keys": np.uint64, "coords": np.uint16,
+                 "offsets": np.int64, "windows": np.int32}
 
 
 def _table_path(root: Path, i: int, name: str) -> Path:
     return root / f"table_{i:02d}.{name}.npy"
+
+
+def _arena_path(root: Path, name: str) -> Path:
+    return root / f"arena.{name}.npy"
 
 
 def save_index(index, path, *, doc_map=None,
@@ -64,6 +82,11 @@ def save_index(index, path, *, doc_map=None,
     for i, t in enumerate(index.tables):
         for name in _ARRAYS:
             np.save(_table_path(root, i, name), getattr(t, name))
+    # fused probe arena: built once at save time (reuses the index's cache)
+    # so serving loads map it instead of rebuilding from the tables
+    arena = index.arena()
+    for name in _ARENA_ARRAYS:
+        np.save(_arena_path(root, name), getattr(arena, name))
     manifest = {
         "format": FORMAT,
         "format_version": FORMAT_VERSION,
@@ -76,6 +99,7 @@ def save_index(index, path, *, doc_map=None,
                     if doc_map is not None else None),
         "tables": [{"kind": t.kind, "kint_min": int(t.kint_min)}
                    for t in index.tables],
+        "arena": {"mode": arena.mode, "max_run": int(arena.max_run)},
     }
     tmp = root / "manifest.json.tmp"
     tmp.write_text(json.dumps(manifest))
@@ -133,10 +157,36 @@ def load_index(path, *, mmap: bool = True, scheme=None):
             arrays[name] = a
         tables.append(FrozenTable(kind=tmeta["kind"],
                                   kint_min=int(tmeta["kint_min"]), **arrays))
+    arena = _load_arena(root, manifest, tables, mode)
     return SearchIndex(scheme=scheme, method=manifest["method"],
                        tables=tables, num_texts=manifest["num_texts"],
                        num_windows=manifest["num_windows"],
-                       text_lengths=list(manifest["text_lengths"]))
+                       text_lengths=list(manifest["text_lengths"]),
+                       _arena=arena)
+
+
+def _load_arena(root: Path, manifest: dict, tables: list[FrozenTable],
+                mmap_mode):
+    """Map the persisted probe arena back; ``None`` (lazy rebuild from the
+    tables) for pre-arena stores or missing/mismatched files."""
+    ameta = manifest.get("arena")
+    if not ameta:
+        return None
+    arrays = {}
+    for name in _ARENA_ARRAYS:
+        path = _arena_path(root, name)
+        if not path.exists():
+            return None
+        a = np.load(path, mmap_mode=mmap_mode)
+        if a.dtype != _ARENA_DTYPES[name]:
+            raise ValueError(f"{root}: arena {name} has dtype {a.dtype}, "
+                             f"expected {_ARENA_DTYPES[name]}")
+        arrays[name] = a
+    return ProbeArena(mode=ameta["mode"], max_run=int(ameta["max_run"]),
+                      kinds=[t.kind for t in tables],
+                      kint_mins=np.array([t.kint_min for t in tables],
+                                         np.int64),
+                      **arrays)
 
 
 def is_index_store(path) -> bool:
