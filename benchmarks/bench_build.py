@@ -1,0 +1,137 @@
+"""Index-construction study — the paper's headline claim is BUILD speed
+(MONO constructs its index up to 26x faster than AllAlign at equal serving
+quality), so this suite times the two build pipelines end-to-end
+(tokens -> frozen CSR tables):
+
+* ``dict``     — the incremental ``IndexBuilder``: per-window boxed tuples
+  into dict tables, then a full dict re-walk in ``freeze()``.
+* ``columnar`` — the batch ``ColumnarBuilder``: vectorized columnar key
+  generation, chunked per-table window columns, one global stable sort per
+  table (``FrozenTable.from_packed_columns``).
+
+Both pipelines must produce *block-identical* frozen arrays (the
+``columnar_freeze_block_identical`` claim), and the columnar path must be
+>= 2x faster at the default bench size (``columnar_build_speedup_ge_2x``).
+A serial-vs-process sharded build row covers the fan-out path (spawn
+workers pay ~1s startup, so the win only shows on corpora that dwarf it —
+the row is informational, the equality of its outputs is asserted).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ColumnarBuilder, IndexBuilder, \
+    ShardedAlignmentIndex, make_scheme
+
+from .common import print_table, save_result, timed, zipf_text
+
+
+def _tables_identical(a, b) -> bool:
+    """Bit-for-bit equality of two frozen indexes' CSR arrays."""
+    if len(a.tables) != len(b.tables):
+        return False
+    for ta, tb in zip(a.tables, b.tables):
+        if ta.kind != tb.kind or ta.kint_min != tb.kint_min:
+            return False
+        if not (np.array_equal(ta.keys, tb.keys)
+                and np.array_equal(ta.offsets, tb.offsets)
+                and np.array_equal(ta.windows, tb.windows)):
+            return False
+    return True
+
+
+def run(quick: bool = True) -> dict:
+    k = 16
+    sizes = [(12, 700), (24, 900)] if quick else [(24, 900), (96, 1500)]
+    rows, speedup_at, identical_all = [], {}, True
+    for n_docs, doc_len in sizes:
+        scheme = make_scheme("multiset", seed=33, k=k)
+        docs = [zipf_text(doc_len, seed=500 + i) for i in range(n_docs)]
+
+        def build_dict():
+            idx = IndexBuilder(scheme=scheme).build(docs)
+            return idx, idx.freeze()
+
+        def build_columnar():
+            builder = ColumnarBuilder(scheme=scheme).build(docs)
+            return builder, builder.freeze()
+
+        # best-of-2: the dict baseline is pure-Python-bound and the
+        # columnar path NumPy-bound, so they respond differently to CPU
+        # contention on shared CI runners — one retry keeps the gated
+        # speedup ratio from dipping on a single noisy measurement
+        (dict_idx, fz_dict), t_dict = timed(build_dict, repeat=2)
+        (col_idx, fz_col), t_col = timed(build_columnar, repeat=2)
+        identical = _tables_identical(fz_dict, fz_col)
+        identical_all = identical_all and identical
+        speedup_at[n_docs] = t_dict / t_col
+        rows.append({"docs": n_docs, "doc_len": doc_len,
+                     "windows": dict_idx.num_windows,
+                     "dict_s": t_dict, "columnar_s": t_col,
+                     "speedup": t_dict / t_col,
+                     "dict_MB": dict_idx.nbytes() / 1e6,
+                     "columnar_MB": col_idx.nbytes() / 1e6,
+                     "identical": identical})
+
+    # weighted-Jaccard datapoint (ICWS keygen + pair-packed tables take a
+    # different columnar path than the uint64 multiset keys)
+    w_scheme = make_scheme("weighted", seed=34, k=k)
+    w_docs = [zipf_text(500, seed=700 + i) for i in range(8 if quick else 24)]
+    def build_dict_weighted():
+        idx = IndexBuilder(scheme=w_scheme).build(w_docs)
+        return idx, idx.freeze()
+
+    def build_columnar_weighted():
+        builder = ColumnarBuilder(scheme=w_scheme).build(w_docs)
+        return builder, builder.freeze()
+
+    (_wd_builder, w_fzd), t_wd = timed(build_dict_weighted)
+    (_wc_builder, w_fzc), t_wc = timed(build_columnar_weighted)
+    w_identical = _tables_identical(w_fzd, w_fzc)
+    identical_all = identical_all and w_identical
+    rows_weighted = [{"scheme": "weighted", "docs": len(w_docs),
+                      "dict_s": t_wd, "columnar_s": t_wc,
+                      "speedup": t_wd / t_wc, "identical": w_identical}]
+
+    # ---- sharded columnar build: serial vs process-pool fan-out -----------
+    n_shards = 4
+    sh_docs = docs            # largest corpus from the size sweep
+    serial_idx, t_serial = timed(
+        lambda: ShardedAlignmentIndex(
+            scheme=scheme, n_shards=n_shards).build(
+                sh_docs, pipeline="columnar", fanout="serial"))
+    process_idx, t_process = timed(
+        lambda: ShardedAlignmentIndex(
+            scheme=scheme, n_shards=n_shards).build(
+                sh_docs, pipeline="columnar", fanout="process"))
+    sharded_equal = all(
+        _tables_identical(serial_idx.shards[s], process_idx.shards[s])
+        for s in range(n_shards))
+    rows_sharded = [
+        {"fanout": "serial", "shards": n_shards, "build_s": t_serial,
+         "equal": True},
+        {"fanout": "process", "shards": n_shards, "build_s": t_process,
+         "equal": sharded_equal},
+    ]
+
+    print_table("build pipeline: dict vs columnar (multiset, k=16)", rows)
+    print_table("build pipeline: weighted Jaccard", rows_weighted)
+    print_table(f"sharded columnar build fan-out (docs={len(sh_docs)})",
+                rows_sharded)
+
+    default_size = sizes[-1][0]
+    claims = {
+        # the paper's headline territory: construction speed.  Gate at 2x
+        # on the default bench size; observed ~2.4x locally
+        "columnar_build_speedup_ge_2x": speedup_at[default_size] >= 2.0,
+        # the whole point of sharing one serving layout: both pipelines
+        # freeze to np.array_equal CSR arrays on every table
+        "columnar_freeze_block_identical": bool(identical_all),
+        "sharded_process_equals_serial": bool(sharded_equal),
+    }
+    rec = {"sizes": rows, "weighted": rows_weighted,
+           "sharded_fanout": rows_sharded,
+           "speedup": speedup_at, "claims": claims}
+    save_result("build", rec)
+    return rec

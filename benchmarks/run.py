@@ -9,14 +9,16 @@ import json
 import sys
 import time
 
-from . import (bench_active_opt, bench_query, bench_sketch_kernels,
-               bench_vs_allalign, bench_weights, roofline)
+from . import (bench_active_opt, bench_build, bench_query,
+               bench_sketch_kernels, bench_vs_allalign, bench_weights,
+               roofline)
 
 SUITES = {
     "active_opt": bench_active_opt.run,      # paper Fig. 5
     "weights": bench_weights.run,            # paper Fig. 6
     "vs_allalign": bench_vs_allalign.run,    # paper Fig. 7
     "query": bench_query.run,                # paper §6 query study
+    "build": bench_build.run,                # §6 construction study
     "sketch_kernels": bench_sketch_kernels.run,
     "roofline": roofline.run,                # EXPERIMENTS.md §Roofline
 }

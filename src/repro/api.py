@@ -99,15 +99,38 @@ class Aligner:
               shards: int = 1, method: str = "mono_active", seed: int = 0,
               tf: str = "raw", idf: str | None = None,
               family: str = "universal", tokenizer=None,
+              pipeline: str = "dict", fanout: str = "serial",
+              store=None, mmap: bool = True,
               config: AlignerConfig | None = None) -> "Aligner":
         """Fit weights from ``corpus``, construct the scheme, and index
         every document.  ``corpus`` is an iterable of token arrays or
         strings (strings are tokenized; pass ``tokenizer=`` to control
-        how, else a default ``HashWordTokenizer`` is used)."""
+        how, else a default ``HashWordTokenizer`` is used).
+
+        ``pipeline`` picks the construction path: ``"dict"`` (default)
+        builds mutable dict tables that stay open for :meth:`add`;
+        ``"columnar"`` runs the batch columnar pipeline — the index comes
+        back already frozen (block-identical tables, several times faster
+        to build).  With ``pipeline="columnar"``: ``fanout``
+        ("serial"/"threaded"/"process") parallelizes a sharded build
+        across shards, and ``store=`` streams the finished index straight
+        into a versioned store directory (``mmap=True`` serves from the
+        mapped arrays) — corpus to saved, serving-ready store in one
+        pass, no separate :meth:`save` needed."""
         if config is None:
             config = AlignerConfig(similarity=similarity, k=k, shards=shards,
                                    method=method, seed=seed, tf=tf, idf=idf,
                                    family=family)
+        if pipeline not in ("dict", "columnar"):
+            raise ValueError(f"unknown pipeline {pipeline!r}; "
+                             "expected 'dict' or 'columnar'")
+        if fanout not in ("serial", "threaded", "process"):
+            raise ValueError(f"unknown fanout {fanout!r}; expected "
+                             "'serial', 'threaded' or 'process'")
+        if pipeline == "dict" and (store is not None or fanout != "serial"):
+            raise ValueError(
+                "store/fanout are columnar-pipeline options; pass "
+                'pipeline="columnar"')
         docs = list(corpus)
         if docs and isinstance(docs[0], str) and tokenizer is None:
             from .data.tokenizer import HashWordTokenizer
@@ -118,9 +141,21 @@ class Aligner:
         if config.shards > 1:
             self._index = ShardedAlignmentIndex(
                 scheme=scheme, n_shards=config.shards, method=config.method)
+            self._index.build(token_docs, pipeline=pipeline, fanout=fanout,
+                              store=store, mmap=mmap)
+        elif pipeline == "columnar":
+            from .core.columnar import ColumnarBuilder
+            builder = ColumnarBuilder(
+                scheme=scheme, method=config.method).build(token_docs)
+            if store is not None:
+                self._index = builder.freeze_to_store(store, mmap=mmap)
+            else:
+                self._index = builder.freeze(arena=True)
         else:
-            self._index = IndexBuilder(scheme=scheme, method=config.method)
-        self._index.build(token_docs)
+            self._index = IndexBuilder(
+                scheme=scheme, method=config.method).build(token_docs)
+        if store is not None:
+            self._write_meta(Path(store))
         return self
 
     # -- lifecycle ----------------------------------------------------------
@@ -173,6 +208,11 @@ class Aligner:
 
     # -- persistence --------------------------------------------------------
 
+    def _write_meta(self, root: Path) -> None:
+        meta = {"similarity": self.config.similarity,
+                "tokenizer": _tokenizer_spec(self.tokenizer)}
+        (root / _ALIGNER_META).write_text(json.dumps(meta))
+
     def save(self, path) -> "Aligner":
         """Freeze (if still building) and write the versioned store: JSON
         manifests + raw ``.npy`` arrays per frozen table, one directory per
@@ -183,9 +223,7 @@ class Aligner:
             self._index.save(root)
         else:
             save_index(self._index, root)
-        meta = {"similarity": self.config.similarity,
-                "tokenizer": _tokenizer_spec(self.tokenizer)}
-        (root / _ALIGNER_META).write_text(json.dumps(meta))
+        self._write_meta(root)
         return self
 
     @classmethod

@@ -7,6 +7,7 @@
 # repro.api.Aligner is the one-object facade.
 from .allalign import allalign_icws, allalign_multiset, allalign_partition
 from .builder import IndexBuilder
+from .columnar import ColumnarBuilder
 from .frozen import FrozenTable, ProbeArena
 from .hashing import MixHash, UniversalHash
 from .icws import ICWS
@@ -28,7 +29,8 @@ from .weights import WeightFn
 
 __all__ = [
     "ICWS", "UniversalHash", "MixHash", "WeightFn", "KeySet", "Partition",
-    "AlignmentIndex", "IndexBuilder", "SearchIndex", "MultisetScheme",
+    "AlignmentIndex", "IndexBuilder", "ColumnarBuilder", "SearchIndex",
+    "MultisetScheme",
     "WeightedScheme", "make_scheme", "scheme_spec", "scheme_from_spec",
     "Alignment",
     "generate_keys_multiset", "generate_keys_icws", "occurrence_lists",

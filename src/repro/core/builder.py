@@ -12,6 +12,11 @@ personality and stays usable afterwards.
 ``query``/``batch_query`` accept a builder directly (dict-table probes), so
 admit-as-you-go workloads like :class:`repro.data.dedup.DedupFilter` never
 need to freeze.
+
+For whole-corpus (batch) construction, the columnar pipeline
+(:class:`repro.core.columnar.ColumnarBuilder`) produces block-identical
+frozen tables without ever materializing these dict tables, several times
+faster — this builder remains the incremental path.
 """
 
 from __future__ import annotations
@@ -23,6 +28,7 @@ import numpy as np
 
 from .allalign import allalign_partition
 from .frozen import FrozenTable, dict_tables_nbytes
+from .keys import occurrence_lists
 from .partition import monotonic_partition
 
 _METHODS = {
@@ -58,7 +64,6 @@ class IndexBuilder:
         self.num_texts += 1
         self.text_lengths.append(len(tokens))
         partition_fn, active = _METHODS[self.method]
-        from .keys import occurrence_lists
         occ = occurrence_lists(np.asarray(tokens, dtype=np.int64))
         for i in range(self.scheme.k):
             keys = self.scheme.keys(tokens, i, active, occ=occ)

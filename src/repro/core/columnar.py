@@ -1,0 +1,228 @@
+"""Columnar build pipeline: partition -> CSR without dict tables.
+
+The paper's headline result is index *construction* speed, and the dict
+:class:`~repro.core.builder.IndexBuilder` pays for its incrementality on
+every window: a boxed ``(tid, a, b, c, d)`` tuple, an ``int()`` coercion
+per coordinate, and a ``setdefault().append()`` per posting — then
+``freeze()`` re-walks every dict to build the CSR serving arrays.
+
+``ColumnarBuilder`` never materializes a dict.  Per text it runs the
+vectorized columnar key generation (``scheme.key_columns`` — identities
+stay NumPy arrays, no per-gid Python objects), partitions, and appends the
+``Partition``'s already-columnar ``(key, tid, a, b, c, d)`` arrays into
+chunked per-table append buffers.  ``freeze()`` turns each table's buffers
+into a :class:`~repro.core.frozen.FrozenTable` with ONE global stable sort
+(``FrozenTable.from_packed_columns``) and can feed the fused
+:class:`~repro.core.frozen.ProbeArena` directly from the same window
+columns (``arena=True``) — the intermediate per-table regroup of
+``ProbeArena.from_tables`` is skipped.  Both outputs are block-identical
+to the dict pipeline's (asserted in ``tests/test_columnar_build.py`` and
+gated by the ``columnar_freeze_block_identical`` bench claim).
+
+``freeze_to_store(path)`` is the streaming variant: each table's ``.npy``
+files are written the moment its columns are finalized and the buffers are
+released, so the peak footprint never holds all k frozen tables *and* the
+build buffers; the returned :class:`~repro.core.search.SearchIndex` serves
+straight from the mmap'd store.
+
+``_shard_build_payload`` is the process-pool worker used by
+``ShardedAlignmentIndex.build(fanout="process")`` — the columnar path is
+NumPy-heavy rather than dict-mutation-bound, so shards parallelize across
+processes (schemes travel as JSON ``scheme_spec``; weight closures don't
+pickle).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable
+
+import numpy as np
+
+from .builder import _METHODS
+from .frozen import (KIND_EMPTY, KIND_INT, KIND_PAIR, FrozenTable,
+                     ProbeArena, pack_ident_columns)
+from .keys import occurrence_lists
+from .search import SearchIndex
+
+
+@dataclass
+class _TableColumns:
+    """Chunked append buffers for one inverted table's window columns."""
+
+    kind: str = KIND_EMPTY
+    idents: list = field(default_factory=list)   # per-text identity chunks
+    windows: list = field(default_factory=list)  # per-text int32 (n, 5)
+
+    def append(self, ident: np.ndarray, windows: np.ndarray) -> None:
+        if self.kind == KIND_EMPTY:
+            self.kind = KIND_PAIR if ident.ndim == 2 else KIND_INT
+        self.idents.append(ident)
+        self.windows.append(windows)
+
+    def concat(self) -> tuple[np.ndarray, np.ndarray]:
+        if not self.windows:
+            return np.empty(0, np.uint64), np.empty((0, 5), np.int32)
+        return np.concatenate(self.idents), np.concatenate(self.windows)
+
+    def packed(self) -> tuple[np.ndarray, np.ndarray, int]:
+        """(packed u64 keys, windows, kint_min) in append order."""
+        ident, windows = self.concat()
+        if self.kind == KIND_EMPTY:
+            return np.empty(0, np.uint64), windows, 0
+        packed, kint_min = pack_ident_columns(self.kind, ident)
+        return packed, windows, kint_min
+
+    def clear(self) -> None:
+        self.idents, self.windows = [], []
+
+    @property
+    def nbytes(self) -> int:
+        return sum(a.nbytes for a in self.idents) + \
+            sum(a.nbytes for a in self.windows)
+
+
+@dataclass
+class ColumnarBuilder:
+    """Batch build-side index: chunked window columns, one-sort freeze.
+
+    Duck-types the build half of ``IndexBuilder`` (``add_text`` / ``build``
+    / ``freeze`` / ``nbytes``) but is a *batch* builder: it cannot be
+    probed pre-freeze (no ``lookup``) — admit-as-you-go workloads like
+    ``DedupFilter`` keep using the dict ``IndexBuilder``.
+    """
+
+    scheme: object
+    method: str = "mono_active"
+    num_texts: int = 0
+    num_windows: int = 0
+    text_lengths: list[int] = field(default_factory=list)
+    _cols: list[_TableColumns] = field(default_factory=list)
+
+    def __post_init__(self):
+        if not self._cols:
+            self._cols = [_TableColumns() for _ in range(self.scheme.k)]
+
+    @property
+    def is_frozen(self) -> bool:
+        return False
+
+    def add_text(self, tokens) -> int:
+        """Partition one text under all k hash functions and append its
+        window columns (no per-window Python loop)."""
+        tokens = np.asarray(tokens, dtype=np.int64)
+        tid = self.num_texts
+        self.num_texts += 1
+        self.text_lengths.append(len(tokens))
+        partition_fn, active = _METHODS[self.method]
+        occ = occurrence_lists(tokens)
+        for i in range(self.scheme.k):
+            keys = self.scheme.key_columns(tokens, i, active, occ=occ)
+            part = partition_fn(keys)
+            nw = len(part)
+            self.num_windows += nw
+            if nw == 0:
+                continue
+            win = np.empty((nw, 5), np.int32)
+            win[:, 0] = tid
+            win[:, 1] = part.a
+            win[:, 2] = part.b
+            win[:, 3] = part.c
+            win[:, 4] = part.d
+            self._cols[i].append(keys.gid_ident[part.gid], win)
+        return tid
+
+    def build(self, texts: Iterable) -> "ColumnarBuilder":
+        for tokens in texts:
+            self.add_text(tokens)
+        return self
+
+    def nbytes(self) -> int:
+        """Resident bytes of the append buffers (exact array bytes)."""
+        return sum(c.nbytes for c in self._cols)
+
+    # -- freeze paths -------------------------------------------------------
+
+    def freeze(self, *, arena: bool = False) -> SearchIndex:
+        """Compact the window columns into an immutable ``SearchIndex``.
+
+        ``arena=True`` additionally builds the fused probe arena straight
+        from the window columns (``ProbeArena.from_window_columns`` — one
+        global lexsort, no per-table regroup) and caches it on the index.
+        """
+        tables, packed_cols, win_cols, kint_mins = [], [], [], []
+        for col in self._cols:
+            packed, windows, kint_min = col.packed()
+            tables.append(FrozenTable.from_packed_columns(
+                col.kind if len(windows) else KIND_EMPTY,
+                packed, windows, kint_min))
+            if arena:
+                packed_cols.append(packed)
+                win_cols.append(windows)
+                kint_mins.append(kint_min)
+        idx = SearchIndex(
+            scheme=self.scheme, method=self.method, tables=tables,
+            num_texts=self.num_texts, num_windows=self.num_windows,
+            text_lengths=list(self.text_lengths))
+        if arena:
+            idx._arena = ProbeArena.from_window_columns(
+                [t.kind for t in tables], packed_cols, win_cols,
+                np.array(kint_mins, np.int64))
+        return idx
+
+    def freeze_to_store(self, path, *, mmap: bool = True,
+                        include_scheme: bool = True,
+                        doc_map=None) -> SearchIndex:
+        """Freeze straight into a versioned store directory, streaming.
+
+        Each table's ``.npy`` files are written the moment its columns are
+        finalized (``store.IndexWriter``) and its buffers are released —
+        the k frozen tables are never all resident at once.  The arena is
+        then built from the retained window columns, persisted, and the
+        finished store is loaded back (``mmap=True`` maps it read-only) as
+        the returned serving ``SearchIndex`` — corpus to mmap-backed store
+        in one pass.
+        """
+        from .store import IndexWriter, load_index
+        writer = IndexWriter(
+            path, scheme=self.scheme if include_scheme else None,
+            method=self.method)
+        kinds, packed_cols, win_cols, kint_mins = [], [], [], []
+        for i, col in enumerate(self._cols):
+            packed, windows, kint_min = col.packed()
+            kind = col.kind if len(windows) else KIND_EMPTY
+            writer.add_table(i, FrozenTable.from_packed_columns(
+                kind, packed, windows, kint_min))
+            kinds.append(kind)
+            packed_cols.append(packed)
+            win_cols.append(windows)
+            kint_mins.append(kint_min)
+            col.clear()                      # buffers consumed -> release
+        writer.add_arena(ProbeArena.from_window_columns(
+            kinds, packed_cols, win_cols, np.array(kint_mins, np.int64)))
+        del packed_cols, win_cols
+        writer.finalize(num_texts=self.num_texts,
+                        num_windows=self.num_windows,
+                        text_lengths=self.text_lengths, doc_map=doc_map)
+        return load_index(path, mmap=mmap, scheme=self.scheme)
+
+
+def _shard_build_payload(spec: dict, method: str, docs: list,
+                         store_dir: str | None, doc_map=None):
+    """Process-pool worker: columnar-build one shard.
+
+    With ``store_dir``, the shard is frozen straight into that store
+    directory (arrays never cross the process boundary; the parent
+    mmap-loads the finished store) and ``None`` is returned.  Without it,
+    the frozen shard travels back as its array ``state_dict`` (the scheme
+    stays behind — weight closures don't pickle — and the parent rebinds
+    its own).
+    """
+    from .schemes import scheme_from_spec
+    scheme = scheme_from_spec(spec)
+    builder = ColumnarBuilder(scheme=scheme, method=method).build(docs)
+    if store_dir is not None:
+        builder.freeze_to_store(store_dir, include_scheme=False,
+                                doc_map=doc_map)
+        return None
+    return builder.freeze().state_dict()

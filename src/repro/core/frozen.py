@@ -75,6 +75,33 @@ def _pack_pairs(toks: np.ndarray, kints: np.ndarray, kint_min
     return np.where(ok, packed, _MISS), ok
 
 
+def pack_ident_columns(kind: str, ident: np.ndarray
+                       ) -> tuple[np.ndarray, int]:
+    """Pack per-window identity columns into sortable uint64 keys.
+
+    ``ident`` is what the columnar build pipeline accumulates: uint64 (N,)
+    hash values for ``kind == "int"`` tables, int64 (N, 2) (token, k_int)
+    rows for ``kind == "pair"``.  Returns (packed u64 (N,), kint_min) with
+    exactly the range checks (and bias) of ``FrozenTable.from_dict`` — the
+    distinct values of the window column ARE the table's keys, so checking
+    all windows is checking all keys.
+    """
+    if kind == KIND_PAIR:
+        toks = ident[:, 0]
+        kints = ident[:, 1]
+        if len(toks) and (toks.min() < 0 or toks.max() >= 1 << 32):
+            raise ValueError("token id out of uint32 range: cannot "
+                             "pack (token, k_int) keys for freezing")
+        kint_min = int(kints.min()) if len(kints) else 0
+        if len(kints) and int(kints.max()) - kint_min >= 1 << 32:
+            raise ValueError("k_int span exceeds uint32: cannot pack "
+                             "(token, k_int) keys for freezing")
+        packed = (toks.astype(np.uint64) << np.uint64(32)) | \
+            (kints - kint_min).astype(np.uint64)
+        return packed, kint_min
+    return np.ascontiguousarray(ident, np.uint64), 0
+
+
 def _concat_ranges(starts: np.ndarray, counts: np.ndarray) -> np.ndarray:
     """Concatenate [s, s+c) ranges into one index vector, vectorized."""
     total = int(counts.sum())
@@ -136,6 +163,43 @@ class FrozenTable:
             axis=0) if len(order) else np.empty((0, 5), np.int32)
         return cls(kind=kind, keys=packed, offsets=offsets, windows=windows,
                    kint_min=kint_min)
+
+    @classmethod
+    def from_packed_columns(cls, kind: str, packed: np.ndarray,
+                            windows: np.ndarray, kint_min: int = 0
+                            ) -> "FrozenTable":
+        """Columnar freeze: per-window packed keys + window rows -> CSR.
+
+        One global stable argsort groups the windows by ascending key while
+        preserving append order within each key — block-identical to
+        ``from_dict`` on the equivalent dict table (whose per-key lists
+        hold the same windows in the same append order), with no dict ever
+        materialized.
+        """
+        n = len(packed)
+        if n == 0:
+            return cls(kind=KIND_EMPTY, keys=np.empty(0, np.uint64),
+                       offsets=np.zeros(1, np.int64),
+                       windows=np.empty((0, 5), np.int32))
+        order = np.argsort(packed, kind="stable")
+        packed = packed[order]
+        windows = np.ascontiguousarray(
+            np.asarray(windows, np.int32).reshape(-1, 5)[order])
+        starts = np.concatenate(
+            [[0], np.flatnonzero(packed[1:] != packed[:-1]) + 1])
+        offsets = np.concatenate([starts, [n]]).astype(np.int64)
+        return cls(kind=kind, keys=np.ascontiguousarray(packed[starts]),
+                   offsets=offsets, windows=windows, kint_min=kint_min)
+
+    @classmethod
+    def from_columns(cls, kind: str, ident: np.ndarray, windows: np.ndarray
+                     ) -> "FrozenTable":
+        """``pack_ident_columns`` + ``from_packed_columns`` in one step."""
+        if kind == KIND_EMPTY or len(windows) == 0:
+            return cls.from_packed_columns(KIND_EMPTY,
+                                           np.empty(0, np.uint64), windows)
+        packed, kint_min = pack_ident_columns(kind, ident)
+        return cls.from_packed_columns(kind, packed, windows, kint_min)
 
     # -- probing ------------------------------------------------------------
 
@@ -283,6 +347,75 @@ class ProbeArena:
         np.cumsum(counts, out=offsets[1:])
         return cls(mode=mode, keys=keys, coords=coords, offsets=offsets,
                    windows=windows, kinds=kinds, kint_mins=kint_mins,
+                   max_run=max_run)
+
+    @classmethod
+    def from_window_columns(cls, kinds: list[str],
+                            packed_cols: list[np.ndarray],
+                            window_cols: list[np.ndarray],
+                            kint_mins: np.ndarray,
+                            mode: str | None = None) -> "ProbeArena":
+        """Build the arena straight from per-coordinate window columns.
+
+        ``packed_cols[i]``/``window_cols[i]`` are coordinate i's per-window
+        packed keys (``pack_ident_columns``) and int32 (n_i, 5) rows in
+        append order — the columnar build pipeline's buffers.  ONE global
+        lexsort replaces the per-table sort + slot regroup of
+        ``from_tables``; the result is array-identical to
+        ``from_tables([FrozenTable.from_packed_columns(...)])`` because
+        both orderings group windows by (coordinate, key) — resp. (key,
+        coordinate) — with append order preserved inside each slot.
+        """
+        k = len(kinds)
+        key_w = np.concatenate(packed_cols) if packed_cols else \
+            np.empty(0, np.uint64)
+        coord_w = np.concatenate(
+            [np.full(len(p), i, np.uint16)
+             for i, p in enumerate(packed_cols)]) if packed_cols else \
+            np.empty(0, np.uint16)
+        windows = np.concatenate(
+            [np.asarray(w, np.int32).reshape(-1, 5) for w in window_cols]
+        ) if window_cols else np.empty((0, 5), np.int32)
+        if mode is None:
+            packable = k <= (1 << (64 - PACK_SHIFT)) and (
+                key_w.size == 0 or np.uint64(key_w.max()) < _PACK_LIMIT)
+            mode = MODE_PACKED if packable else MODE_COORD
+        n = len(key_w)
+        max_run = 1
+        if n == 0:
+            keys = np.empty(0, np.uint64)
+            coords = np.empty(0, np.uint16)
+            offsets = np.zeros(1, np.int64)
+        elif mode == MODE_PACKED:
+            if np.uint64(key_w.max()) >= _PACK_LIMIT:
+                raise ValueError("keys exceed 56 bits: cannot re-key as "
+                                 "(coord << 56) | key; use mode='coord'")
+            order = np.lexsort((key_w, coord_w))   # coord-major, key asc
+            qk = (coord_w[order].astype(np.uint64)
+                  << np.uint64(PACK_SHIFT)) | key_w[order]
+            windows = np.ascontiguousarray(windows[order])
+            starts = np.concatenate(
+                [[0], np.flatnonzero(qk[1:] != qk[:-1]) + 1])
+            keys = np.ascontiguousarray(qk[starts])
+            coords = np.empty(0, np.uint16)
+            offsets = np.concatenate([starts, [n]]).astype(np.int64)
+        else:
+            order = np.lexsort((coord_w, key_w))   # key primary, coord tie
+            sk, sc = key_w[order], coord_w[order]
+            windows = np.ascontiguousarray(windows[order])
+            starts = np.concatenate(
+                [[0], np.flatnonzero((sk[1:] != sk[:-1]) |
+                                     (sc[1:] != sc[:-1])) + 1])
+            keys = np.ascontiguousarray(sk[starts])
+            coords = np.ascontiguousarray(sc[starts])
+            offsets = np.concatenate([starts, [n]]).astype(np.int64)
+            if keys.size:
+                change = np.flatnonzero(keys[1:] != keys[:-1])
+                bounds = np.concatenate([[0], change + 1, [len(keys)]])
+                max_run = int(np.diff(bounds).max())
+        return cls(mode=mode, keys=keys, coords=coords, offsets=offsets,
+                   windows=windows, kinds=list(kinds),
+                   kint_mins=np.asarray(kint_mins, np.int64),
                    max_run=max_run)
 
     # -- probing ------------------------------------------------------------

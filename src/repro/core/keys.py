@@ -39,6 +39,12 @@ class KeySet:
       multiset:  int(h)           (uint64 universal hash value)
       ICWS:      (token, k_int)   (exact integer identity, DESIGN.md §6)
     ``order`` is the sortable hash magnitude (uint64 h, or float64 a).
+
+    The columnar generators (``generate_key_columns_*``) skip the
+    ``gid_key`` list (building per-gid Python objects is exactly the boxing
+    cost the columnar build pipeline removes) and fill ``gid_ident``
+    instead: uint64 (G,) hash values for multiset, int64 (G, 2)
+    (token, k_int) rows for ICWS.
     """
 
     n: int
@@ -49,6 +55,7 @@ class KeySet:
     freq: np.ndarray
     gid_key: list = field(default_factory=list)
     gid_order: np.ndarray | None = None  # order value per gid (for sketches)
+    gid_ident: np.ndarray | None = None  # columnar identity per gid
 
     def __len__(self) -> int:
         return len(self.p)
@@ -194,6 +201,133 @@ def generate_keys_icws(tokens: np.ndarray, icws: ICWS, weight: WeightFn,
             freqs.append(np.full(cnt, x, dtype=np.int64))
     return _sort_keys(n, ps, qs, gids, orders, freqs, gid_key,
                       np.array(gid_order, dtype=np.float64))
+
+
+# ---------------------------------------------------------------------------
+# Columnar key generation (the build pipeline's vectorized fast path)
+# ---------------------------------------------------------------------------
+#
+# The per-gid loops above materialize one Python object per hash identity
+# (an int or a (token, k_int) tuple) because the dict IndexBuilder needs
+# hashable keys.  The columnar build pipeline never touches a dict, so its
+# generators below produce the same KeySet — provably the same (p, q, order,
+# freq) rows in the same visiting order, since the lexsort comparators are
+# value-based and (p, q) pairs are globally unique — from a handful of
+# whole-grid NumPy ops, with per-gid identities left as arrays
+# (``KeySet.gid_ident``).
+
+
+def _occ_columns(occ: dict[int, np.ndarray]):
+    """Flatten an occurrence dict into parallel columns (token-major):
+    (tokens (T,), freqs (T,), segment starts (T,), positions flat (N,),
+    token-index per grid cell (N,), frequency 1..f per grid cell (N,)).
+
+    Thin wrapper over ``_flat_grid`` (the ONE enumeration of the (t, x)
+    grid — the dict and columnar pipelines must share it or their key
+    orders silently diverge) that adds the per-cell token index and the
+    flat position array the columnar expansion needs."""
+    toks, fs, _t_rep, x_flat, bounds = _flat_grid(occ)
+    starts = np.concatenate([[0], bounds]).astype(np.int64)[:len(fs)]
+    pos_flat = (np.concatenate(list(occ.values()))
+                if occ else np.empty(0, np.int64))
+    ti_flat = np.repeat(np.arange(len(fs), dtype=np.int64), fs)
+    return toks, fs, starts, pos_flat, ti_flat, x_flat
+
+
+def _segmented_active(vals: np.ndarray, fs: np.ndarray, starts: np.ndarray
+                      ) -> np.ndarray:
+    """Strict-running-minimum mask within each token segment, vectorized.
+
+    ``act[j]`` iff ``vals[j] < min(vals[seg_start:j])`` (segment starts are
+    always active).  Segments are batched by frequency so each distinct f
+    runs ONE ``minimum.accumulate`` over a (tokens_with_f, f) matrix —
+    O(sum f) total work instead of a Python loop per token."""
+    act = np.zeros(len(vals), bool)
+    act[starts] = True
+    for f in np.unique(fs):
+        f = int(f)
+        if f <= 1:
+            continue
+        sel = np.flatnonzero(fs == f)
+        idx = starts[sel][:, None] + np.arange(f)
+        m = vals[idx]
+        run = np.minimum.accumulate(m[:, :-1], axis=1)
+        act[idx[:, 1:].ravel()] = (m[:, 1:] < run).ravel()
+    return act
+
+
+def _expand_key_columns(n, fs, starts, pos_flat, ti_flat, x_flat,
+                        order_flat, gid_ident, active: bool) -> KeySet:
+    """Expand (token, frequency) grid cells into key-instance columns.
+
+    Each selected cell g = (t, x) contributes cnt = f_t - x + 1 keys
+    (p, q) = (pos[j], pos[x-1+j]); everything is repeat/arange arithmetic
+    over the flat position array, then one lexsort into visiting order."""
+    if active:
+        act = _segmented_active(order_flat, fs, starts)
+        sel = np.flatnonzero(act)
+    else:
+        sel = np.arange(len(order_flat), dtype=np.int64)
+    g_ti = ti_flat[sel]
+    g_x = x_flat[sel]
+    cnt = fs[g_ti] - g_x + 1
+    total = int(cnt.sum())
+    gid = np.repeat(np.arange(len(sel), dtype=np.int64), cnt)
+    seq = np.arange(total, dtype=np.int64) - \
+        np.repeat(np.cumsum(cnt) - cnt, cnt)
+    base = starts[g_ti][gid]
+    p = pos_flat[base + seq]
+    q = pos_flat[base + g_x[gid] - 1 + seq]
+    order = order_flat[sel][gid]
+    freq = g_x[gid]
+    # visiting order: hash asc, freq ASC (see erratum note), then (p, q) —
+    # identical to _sort_keys, and total (no stability dependence) because
+    # (p, q) pairs are globally unique
+    idx = np.lexsort((q, p, freq, order))
+    return KeySet(n=n, p=p[idx], q=q[idx], gid=gid[idx], order=order[idx],
+                  freq=freq[idx], gid_key=[], gid_order=order_flat[sel],
+                  gid_ident=gid_ident[sel])
+
+
+def generate_key_columns_multiset(tokens: np.ndarray, hashfn,
+                                  active: bool = False,
+                                  occ: dict | None = None) -> KeySet:
+    """Columnar Algorithm 3/5 for the multi-set min-hash: same KeySet as
+    :func:`generate_keys_multiset` with ``gid_ident`` uint64 hash ids in
+    place of the boxed ``gid_key`` list."""
+    tokens = np.asarray(tokens, dtype=np.int64)
+    n = len(tokens)
+    if occ is None:
+        occ = occurrence_lists(tokens)
+    toks, fs, starts, pos_flat, ti_flat, x_flat = _occ_columns(occ)
+    h_flat = (hashfn(toks[ti_flat], x_flat) if len(ti_flat)
+              else np.empty(0, np.uint64))
+    return _expand_key_columns(n, fs, starts, pos_flat, ti_flat, x_flat,
+                               h_flat, h_flat, active)
+
+
+def generate_key_columns_icws(tokens: np.ndarray, icws: ICWS,
+                              weight: WeightFn, active: bool = False,
+                              occ: dict | None = None) -> KeySet:
+    """Columnar §5 key generation (ICWS): same KeySet as
+    :func:`generate_keys_icws` with ``gid_ident`` int64 (G, 2)
+    (token, k_int) rows in place of the boxed tuple list."""
+    tokens = np.asarray(tokens, dtype=np.int64)
+    n = len(tokens)
+    if occ is None:
+        occ = occurrence_lists(tokens)
+    toks, fs, starts, pos_flat, ti_flat, x_flat = _occ_columns(occ)
+    t_rep = toks[ti_flat]
+    if len(t_rep):
+        w_flat = weight(t_rep, x_flat)
+        k_flat, _y, a_flat = icws.hash_parts(t_rep, w_flat)
+    else:
+        k_flat = np.empty(0, np.int64)
+        a_flat = np.empty(0, np.float64)
+    ident = np.stack([t_rep, k_flat], axis=1) if len(t_rep) else \
+        np.empty((0, 2), np.int64)
+    return _expand_key_columns(n, fs, starts, pos_flat, ti_flat, x_flat,
+                               a_flat, ident, active)
 
 
 def count_active_hashes(tokens: np.ndarray, icws: ICWS | None, weight: WeightFn | None,

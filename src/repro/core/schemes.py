@@ -32,7 +32,8 @@ import numpy as np
 
 from .hashing import UniversalHash
 from .icws import ICWS
-from .keys import generate_keys_icws, generate_keys_multiset
+from .keys import (generate_key_columns_icws, generate_key_columns_multiset,
+                   generate_keys_icws, generate_keys_multiset)
 from .weights import WeightFn
 
 
@@ -61,6 +62,13 @@ class MultisetScheme:
     def keys(self, tokens, i: int, active: bool, occ=None):
         return generate_keys_multiset(tokens, self.hashers[i], active=active,
                                       occ=occ)
+
+    def key_columns(self, tokens, i: int, active: bool, occ=None):
+        """Columnar ``keys``: same KeySet, per-gid identities as a uint64
+        array (``gid_ident``) instead of boxed Python ints (the columnar
+        build pipeline's keygen path)."""
+        return generate_key_columns_multiset(tokens, self.hashers[i],
+                                             active=active, occ=occ)
 
     def sketch(self, tokens) -> list:
         """k min-hash identities of a whole text (Eq. 1)."""
@@ -111,6 +119,13 @@ class WeightedScheme:
     def keys(self, tokens, i: int, active: bool, occ=None):
         return generate_keys_icws(tokens, self.hashers[i], self.weight,
                                   active=active, occ=occ)
+
+    def key_columns(self, tokens, i: int, active: bool, occ=None):
+        """Columnar ``keys``: same KeySet, per-gid identities as an int64
+        (G, 2) array (``gid_ident``) instead of boxed (token, k_int)
+        tuples (the columnar build pipeline's keygen path)."""
+        return generate_key_columns_icws(tokens, self.hashers[i], self.weight,
+                                         active=active, occ=occ)
 
     def sketch(self, tokens) -> list:
         from .keys import occurrence_lists

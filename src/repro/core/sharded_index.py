@@ -3,7 +3,11 @@
 The corpus is sharded across data-parallel workers; each worker builds an
 independent :class:`~repro.core.builder.IndexBuilder` over its shard (the
 skyline partitioner is host-side; device kernels produce sketches --
-DESIGN.md §2.2).  Queries broadcast the k sketch coordinates (O(k) bytes)
+DESIGN.md §2.2), or — on the batch path — a columnar
+:class:`~repro.core.columnar.ColumnarBuilder` per shard, optionally in a
+process pool with finished shards streamed straight into store
+directories (``build(pipeline="columnar", fanout=..., store=...)``).
+Queries broadcast the k sketch coordinates (O(k) bytes)
 and union per-shard results.  Each shard checkpoints independently: a lost
 worker rebuilds only its shard (fault tolerance), and shards can be
 re-split when the worker count changes (elasticity).
@@ -70,10 +74,121 @@ class ShardedAlignmentIndex:
         self._inverse = None              # invalidate the cached inverse map
         return gid
 
-    def build(self, texts) -> "ShardedAlignmentIndex":
-        for t in texts:
-            self.add_text(t)
+    def build(self, texts, *, pipeline: str = "dict",
+              fanout: str = "serial", store: str | Path | None = None,
+              mmap: bool = True) -> "ShardedAlignmentIndex":
+        """Index a corpus across the shards.
+
+        ``pipeline="dict"`` (default) is the incremental path: every text
+        goes through ``add_text`` into its shard's mutable dict builder.
+
+        ``pipeline="columnar"`` is the batch path: documents are
+        partitioned across shards up front and each shard is built by a
+        :class:`~repro.core.columnar.ColumnarBuilder` and frozen — the
+        shards come out as serving-ready ``SearchIndex`` objects
+        (block-identical to dict-build + ``freeze()``).  ``fanout`` picks
+        the shard-level parallelism:
+
+        * ``"serial"``   — one shard after another, in-process.
+        * ``"threaded"`` — a thread pool; the vectorized sort/pack stages
+          release the GIL, the Python partition loop does not, so gains
+          are workload-dependent.
+        * ``"process"``  — a spawn-based process pool; the columnar build
+          is no longer dict-mutation-bound, so shards scale across cores.
+          The scheme travels as its JSON ``scheme_spec``.
+
+        ``store=`` streams every finished shard straight into
+        ``store/shard_{s}`` store directories (plus the root ``meta.json``)
+        and restores the shards from there (``mmap=True`` maps them) —
+        corpus to saved sharded store in one pass, without ever holding
+        all shards' tables in RAM.  With ``fanout="process"`` the shard
+        arrays then never cross the process boundary at all.
+        """
+        if pipeline == "dict":
+            if fanout != "serial" or store is not None:
+                raise ValueError(
+                    "fanout/store are columnar-pipeline options; the dict "
+                    'pipeline is incremental — use pipeline="columnar"')
+            for t in texts:
+                self.add_text(t)
+            return self
+        if pipeline != "columnar":
+            raise ValueError(f"unknown pipeline {pipeline!r}; "
+                             "expected 'dict' or 'columnar'")
+        if fanout not in ("serial", "threaded", "process"):
+            # validate BEFORE touching doc_map / store dirs: a failed call
+            # must leave the index untouched and retryable
+            raise ValueError(f"unknown fanout {fanout!r}; expected "
+                             "'serial', 'threaded' or 'process'")
+        if self.doc_map:
+            raise RuntimeError(
+                "columnar build requires an empty index (it assigns the "
+                "whole corpus to shards up front); use add_text / the dict "
+                "pipeline to grow an existing one")
+        docs = [np.asarray(t, np.int64) for t in texts]
+        per_shard: list[list] = [[] for _ in range(self.n_shards)]
+        for gid, d in enumerate(docs):
+            s = shard_of(gid, self.n_shards)
+            self.doc_map.append((s, len(per_shard[s])))
+            per_shard[s].append(d)
+        self._inverse = None
+        root = None
+        if store is not None:
+            root = Path(store)
+            root.mkdir(parents=True, exist_ok=True)
+        dirs = [root / f"shard_{s}" if root is not None else None
+                for s in range(self.n_shards)]
+        if fanout == "process":
+            self._build_shards_process(per_shard, dirs, mmap)
+        else:
+            from .columnar import ColumnarBuilder
+
+            def build_one(s: int):
+                builder = ColumnarBuilder(
+                    scheme=self.scheme,
+                    method=self.method).build(per_shard[s])
+                if dirs[s] is not None:
+                    return builder.freeze_to_store(
+                        dirs[s], mmap=mmap, include_scheme=False,
+                        doc_map=self.docs_of_shard(s))
+                return builder.freeze()
+
+            if fanout == "threaded" and self.n_shards > 1:
+                shards = list(self._fanout_pool().map(
+                    build_one, range(self.n_shards)))
+            else:
+                shards = [build_one(s) for s in range(self.n_shards)]
+            self.shards = shards
+        if root is not None:
+            self._write_meta(root)
         return self
+
+    def _build_shards_process(self, per_shard, dirs, mmap: bool) -> None:
+        """Columnar-build every shard in a spawn process pool."""
+        import os
+        from concurrent.futures import ProcessPoolExecutor
+        from multiprocessing import get_context
+
+        from .columnar import _shard_build_payload
+        from .schemes import scheme_spec
+        spec = scheme_spec(self.scheme)      # workers rebuild the scheme
+        workers = min(self.n_shards, os.cpu_count() or 1)
+        with ProcessPoolExecutor(max_workers=workers,
+                                 mp_context=get_context("spawn")) as pool:
+            futures = [
+                pool.submit(_shard_build_payload, spec, self.method,
+                            per_shard[s],
+                            str(dirs[s]) if dirs[s] is not None else None,
+                            self.docs_of_shard(s))
+                for s in range(self.n_shards)]
+            for s, fut in enumerate(futures):
+                payload = fut.result()
+                if dirs[s] is not None:
+                    self.shards[s] = index_store.load_index(
+                        dirs[s], mmap=mmap, scheme=self.scheme)
+                else:
+                    self.shards[s] = SearchIndex.from_state(
+                        self.scheme, payload)
 
     def query(self, tokens, theta: float) -> list[Alignment]:
         """Fan-out / union; local ids remapped into the global space."""
@@ -172,13 +287,16 @@ class ShardedAlignmentIndex:
 
     # -- per-shard persistence (fault tolerance / elasticity) ---------------
 
-    def save(self, root: str | Path):
-        root = Path(root)
-        root.mkdir(parents=True, exist_ok=True)
+    def _write_meta(self, root: Path) -> None:
         from .schemes import scheme_spec
         meta = {"meta_version": META_VERSION, "n_shards": self.n_shards,
                 "method": self.method, "doc_map": self.doc_map,
                 "scheme": scheme_spec(self.scheme)}
+        (root / "meta.json").write_text(json.dumps(meta))
+
+    def save(self, root: str | Path):
+        root = Path(root)
+        root.mkdir(parents=True, exist_ok=True)
         for s, shard in enumerate(self.shards):
             store_dir = root / f"shard_{s}"
             pkl = root / f"shard_{s}.pkl"
@@ -197,7 +315,7 @@ class ShardedAlignmentIndex:
                 if store_dir.exists():
                     import shutil
                     shutil.rmtree(store_dir)      # drop stale frozen store
-        (root / "meta.json").write_text(json.dumps(meta))
+        self._write_meta(root)
 
     def restore(self, root: str | Path, *, missing_ok: bool = True,
                 mmap: bool = False) -> list[int]:

@@ -62,6 +62,68 @@ def _arena_path(root: Path, name: str) -> Path:
     return root / f"arena.{name}.npy"
 
 
+class IndexWriter:
+    """Streaming store writer: tables land on disk as they are finalized.
+
+    The batch build pipeline produces one frozen table at a time; holding
+    all k of them just to call ``save_index`` at the end doubles the peak
+    footprint.  ``IndexWriter`` inverts the flow: ``add_table(i, table)``
+    writes coordinate i's three ``.npy`` files immediately (the caller
+    drops the table and moves on), ``add_arena`` does the same for the
+    fused probe arena, and ``finalize`` commits the manifest.  Crash
+    safety is the same ordering contract as before: any previous manifest
+    is unlinked up front and the new one is written last (tmp + rename),
+    so a directory without a readable manifest is an aborted write, never
+    a torn index.
+    """
+
+    def __init__(self, path, *, scheme=None, method: str = "mono_active"):
+        self.root = Path(path)
+        self.root.mkdir(parents=True, exist_ok=True)
+        # invalidate any previous commit before touching its arrays: a
+        # crash mid-rewrite must leave "no manifest" (aborted write),
+        # never a stale manifest validating torn arrays
+        (self.root / "manifest.json").unlink(missing_ok=True)
+        self._scheme = scheme
+        self._method = method
+        self._tables: list[dict] = []
+        self._arena: dict | None = None
+
+    def add_table(self, i: int, table) -> None:
+        if i != len(self._tables):
+            raise ValueError(f"tables must be added in coordinate order: "
+                             f"got table {i}, expected {len(self._tables)}")
+        for name in _ARRAYS:
+            np.save(_table_path(self.root, i, name), getattr(table, name))
+        self._tables.append({"kind": table.kind,
+                             "kint_min": int(table.kint_min)})
+
+    def add_arena(self, arena) -> None:
+        for name in _ARENA_ARRAYS:
+            np.save(_arena_path(self.root, name), getattr(arena, name))
+        self._arena = {"mode": arena.mode, "max_run": int(arena.max_run)}
+
+    def finalize(self, *, num_texts: int, num_windows: int,
+                 text_lengths, doc_map=None) -> None:
+        manifest = {
+            "format": FORMAT,
+            "format_version": FORMAT_VERSION,
+            "scheme": (scheme_spec(self._scheme)
+                       if self._scheme is not None else None),
+            "method": self._method,
+            "num_texts": int(num_texts),
+            "num_windows": int(num_windows),
+            "text_lengths": [int(n) for n in text_lengths],
+            "doc_map": ([int(g) for g in doc_map]
+                        if doc_map is not None else None),
+            "tables": self._tables,
+            "arena": self._arena,
+        }
+        tmp = self.root / "manifest.json.tmp"
+        tmp.write_text(json.dumps(manifest))
+        tmp.rename(self.root / "manifest.json")  # atomic commit marker
+
+
 def save_index(index, path, *, doc_map=None,
                include_scheme: bool = True) -> None:
     """Write ``index`` (a SearchIndex) as a versioned store directory.
@@ -73,37 +135,17 @@ def save_index(index, path, *, doc_map=None,
     tfidf spec carries the corpus-wide doc-frequency table); such a store
     can only be loaded with an explicit ``scheme=``.
     """
-    root = Path(path)
-    root.mkdir(parents=True, exist_ok=True)
-    # invalidate any previous commit before touching its arrays: a crash
-    # mid-rewrite must leave "no manifest" (aborted write), never a stale
-    # manifest validating torn arrays
-    (root / "manifest.json").unlink(missing_ok=True)
+    writer = IndexWriter(path,
+                         scheme=index.scheme if include_scheme else None,
+                         method=index.method)
     for i, t in enumerate(index.tables):
-        for name in _ARRAYS:
-            np.save(_table_path(root, i, name), getattr(t, name))
+        writer.add_table(i, t)
     # fused probe arena: built once at save time (reuses the index's cache)
     # so serving loads map it instead of rebuilding from the tables
-    arena = index.arena()
-    for name in _ARENA_ARRAYS:
-        np.save(_arena_path(root, name), getattr(arena, name))
-    manifest = {
-        "format": FORMAT,
-        "format_version": FORMAT_VERSION,
-        "scheme": scheme_spec(index.scheme) if include_scheme else None,
-        "method": index.method,
-        "num_texts": int(index.num_texts),
-        "num_windows": int(index.num_windows),
-        "text_lengths": [int(n) for n in index.text_lengths],
-        "doc_map": ([int(g) for g in doc_map]
-                    if doc_map is not None else None),
-        "tables": [{"kind": t.kind, "kint_min": int(t.kint_min)}
-                   for t in index.tables],
-        "arena": {"mode": arena.mode, "max_run": int(arena.max_run)},
-    }
-    tmp = root / "manifest.json.tmp"
-    tmp.write_text(json.dumps(manifest))
-    tmp.rename(root / "manifest.json")          # atomic commit marker
+    writer.add_arena(index.arena())
+    writer.finalize(num_texts=index.num_texts,
+                    num_windows=index.num_windows,
+                    text_lengths=index.text_lengths, doc_map=doc_map)
 
 
 def read_manifest(path) -> dict:

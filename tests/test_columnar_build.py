@@ -1,0 +1,369 @@
+"""Build-pipeline parity: the columnar pipeline must be bit-for-bit
+interchangeable with the dict pipeline at every layer — KeySet, frozen
+CSR tables, fused probe arena, query results, sharded builds, and the
+streamed store — on all three similarity schemes."""
+
+import numpy as np
+import pytest
+
+from repro.api import Aligner
+from repro.core import (ColumnarBuilder, IndexBuilder,
+                        ShardedAlignmentIndex, batch_query, make_scheme,
+                        query)
+from repro.core.frozen import FrozenTable, ProbeArena
+from repro.core.keys import occurrence_lists
+from repro.core.store import load_index, save_index
+
+
+def _texts(n_docs=6, n=160, vocab=40, seed=0):
+    rng = np.random.default_rng(seed)
+    docs = [rng.integers(0, vocab, size=n).astype(np.int64)
+            for _ in range(n_docs)]
+    # plant a shared passage so queries actually hit
+    if n_docs > 3:
+        docs[3][20:80] = docs[0][30:90]
+    return docs
+
+
+def _scheme(similarity, k=6, seed=11, docs=None):
+    kw = {"corpus": docs} if similarity == "tfidf" else {}
+    return make_scheme(similarity, seed=seed, k=k, **kw)
+
+
+def _assert_tables_equal(a, b):
+    assert len(a.tables) == len(b.tables)
+    for ta, tb in zip(a.tables, b.tables):
+        assert ta.kind == tb.kind
+        assert ta.kint_min == tb.kint_min
+        assert np.array_equal(ta.keys, tb.keys)
+        assert np.array_equal(ta.offsets, tb.offsets)
+        assert np.array_equal(ta.windows, tb.windows)
+    assert a.num_texts == b.num_texts
+    assert a.num_windows == b.num_windows
+    assert list(a.text_lengths) == list(b.text_lengths)
+
+
+def _assert_arena_equal(x, y):
+    assert x.mode == y.mode
+    assert x.max_run == y.max_run
+    assert x.kinds == y.kinds
+    assert np.array_equal(x.kint_mins, y.kint_mins)
+    assert np.array_equal(x.keys, y.keys)
+    assert np.array_equal(x.coords, y.coords)
+    assert np.array_equal(x.offsets, y.offsets)
+    assert np.array_equal(x.windows, y.windows)
+
+
+def _blocks(results):
+    return [(a.text_id, a.blocks) for a in results]
+
+
+SIMILARITIES = ["multiset", "weighted", "tfidf"]
+
+
+# ---------------------------------------------------------------------------
+# key generation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("similarity", SIMILARITIES)
+@pytest.mark.parametrize("active", [True, False])
+def test_key_columns_matches_keys(similarity, active):
+    docs = _texts()
+    scheme = _scheme(similarity, docs=docs)
+    for tokens in (docs[0], np.array([5, 5, 5, 5], np.int64),
+                   np.array([9], np.int64)):
+        occ = occurrence_lists(tokens)
+        for i in range(scheme.k):
+            a = scheme.keys(tokens, i, active, occ=occ)
+            b = scheme.key_columns(tokens, i, active, occ=occ)
+            assert np.array_equal(a.p, b.p)
+            assert np.array_equal(a.q, b.q)
+            assert np.array_equal(a.freq, b.freq)
+            assert np.array_equal(a.gid, b.gid)
+            assert a.order.dtype == b.order.dtype
+            assert np.array_equal(np.asarray(a.order), np.asarray(b.order))
+            if b.gid_ident.ndim == 2:       # ICWS (token, k_int) rows
+                want = np.array(a.gid_key, np.int64).reshape(-1, 2)
+            else:                           # multiset uint64 hash ids
+                want = np.array(a.gid_key, np.uint64)
+            assert np.array_equal(want, b.gid_ident)
+
+
+def test_key_columns_skips_boxed_keys():
+    docs = _texts()
+    scheme = _scheme("multiset")
+    ks = scheme.key_columns(docs[0], 0, True)
+    assert ks.gid_key == []
+    assert isinstance(ks.gid_ident, np.ndarray)
+
+
+# ---------------------------------------------------------------------------
+# frozen-table parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("similarity", SIMILARITIES)
+def test_freeze_block_identical(similarity):
+    docs = _texts()
+    scheme = _scheme(similarity, docs=docs)
+    fz_dict = IndexBuilder(scheme=scheme).build(docs).freeze()
+    fz_col = ColumnarBuilder(scheme=scheme).build(docs).freeze()
+    _assert_tables_equal(fz_dict, fz_col)
+
+
+@pytest.mark.parametrize("method", ["mono_all", "mono_active", "allalign"])
+def test_freeze_block_identical_methods(method):
+    docs = _texts(n_docs=4)
+    scheme = _scheme("multiset")
+    fz_dict = IndexBuilder(scheme=scheme, method=method).build(docs).freeze()
+    fz_col = ColumnarBuilder(scheme=scheme, method=method).build(
+        docs).freeze()
+    _assert_tables_equal(fz_dict, fz_col)
+
+
+def test_from_columns_matches_from_dict_directly():
+    # hand-built columns with duplicate keys across appends: the global
+    # stable sort must preserve append order within each key group
+    table = {}
+    idents, wins = [], []
+    rows = [(7, 0, 0, 1, 0, 2), (3, 0, 2, 3, 1, 4), (7, 1, 5, 6, 2, 7),
+            (3, 1, 0, 0, 0, 0), (7, 1, 8, 9, 3, 5)]
+    for key, tid, a, b, c, d in rows:
+        table.setdefault(key, []).append((tid, a, b, c, d))
+        idents.append(key)
+        wins.append((tid, a, b, c, d))
+    want = FrozenTable.from_dict(table)
+    got = FrozenTable.from_columns(
+        "int", np.array(idents, np.uint64), np.array(wins, np.int32))
+    assert want.kind == got.kind
+    assert np.array_equal(want.keys, got.keys)
+    assert np.array_equal(want.offsets, got.offsets)
+    assert np.array_equal(want.windows, got.windows)
+
+
+def test_empty_build_freezes_empty():
+    scheme = _scheme("multiset")
+    fz = ColumnarBuilder(scheme=scheme).build([]).freeze(arena=True)
+    assert fz.num_texts == 0
+    assert all(t.kind == "empty" for t in fz.tables)
+    ref = IndexBuilder(scheme=scheme).build([]).freeze()
+    _assert_tables_equal(ref, fz)
+    _assert_arena_equal(ProbeArena.from_tables(ref.tables), fz.arena())
+
+
+def test_pair_pack_range_check():
+    scheme = _scheme("weighted")
+    builder = ColumnarBuilder(scheme=scheme)
+    builder.add_text(np.array([1 << 33, 1 << 33, 5], np.int64))
+    with pytest.raises(ValueError, match="uint32"):
+        builder.freeze()
+
+
+# ---------------------------------------------------------------------------
+# probe-arena parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("similarity", SIMILARITIES)
+def test_arena_layout_identical(similarity):
+    docs = _texts()
+    scheme = _scheme(similarity, docs=docs)
+    fz_dict = IndexBuilder(scheme=scheme).build(docs).freeze()
+    fz_col = ColumnarBuilder(scheme=scheme).build(docs).freeze(arena=True)
+    _assert_arena_equal(ProbeArena.from_tables(fz_dict.tables),
+                        fz_col.arena())
+
+
+def test_from_window_columns_forced_coord_mode():
+    # multiset keys are 61-bit -> natural mode is "coord"; also force both
+    # modes explicitly and compare against from_tables on the same tables
+    docs = _texts(n_docs=4)
+    scheme = _scheme("multiset")
+    builder = ColumnarBuilder(scheme=scheme).build(docs)
+    fz = builder.freeze()
+    cols = [c.packed() for c in builder._cols]
+    got = ProbeArena.from_window_columns(
+        [t.kind for t in fz.tables], [p for p, _w, _m in cols],
+        [w for _p, w, _m in cols], np.array([m for _p, _w, m in cols]),
+        mode="coord")
+    _assert_arena_equal(ProbeArena.from_tables(fz.tables, mode="coord"), got)
+
+
+# ---------------------------------------------------------------------------
+# query parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("similarity", SIMILARITIES)
+def test_batch_query_parity(similarity):
+    docs = _texts()
+    scheme = _scheme(similarity, docs=docs)
+    fz_dict = IndexBuilder(scheme=scheme).build(docs).freeze()
+    fz_col = ColumnarBuilder(scheme=scheme).build(docs).freeze(arena=True)
+    queries = [docs[0][30:90], docs[3][10:100], docs[5][:60]]
+    for theta in (0.34, 0.67):
+        want = batch_query(fz_dict, queries, theta)
+        got = batch_query(fz_col, queries, theta)
+        assert [_blocks(r) for r in want] == [_blocks(r) for r in got]
+        one = query(fz_col, queries[0], theta)
+        assert _blocks(one) == _blocks(want[0])
+
+
+# ---------------------------------------------------------------------------
+# sharded builds
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_columnar_equals_dict():
+    docs = _texts(n_docs=7)
+    scheme = _scheme("multiset")
+    ref = ShardedAlignmentIndex(scheme=scheme, n_shards=3).build(
+        docs).freeze()
+    got = ShardedAlignmentIndex(scheme=scheme, n_shards=3).build(
+        docs, pipeline="columnar")
+    assert got.is_frozen
+    assert got.doc_map == ref.doc_map
+    for s in range(3):
+        _assert_tables_equal(ref.shards[s], got.shards[s])
+    qs = [docs[0][30:90], docs[3][10:100]]
+    assert [[_blocks(r) for r in ref.batch_query(qs, 0.5)]] == \
+        [[_blocks(r) for r in got.batch_query(qs, 0.5)]]
+
+
+@pytest.mark.parametrize("fanout", ["threaded", "process"])
+def test_sharded_fanout_equals_serial(fanout):
+    docs = _texts(n_docs=6, n=120)
+    scheme = _scheme("multiset", k=4)
+    serial = ShardedAlignmentIndex(scheme=scheme, n_shards=2).build(
+        docs, pipeline="columnar", fanout="serial")
+    other = ShardedAlignmentIndex(scheme=scheme, n_shards=2).build(
+        docs, pipeline="columnar", fanout=fanout)
+    assert other.doc_map == serial.doc_map
+    for s in range(2):
+        _assert_tables_equal(serial.shards[s], other.shards[s])
+
+
+def test_sharded_process_weighted_scheme_roundtrip():
+    # the scheme crosses the process boundary as its JSON spec; weighted
+    # schemes carry weight-fn closures that don't pickle
+    docs = _texts(n_docs=4, n=100)
+    scheme = _scheme("tfidf", k=4, docs=docs)
+    serial = ShardedAlignmentIndex(scheme=scheme, n_shards=2).build(
+        docs, pipeline="columnar", fanout="serial")
+    proc = ShardedAlignmentIndex(scheme=scheme, n_shards=2).build(
+        docs, pipeline="columnar", fanout="process")
+    for s in range(2):
+        _assert_tables_equal(serial.shards[s], proc.shards[s])
+
+
+def test_columnar_build_requires_empty_index():
+    docs = _texts(n_docs=4, n=100)
+    scheme = _scheme("multiset", k=4)
+    idx = ShardedAlignmentIndex(scheme=scheme, n_shards=2)
+    idx.add_text(docs[0])
+    with pytest.raises(RuntimeError, match="empty"):
+        idx.build(docs, pipeline="columnar")
+
+
+def test_dict_pipeline_rejects_columnar_options():
+    scheme = _scheme("multiset", k=4)
+    idx = ShardedAlignmentIndex(scheme=scheme, n_shards=2)
+    with pytest.raises(ValueError, match="columnar"):
+        idx.build([], fanout="process")
+
+
+def test_bad_fanout_leaves_index_untouched(tmp_path):
+    # validation must run before doc_map / store dirs are touched: a
+    # failed call stays retryable
+    docs = _texts(n_docs=4, n=100)
+    scheme = _scheme("multiset", k=4)
+    idx = ShardedAlignmentIndex(scheme=scheme, n_shards=2)
+    store = tmp_path / "never_created"
+    with pytest.raises(ValueError, match="fanout"):
+        idx.build(docs, pipeline="columnar", fanout="processes",
+                  store=store)
+    assert idx.doc_map == []
+    assert not store.exists()
+    idx.build(docs, pipeline="columnar")        # retry succeeds
+    assert len(idx.doc_map) == 4
+    with pytest.raises(ValueError, match="fanout"):
+        Aligner.build(docs, similarity="multiset", pipeline="columnar",
+                      fanout="procss")
+
+
+# ---------------------------------------------------------------------------
+# store streaming
+# ---------------------------------------------------------------------------
+
+
+def test_freeze_to_store_matches_save_index(tmp_path):
+    docs = _texts()
+    scheme = _scheme("weighted")
+    ref = IndexBuilder(scheme=scheme).build(docs).freeze()
+    save_index(ref, tmp_path / "dict_store")
+    streamed = ColumnarBuilder(scheme=scheme).build(docs).freeze_to_store(
+        tmp_path / "col_store")
+    assert streamed.is_mmap()
+    loaded_ref = load_index(tmp_path / "dict_store")
+    _assert_tables_equal(loaded_ref, streamed)
+    _assert_arena_equal(loaded_ref.arena(), streamed.arena())
+    # both stores load interchangeably
+    reloaded = load_index(tmp_path / "col_store", mmap=False)
+    _assert_tables_equal(loaded_ref, reloaded)
+
+
+def test_sharded_store_streaming(tmp_path):
+    docs = _texts(n_docs=7)
+    scheme = _scheme("multiset")
+    root = tmp_path / "sharded"
+    built = ShardedAlignmentIndex(scheme=scheme, n_shards=3).build(
+        docs, pipeline="columnar", fanout="serial", store=root)
+    assert built.shards[0].is_mmap()
+    # the streamed dir is a complete sharded store: restorable from scratch
+    fresh = ShardedAlignmentIndex(scheme=scheme, n_shards=3)
+    assert fresh.restore(root, missing_ok=False, mmap=True) == []
+    assert fresh.doc_map == built.doc_map
+    for s in range(3):
+        _assert_tables_equal(built.shards[s], fresh.shards[s])
+    ref = ShardedAlignmentIndex(scheme=scheme, n_shards=3).build(
+        docs).freeze()
+    qs = [docs[0][30:90]]
+    assert [_blocks(r) for r in built.batch_query(qs, 0.5)] == \
+        [_blocks(r) for r in ref.batch_query(qs, 0.5)]
+
+
+# ---------------------------------------------------------------------------
+# Aligner facade
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("similarity", SIMILARITIES)
+def test_aligner_columnar_pipeline(similarity):
+    docs = _texts()
+    ref = Aligner.build(docs, similarity=similarity, k=6, seed=11)
+    col = Aligner.build(docs, similarity=similarity, k=6, seed=11,
+                        pipeline="columnar")
+    assert col.is_frozen
+    qs = [docs[0][30:90], docs[3][10:100]]
+    assert [_blocks(r) for r in ref.find_batch(qs, 0.5)] == \
+        [_blocks(r) for r in col.find_batch(qs, 0.5)]
+
+
+def test_aligner_columnar_one_pass_store(tmp_path):
+    docs = _texts()
+    store = tmp_path / "one_pass"
+    built = Aligner.build(docs, similarity="multiset", k=6, seed=11,
+                          pipeline="columnar", store=store)
+    served = Aligner.load(store)
+    ref = Aligner.build(docs, similarity="multiset", k=6, seed=11)
+    qs = [docs[0][30:90]]
+    want = [_blocks(r) for r in ref.find_batch(qs, 0.5)]
+    assert [_blocks(r) for r in built.find_batch(qs, 0.5)] == want
+    assert [_blocks(r) for r in served.find_batch(qs, 0.5)] == want
+
+
+def test_aligner_dict_pipeline_rejects_store(tmp_path):
+    with pytest.raises(ValueError, match="columnar"):
+        Aligner.build(_texts(n_docs=2), similarity="multiset",
+                      store=tmp_path / "x")
