@@ -9,7 +9,7 @@ import json
 import sys
 import time
 
-from . import (bench_active_opt, bench_build, bench_query,
+from . import (bench_active_opt, bench_build, bench_live, bench_query,
                bench_sketch_kernels, bench_vs_allalign, bench_weights,
                roofline)
 
@@ -19,6 +19,7 @@ SUITES = {
     "vs_allalign": bench_vs_allalign.run,    # paper Fig. 7
     "query": bench_query.run,                # paper §6 query study
     "build": bench_build.run,                # §6 construction study
+    "live": bench_live.run,                  # incremental-serve study
     "sketch_kernels": bench_sketch_kernels.run,
     "roofline": roofline.run,                # EXPERIMENTS.md §Roofline
 }

@@ -13,6 +13,10 @@ windows over a corpus, then serve threshold-θ alignment queries.  The
     server = Aligner.load("idx_dir", mmap=True)                 # serve (mmap)
     results = server.find_batch(queries, theta=0.8)
 
+    live = Aligner.load("idx_dir", live=True)                   # live serve
+    live.add(new_doc)                  # served immediately (delta index)
+    live.compact()                     # fold into a new store generation
+
 ``build`` fits the weight function from the corpus (``WeightFn.fit``),
 constructs the sketch scheme through the :func:`repro.core.make_scheme`
 registry, and indexes every document — sharded across
@@ -37,10 +41,12 @@ import numpy as np
 
 from .core import make_scheme, query as _query, batch_query as _batch_query
 from .core.builder import IndexBuilder
+from .core.live import LiveIndex
 from .core.query import Alignment
 from .core.search import SearchIndex
 from .core.sharded_index import ShardedAlignmentIndex
-from .core.store import load_index, read_manifest, save_index
+from .core.store import (CURRENT_POINTER, load_index, read_manifest,
+                         save_index)
 from .core.weights import WeightFn
 
 _ALIGNER_META = "aligner.json"
@@ -165,18 +171,43 @@ class Aligner:
         return self._index.is_frozen
 
     def add(self, text) -> int:
-        """Index one more document (build stage only); returns its doc id."""
+        """Index one more document; returns its (global) doc id.
+
+        Valid in the build stage and on a live-loaded Aligner
+        (``Aligner.load(path, live=True)``), where the write lands in the
+        mutable delta and is served immediately alongside the frozen
+        store."""
+        if isinstance(self._index, LiveIndex):
+            lid = self._index.add_text(self._tokens(text))
+            return self._index.doc_map[lid]
         if self.is_frozen:
             raise RuntimeError(
-                "this Aligner serves a frozen index; adds belong to the "
-                "build stage — build a new index (Aligner.build) to grow "
-                "the corpus")
+                "this Aligner serves a frozen index; reload it with "
+                "Aligner.load(path, live=True) to accept writes, or build "
+                "a new index (Aligner.build) to grow the corpus")
         return self._index.add_text(self._tokens(text))
 
     def freeze(self) -> "Aligner":
         """Finalize the build: compact every table into the immutable CSR
-        serving layout (idempotent)."""
+        serving layout (idempotent).  A live index merges its delta in
+        memory (the on-disk store is untouched; use :meth:`compact` to
+        persist in place)."""
         self._index = self._index.freeze()
+        return self
+
+    def compact(self, *, fanout: str = "serial") -> "Aligner":
+        """Fold a live Aligner's delta into a new store generation and
+        atomically promote it (old generation retained for rollback).
+        Sharded live indexes compact every shard — ``fanout="process"``
+        spreads the per-shard merges across a spawn process pool."""
+        if isinstance(self._index, LiveIndex):
+            self._index.compact()
+        elif isinstance(self._index, ShardedAlignmentIndex):
+            self._index.compact(fanout=fanout)
+        else:
+            raise RuntimeError(
+                "compact() folds a live delta into its store; load the "
+                "index with Aligner.load(path, live=True) first")
         return self
 
     # -- queries ------------------------------------------------------------
@@ -185,7 +216,7 @@ class Aligner:
         """All indexed subsequences aligned with ``text`` at estimated
         (weighted) Jaccard >= theta (paper Definition 1)."""
         tokens = self._tokens(text)
-        if isinstance(self._index, ShardedAlignmentIndex):
+        if isinstance(self._index, (ShardedAlignmentIndex, LiveIndex)):
             return self._index.query(tokens, theta)
         return _query(self._index, tokens, theta)
 
@@ -199,7 +230,7 @@ class Aligner:
         search), or ``"percoord"`` (legacy per-coordinate loop).  Sharded
         indexes fan the probes out across a thread pool."""
         tokens = [self._tokens(t) for t in texts]
-        if isinstance(self._index, ShardedAlignmentIndex):
+        if isinstance(self._index, (ShardedAlignmentIndex, LiveIndex)):
             return self._index.batch_query(tokens, theta, backend=backend,
                                            probe_backend=probe_backend)
         return _batch_query(self._index, tokens, theta,
@@ -216,21 +247,68 @@ class Aligner:
     def save(self, path) -> "Aligner":
         """Freeze (if still building) and write the versioned store: JSON
         manifests + raw ``.npy`` arrays per frozen table, one directory per
-        index (per shard when sharded)."""
-        self.freeze()
+        index (per shard when sharded).
+
+        A live Aligner snapshots frozen + delta as one flat merged store
+        at ``path`` without disturbing its own serving state (its store
+        generations persist via :meth:`compact`, not here).  Snapshotting
+        over the store this Aligner is *serving from* is refused — that
+        would rewrite the mmap'd arrays in place under the reader; use
+        :meth:`compact` to persist the delta there."""
         root = Path(path)
+        if isinstance(self._index, LiveIndex):
+            live = self._index
+            self._refuse_live_overwrite(root, [live.root])
+            identity = live.doc_map == list(range(len(live.doc_map)))
+            save_index(live.freeze(), root,
+                       doc_map=None if identity else live.doc_map)
+            # the snapshot is flat: retire any stale generation pointer at
+            # the target AFTER the manifest commit, so readers flip from a
+            # complete old generation to the complete snapshot
+            (root / CURRENT_POINTER).unlink(missing_ok=True)
+            self._write_meta(root)
+            return self
         if isinstance(self._index, ShardedAlignmentIndex):
+            live_shards = [s for s in self._index.shards
+                           if getattr(s, "is_live", False)]
+            if live_shards:
+                self._refuse_live_overwrite(
+                    root, [s.root.parent for s in live_shards
+                           if s.root is not None])
+            else:
+                self.freeze()
+            # live shards are snapshot-merged inside save() without
+            # disturbing this aligner's serving state
             self._index.save(root)
         else:
+            self.freeze()
             save_index(self._index, root)
         self._write_meta(root)
         return self
 
+    @staticmethod
+    def _refuse_live_overwrite(root: Path, serving_roots) -> None:
+        for served in serving_roots:
+            if served is not None and root.resolve() == served.resolve():
+                raise RuntimeError(
+                    "refusing to snapshot a live Aligner over the store it "
+                    f"is serving from ({root}): np.save would truncate the "
+                    "mmap'd arrays under the reader; use compact() to "
+                    "persist the delta there, or save to a new directory")
+
     @classmethod
-    def load(cls, path, *, mmap: bool = True) -> "Aligner":
+    def load(cls, path, *, mmap: bool = True, live: bool = False
+             ) -> "Aligner":
         """Load a saved store and serve from it.  ``mmap=True`` (default)
         maps the table arrays read-only instead of materializing them —
-        the serving mode for larger-than-RAM indexes."""
+        the serving mode for larger-than-RAM indexes.
+
+        ``live=True`` opens the store for *incremental* serving: the
+        returned Aligner accepts :meth:`add` without thawing (writes land
+        in a small mutable delta, queried alongside the frozen arrays)
+        and :meth:`compact` folds the delta into a new, atomically
+        promoted store generation.  Sharded stores get one delta per
+        shard."""
         root = Path(path)
         meta = {}
         if (root / _ALIGNER_META).exists():
@@ -242,9 +320,10 @@ class Aligner:
             index = ShardedAlignmentIndex(
                 scheme=scheme_from_spec(manifest_scheme),
                 n_shards=smeta["n_shards"], method=smeta["method"])
-            index.restore(root, missing_ok=False, mmap=mmap)
+            index.restore(root, missing_ok=False, mmap=mmap, live=live)
         else:                                           # flat layout
-            index = load_index(root, mmap=mmap)
+            index = (LiveIndex.open(root, mmap=mmap) if live
+                     else load_index(root, mmap=mmap))
             manifest_scheme = read_manifest(root)["scheme"]
         weight = manifest_scheme.get("weight") or {}
         config = AlignerConfig(
@@ -266,7 +345,7 @@ class Aligner:
 
     @property
     def num_docs(self) -> int:
-        if isinstance(self._index, ShardedAlignmentIndex):
+        if isinstance(self._index, (ShardedAlignmentIndex, LiveIndex)):
             return len(self._index.doc_map)
         return self._index.num_texts
 
@@ -278,7 +357,10 @@ class Aligner:
         return self._index.nbytes()
 
     def __repr__(self) -> str:
-        stage = "serve" if self.is_frozen else "build"
+        live = isinstance(self._index, LiveIndex) or (
+            isinstance(self._index, ShardedAlignmentIndex) and
+            any(getattr(s, "is_live", False) for s in self._index.shards))
+        stage = "live" if live else "serve" if self.is_frozen else "build"
         return (f"Aligner(similarity={self.config.similarity!r}, "
                 f"k={self.config.k}, shards={self.config.shards}, "
                 f"docs={self.num_docs}, windows={self.num_windows}, "
@@ -325,4 +407,4 @@ def _tokenizer_from_spec(spec: dict | None):
 
 
 __all__ = ["Aligner", "AlignerConfig", "WeightFn", "Alignment",
-           "SearchIndex", "IndexBuilder"]
+           "SearchIndex", "IndexBuilder", "LiveIndex"]

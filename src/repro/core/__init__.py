@@ -14,6 +14,7 @@ from .icws import ICWS
 from .index import AlignmentIndex
 from .keys import (KeySet, count_active_hashes, generate_keys_icws,
                    generate_keys_multiset, occurrence_lists)
+from .live import LiveIndex
 from .oracle import (jaccard_multiset, jaccard_weighted,
                      minhash_gid_grid_icws, minhash_gid_grid_multiset,
                      validate_partition)
@@ -30,7 +31,7 @@ from .weights import WeightFn
 __all__ = [
     "ICWS", "UniversalHash", "MixHash", "WeightFn", "KeySet", "Partition",
     "AlignmentIndex", "IndexBuilder", "ColumnarBuilder", "SearchIndex",
-    "MultisetScheme",
+    "LiveIndex", "MultisetScheme",
     "WeightedScheme", "make_scheme", "scheme_spec", "scheme_from_spec",
     "Alignment",
     "generate_keys_multiset", "generate_keys_icws", "occurrence_lists",

@@ -86,6 +86,33 @@ class IndexBuilder:
         """Postings of hash identity ``v`` in table ``i``."""
         return self.tables[i].get(v, [])
 
+    def table_columns(self, i: int) -> tuple[np.ndarray, np.ndarray]:
+        """Table ``i``'s contents as per-window (identity, windows) columns
+        for merge-compaction (:meth:`ColumnarBuilder.absorb_builder`).
+
+        Windows come out grouped by key (dict insertion order) with append
+        order preserved inside each key — the only order a stable
+        key-sort cares about, so the columnar freeze of these columns is
+        block-identical to ``freeze()`` of this table.
+        """
+        table = self.tables[i]
+        if not table:
+            return np.empty(0, np.uint64), np.empty((0, 5), np.int32)
+        counts = np.fromiter((len(v) for v in table.values()),
+                             np.int64, len(table))
+        windows = np.concatenate(
+            [np.asarray(v, np.int32).reshape(-1, 5) for v in table.values()])
+        if isinstance(next(iter(table)), tuple):
+            ident = np.empty((len(windows), 2), np.int64)
+            ident[:, 0] = np.repeat(np.fromiter(
+                (k[0] for k in table), np.int64, len(table)), counts)
+            ident[:, 1] = np.repeat(np.fromiter(
+                (k[1] for k in table), np.int64, len(table)), counts)
+        else:
+            ident = np.repeat(np.fromiter(
+                (int(k) for k in table), np.uint64, len(table)), counts)
+        return ident, windows
+
     def nbytes(self) -> int:
         """Resident size estimate (recursive ``sys.getsizeof``)."""
         return dict_tables_nbytes(self.tables)

@@ -137,6 +137,44 @@ class ColumnarBuilder:
             self.add_text(tokens)
         return self
 
+    # -- merge-compaction ingestion -----------------------------------------
+
+    def absorb_index(self, index) -> "ColumnarBuilder":
+        """Append a frozen ``SearchIndex``'s windows to the build buffers
+        without re-sketching: each table's CSR arrays unpack straight back
+        into append columns (``FrozenTable.ident_columns``), with text ids
+        re-based after the texts already in this builder.  This is the
+        merge-compaction fast path — the old corpus is folded in as pure
+        array traffic (mmap-backed tables stream through the page cache).
+        """
+        self._absorb(index, (t.ident_columns() for t in index.tables))
+        return self
+
+    def absorb_builder(self, builder) -> "ColumnarBuilder":
+        """Append a mutable ``IndexBuilder``'s windows (the live delta) to
+        the build buffers, re-based like :meth:`absorb_index` — its dict
+        tables export as key-grouped columns (``table_columns``), already
+        sketched at ``add_text`` time."""
+        self._absorb(builder, (builder.table_columns(i)
+                               for i in range(len(builder.tables))))
+        return self
+
+    def _absorb(self, index, columns) -> None:
+        if getattr(index.scheme, "k", len(self._cols)) != len(self._cols):
+            raise ValueError(
+                f"cannot absorb a k={index.scheme.k} index into a "
+                f"k={len(self._cols)} builder (different sketch widths)")
+        base = self.num_texts
+        for i, (ident, windows) in enumerate(columns):
+            if len(windows) == 0:
+                continue
+            win = np.array(windows, np.int32)   # own it: re-base the tids
+            win[:, 0] += base
+            self._cols[i].append(ident, win)
+        self.num_texts += index.num_texts
+        self.num_windows += index.num_windows
+        self.text_lengths.extend(int(n) for n in index.text_lengths)
+
     def nbytes(self) -> int:
         """Resident bytes of the append buffers (exact array bytes)."""
         return sum(c.nbytes for c in self._cols)

@@ -201,6 +201,29 @@ class FrozenTable:
         packed, kint_min = pack_ident_columns(kind, ident)
         return cls.from_packed_columns(kind, packed, windows, kint_min)
 
+    def ident_columns(self) -> tuple[np.ndarray, np.ndarray]:
+        """The table's contents as per-window (identity, windows) columns —
+        the inverse of the columnar freeze, for merge-compaction.
+
+        Repeating each key over its CSR range recovers exactly the append
+        columns the columnar pipeline would hold for these windows: CSR
+        order is key-ascending with append order preserved inside each
+        key, and ``FrozenTable.from_packed_columns``'s stable sort leaves
+        such a column block-identical.  Pair keys are unpacked back to
+        exact ``(token, k_int)`` rows (the pack is lossless), so absorbed
+        columns re-pack against whatever ``kint_min`` the merged table
+        needs.
+        """
+        per = np.repeat(np.asarray(self.keys), np.diff(self.offsets))
+        if self.kind == KIND_PAIR:
+            ident = np.empty((len(per), 2), np.int64)
+            ident[:, 0] = (per >> np.uint64(32)).astype(np.int64)
+            ident[:, 1] = (per & np.uint64(0xFFFFFFFF)).astype(np.int64) \
+                + self.kint_min
+        else:
+            ident = per
+        return ident, np.asarray(self.windows)
+
     # -- probing ------------------------------------------------------------
 
     def encode(self, values) -> np.ndarray:

@@ -1,0 +1,264 @@
+"""Live incremental serving: frozen mmap shards + a mutable delta index,
+folded together by columnar merge-compaction into new store generations.
+
+The hash-based framework indexes a *static* corpus, but a production
+service takes writes while it serves.  Because CWS samplings are
+consistent per subsequence, a document sketched once never needs
+re-sketching — so a :class:`LiveIndex` pairs the serving halves that
+already exist:
+
+* ``frozen`` — an mmap-backed :class:`~repro.core.search.SearchIndex`
+  (plus its fused :class:`~repro.core.frozen.ProbeArena`), loaded from a
+  versioned store directory;
+* ``delta``  — a small mutable :class:`~repro.core.builder.IndexBuilder`
+  that absorbs ``add_text`` writes between compactions.
+
+Queries merge deterministically: one arena probe over the frozen index,
+one dict probe over the delta, delta text ids re-based after the frozen
+corpus, and ONE shared plane-sweep over the union — block-identical to a
+from-scratch build of the same corpus (every text id belongs to exactly
+one side, so each (query, text) sweep group comes entirely from one probe
+and keeps its coordinate-ascending order).  Results are remapped to
+*global* doc ids through ``doc_map`` (the store manifest's mapping,
+extended by live adds), so sharded serving keeps one id space.
+
+``compact()`` folds the delta in: the frozen CSR tables unpack straight
+back into append columns (``FrozenTable.ident_columns``), the delta's
+dict tables export theirs (``IndexBuilder.table_columns``), and the
+columnar pipeline freezes the concatenation — one stable sort per table,
+zero re-sketching — streaming into a NEW ``v{N:06d}`` generation
+directory via ``store.IndexWriter``.  Promotion is atomic and ordered
+(arrays → manifest → ``CURRENT`` pointer flip), the old generation stays
+on disk for rollback, and readers flip via
+:func:`repro.core.store.resolve_store`.
+
+``LiveIndex.query``/``batch_query`` return global-id results (like
+``ShardedAlignmentIndex``); the module-level query functions, handed a
+``LiveIndex`` directly, work in its local id space.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from pathlib import Path
+
+import numpy as np
+
+from . import store as index_store
+from .builder import IndexBuilder
+from .query import (Alignment, _sweep_gathered, batch_probe as _batch_probe,
+                    query as _query)
+from .search import SearchIndex
+
+
+@dataclass
+class LiveIndex:
+    """A frozen serving index that accepts writes without thawing."""
+
+    frozen: SearchIndex
+    delta: IndexBuilder
+    doc_map: list[int]                  # local text id -> global doc id
+    root: Path | None = None            # versioned store root (compact target)
+    generation: int = 0                 # serving generation under ``root``
+    mmap: bool = True                   # how compacted generations load back
+    scheme_in_manifest: bool = True     # sharded shards omit the scheme spec
+    _next_gid: int = field(default=0, init=False, repr=False)
+
+    def __post_init__(self):
+        self._next_gid = max(self.doc_map, default=-1) + 1
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def open(cls, root, *, mmap: bool = True, scheme=None) -> "LiveIndex":
+        """Open a store directory for live serving: mmap-load the serving
+        generation, start an empty delta, and adopt the manifest's
+        ``doc_map`` (identity when the store never recorded one)."""
+        root = Path(root)
+        serve_dir = index_store.resolve_store(root)
+        frozen = index_store.load_index(serve_dir, mmap=mmap, scheme=scheme)
+        manifest = index_store.read_manifest(serve_dir)
+        doc_map = manifest.get("doc_map") or list(range(frozen.num_texts))
+        return cls(frozen=frozen,
+                   delta=IndexBuilder(scheme=frozen.scheme,
+                                      method=frozen.method),
+                   doc_map=[int(g) for g in doc_map], root=root,
+                   generation=index_store.current_generation(root),
+                   mmap=mmap,
+                   scheme_in_manifest=manifest.get("scheme") is not None)
+
+    # -- query-engine surface -----------------------------------------------
+
+    @property
+    def scheme(self):
+        return self.frozen.scheme
+
+    @property
+    def method(self) -> str:
+        return self.frozen.method
+
+    @property
+    def is_frozen(self) -> bool:
+        return False            # accepts adds (the whole point)
+
+    @property
+    def is_live(self) -> bool:
+        return True             # query.batch_probe dispatches on this
+
+    @property
+    def num_texts(self) -> int:
+        return self.frozen.num_texts + self.delta.num_texts
+
+    @property
+    def num_windows(self) -> int:
+        return self.frozen.num_windows + self.delta.num_windows
+
+    @property
+    def text_lengths(self) -> list[int]:
+        return list(self.frozen.text_lengths) + list(self.delta.text_lengths)
+
+    @property
+    def delta_fraction(self) -> float:
+        """Delta share of the corpus — the compaction trigger metric."""
+        return self.delta.num_texts / max(1, self.num_texts)
+
+    def nbytes(self) -> int:
+        return self.frozen.nbytes() + self.delta.nbytes()
+
+    # -- writes -------------------------------------------------------------
+
+    def add_text(self, tokens, *, gid: int | None = None) -> int:
+        """Index one more document into the delta; returns its LOCAL text
+        id (frozen ids come first, delta ids after — stable across
+        compactions).  ``gid`` pins the global doc id (the sharded index
+        assigns those); default is one past the largest id seen."""
+        if gid is None:
+            gid = self._next_gid
+        lid = self.frozen.num_texts + \
+            self.delta.add_text(np.asarray(tokens, np.int64))
+        self.doc_map.append(int(gid))
+        self._next_gid = max(self._next_gid, int(gid) + 1)
+        return lid
+
+    # -- queries ------------------------------------------------------------
+
+    def lookup(self, i: int, v):
+        """Merged postings of identity ``v``: frozen rows first, delta rows
+        re-based after them (grouped by tid, as ``query`` expects)."""
+        rows = [tuple(int(x) for x in r) for r in self.frozen.lookup(i, v)]
+        base = self.frozen.num_texts
+        rows.extend((tid + base, a, b, c, d)
+                    for (tid, a, b, c, d) in self.delta.lookup(i, v))
+        return rows
+
+    def batch_probe(self, sketches, *, probe_backend: str = "numpy"
+                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """The live probe stage: one arena probe of the frozen index, one
+        dict probe of the delta, delta tids re-based — a single gathered
+        (query ids, windows, coordinate ids) triple for the shared sweep."""
+        fq, fw, fc = _batch_probe(self.frozen, sketches,
+                                  probe_backend=probe_backend)
+        dq, dw, dc = _batch_probe(self.delta, sketches,
+                                  probe_backend=probe_backend)
+        if not len(dq):
+            return fq, fw, fc
+        dw = dw.copy()
+        dw[:, 0] += self.frozen.num_texts
+        return (np.concatenate([fq, dq]), np.concatenate([fw, dw]),
+                np.concatenate([fc, dc]))
+
+    def query(self, tokens, theta: float) -> list[Alignment]:
+        """Definition-1 alignment over frozen + delta, in global doc ids."""
+        return sorted((Alignment(text_id=self.doc_map[al.text_id],
+                                 blocks=al.blocks)
+                       for al in _query(self, tokens, theta)),
+                      key=lambda a: a.text_id)
+
+    def batch_query(self, texts, theta: float, *,
+                    sketches: list[list] | None = None,
+                    backend: str = "exact", probe_backend: str = "numpy",
+                    sweep: str = "grouped") -> list[list[Alignment]]:
+        """Batched :meth:`query` (the serving path): sketch once, merge the
+        frozen and delta probes, sweep the union, remap to global ids."""
+        if not len(texts):
+            return []
+        if sketches is None:
+            sketches = self.scheme.sketch_batch(texts, backend=backend)
+        m = max(1, math.ceil(self.scheme.k * theta))
+        gathered = self.batch_probe(sketches, probe_backend=probe_backend)
+        return [sorted((Alignment(text_id=self.doc_map[al.text_id],
+                                  blocks=al.blocks) for al in res),
+                       key=lambda a: a.text_id)
+                for res in _sweep_gathered(gathered, len(texts), m, sweep)]
+
+    # -- compaction ---------------------------------------------------------
+
+    def _merged_builder(self):
+        """Frozen tables + delta, absorbed into one columnar builder —
+        block-identical to a from-scratch build of the union corpus."""
+        from .columnar import ColumnarBuilder
+        builder = ColumnarBuilder(scheme=self.scheme, method=self.method)
+        builder.absorb_index(self.frozen)
+        builder.absorb_builder(self.delta)
+        return builder
+
+    def freeze(self) -> SearchIndex:
+        """Merge frozen + delta into one in-memory ``SearchIndex`` (the
+        build→serve handoff; use :meth:`compact` to persist in place)."""
+        return self._merged_builder().freeze(arena=True)
+
+    def compact(self, *, promote: bool = True) -> int:
+        """Fold the delta into a NEW store generation and promote it.
+
+        Streams the merged columns through ``IndexWriter`` into
+        ``v{N:06d}/`` (arrays first, manifest last), then atomically flips
+        the ``CURRENT`` pointer and swaps serving onto the mmap'd new
+        generation with a fresh empty delta.  The old generation is
+        retained for rollback; an interrupted compaction leaves the
+        serving generation untouched (no manifest → never promoted) and
+        this index still serving frozen + delta.  ``promote=False`` stops
+        after the manifest commit and returns the generation number — the
+        sharded process fan-out promotes from the parent.
+        """
+        if self.root is None:
+            raise RuntimeError(
+                "this LiveIndex is not store-backed; compaction writes a "
+                "new store generation — open it with LiveIndex.open(path) "
+                "(or use freeze() for an in-memory merge)")
+        if self.delta.num_texts == 0:
+            # nothing to fold in: don't rewrite the whole corpus into a
+            # duplicate generation (timer-driven compactors hit this)
+            return self.generation
+        if len(self.doc_map) != self.num_texts:
+            raise RuntimeError(
+                f"doc_map has {len(self.doc_map)} entries for "
+                f"{self.num_texts} texts; refusing to write a torn manifest")
+        gen = index_store.next_generation(self.root)
+        gen_dir = index_store.generation_dir(self.root, gen)
+        new_idx = self._merged_builder().freeze_to_store(
+            gen_dir, mmap=self.mmap, include_scheme=self.scheme_in_manifest,
+            doc_map=self.doc_map)
+        if promote:
+            index_store.promote_generation(self.root, gen)
+            self.frozen = new_idx
+            self.delta = IndexBuilder(scheme=self.scheme, method=self.method)
+            self.generation = gen
+        return gen
+
+
+def _shard_compact_payload(spec: dict, root: str, delta_state: dict,
+                           doc_map: list[int]) -> int:
+    """Process-pool worker: compact one shard's store, WITHOUT promoting.
+
+    The delta travels as its pickled ``state_dict`` (dict tables of plain
+    tuples); the scheme as its JSON spec (weight closures don't pickle).
+    The worker commits the new generation's manifest and returns its
+    number — the parent flips each shard's pointer and mmap-reloads, so a
+    mid-fan-out crash leaves every shard serving its old generation.
+    """
+    from .schemes import scheme_from_spec
+    live = LiveIndex.open(root, mmap=False, scheme=scheme_from_spec(spec))
+    live.delta.load_state_dict(delta_state)
+    live.doc_map = [int(g) for g in doc_map]
+    return live.compact(promote=False)

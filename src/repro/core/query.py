@@ -297,6 +297,10 @@ def batch_probe(index, sketches, *, probe_backend: str = "numpy"
     the sharded fan-out overlaps THIS stage across shards with a thread
     pool and keeps the (GIL-bound) sweep stage serial.
     """
+    if getattr(index, "is_live", False):
+        # live index: merge the frozen-arena and delta-dict probes (delta
+        # tids re-based after the frozen corpus) into one gathered triple
+        return index.batch_probe(sketches, probe_backend=probe_backend)
     B = len(sketches)
     k = index.scheme.k
     if index.is_frozen and probe_backend != "percoord":

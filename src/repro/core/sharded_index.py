@@ -20,6 +20,13 @@ Persistence is two-format by lifecycle stage:
   larger-than-RAM corpus serves without materializing the tables.
 * **mutable** shards (mid-build ``IndexBuilder``) are pickled as
   ``shard_{s}.pkl`` build-time checkpoints, as before.
+
+Live serving (``restore(..., live=True)``) wraps every store-backed shard
+in a :class:`~repro.core.live.LiveIndex` — frozen mmap arrays plus a
+small per-shard mutable delta — so the restored index takes ``add_text``
+writes while serving, and :meth:`ShardedAlignmentIndex.compact` folds all
+the deltas into new per-shard store generations (optionally fanned out
+across a spawn process pool) with atomic per-shard promotion.
 """
 
 from __future__ import annotations
@@ -56,6 +63,7 @@ class ShardedAlignmentIndex:
     # doc_map[global_id] = (shard, local_id)
     _inverse: dict | None = field(default=None, init=False, repr=False)
     _pool: object = field(default=None, init=False, repr=False)
+    _root: Path | None = field(default=None, init=False, repr=False)
 
     def __post_init__(self):
         self.shards = [IndexBuilder(scheme=self.scheme, method=self.method)
@@ -64,12 +72,19 @@ class ShardedAlignmentIndex:
     def add_text(self, tokens) -> int:
         gid = len(self.doc_map)
         s = shard_of(gid, self.n_shards)
-        if self.shards[s].is_frozen:
+        shard = self.shards[s]
+        if getattr(shard, "is_live", False):
+            # live shard: the delta takes the write; pin the global id so
+            # the shard's own doc_map (persisted at compaction) stays in
+            # step with ours
+            lid = shard.add_text(np.asarray(tokens, np.int64), gid=gid)
+        elif shard.is_frozen:
             raise RuntimeError(
                 f"shard {s} is frozen (SearchIndex); adds belong to the "
-                "build stage — rebuild the shard with an IndexBuilder to "
-                "grow it")
-        lid = self.shards[s].add_text(np.asarray(tokens, np.int64))
+                "build stage — restore(live=True) for incremental serving, "
+                "or rebuild the shard with an IndexBuilder")
+        else:
+            lid = shard.add_text(np.asarray(tokens, np.int64))
         self.doc_map.append((s, lid))
         self._inverse = None              # invalidate the cached inverse map
         return gid
@@ -136,6 +151,7 @@ class ShardedAlignmentIndex:
         if store is not None:
             root = Path(store)
             root.mkdir(parents=True, exist_ok=True)
+            self._root = root
         dirs = [root / f"shard_{s}" if root is not None else None
                 for s in range(self.n_shards)]
         if fanout == "process":
@@ -248,8 +264,67 @@ class ShardedAlignmentIndex:
         return [sorted(r, key=lambda a: a.text_id) for r in per_q]
 
     def freeze(self) -> "ShardedAlignmentIndex":
-        """Freeze every shard into the CSR serving layout (idempotent)."""
+        """Freeze every shard into the CSR serving layout (idempotent).
+        Live shards merge their delta in memory (their store generations
+        are untouched; use :meth:`compact` to persist in place)."""
         self.shards = [shard.freeze() for shard in self.shards]
+        return self
+
+    def compact(self, *, fanout: str = "serial") -> "ShardedAlignmentIndex":
+        """Fold every live shard's delta into a new store generation and
+        promote it (see :meth:`repro.core.live.LiveIndex.compact`).
+
+        ``fanout="process"`` runs the per-shard merge-compactions in a
+        spawn process pool — deltas travel as pickled state dicts, arrays
+        never cross the boundary (workers write the generation dirs, the
+        parent mmap-reloads) — and promotion always happens in the
+        parent, one atomic pointer flip per shard, after that shard's
+        manifest is committed.  The root ``meta.json`` is rewritten last
+        with the grown doc map; per-shard manifests keep ``restore``
+        correct even if a crash lands between the flips and that rewrite.
+        """
+        from .live import LiveIndex, _shard_compact_payload
+        if fanout not in ("serial", "process"):
+            raise ValueError(f"unknown fanout {fanout!r}; expected "
+                             "'serial' or 'process'")
+        live = [s for s in range(self.n_shards)
+                if getattr(self.shards[s], "is_live", False)]
+        if not live:
+            raise RuntimeError(
+                "no live shards to compact; restore the index with "
+                "live=True (Aligner.load(path, live=True)) to serve writes")
+        # shards whose delta is empty have nothing to fold in — don't
+        # rewrite them into duplicate generations
+        live = [s for s in live if self.shards[s].delta.num_texts]
+        if not live:
+            return self
+        if fanout == "process" and len(live) > 1:
+            import os
+            from concurrent.futures import ProcessPoolExecutor
+            from multiprocessing import get_context
+
+            from .schemes import scheme_spec
+            spec = scheme_spec(self.scheme)
+            workers = min(len(live), os.cpu_count() or 1)
+            with ProcessPoolExecutor(max_workers=workers,
+                                     mp_context=get_context("spawn")) as pool:
+                futures = {
+                    s: pool.submit(_shard_compact_payload, spec,
+                                   str(self.shards[s].root),
+                                   self.shards[s].delta.state_dict(),
+                                   self.shards[s].doc_map)
+                    for s in live}
+                gens = {s: fut.result() for s, fut in futures.items()}
+            for s in live:
+                shard = self.shards[s]
+                index_store.promote_generation(shard.root, gens[s])
+                self.shards[s] = LiveIndex.open(shard.root, mmap=shard.mmap,
+                                                scheme=self.scheme)
+        else:
+            for s in live:
+                self.shards[s].compact()
+        if self._root is not None:
+            self._write_meta(self._root)
         return self
 
     @property
@@ -297,15 +372,26 @@ class ShardedAlignmentIndex:
     def save(self, root: str | Path):
         root = Path(root)
         root.mkdir(parents=True, exist_ok=True)
+        if self._root is None:
+            self._root = root          # snapshot saves don't retarget compact
         for s, shard in enumerate(self.shards):
             store_dir = root / f"shard_{s}"
             pkl = root / f"shard_{s}.pkl"
+            if getattr(shard, "is_live", False):
+                # snapshot a live shard as one flat merged store at the
+                # target (its own store generations are untouched)
+                shard = shard.freeze()
             if shard.is_frozen:
                 # scheme spec lives once in meta.json (a tfidf spec carries
                 # the corpus-wide doc-frequency table; don't write n copies)
                 index_store.save_index(shard, store_dir,
                                        doc_map=self.docs_of_shard(s),
                                        include_scheme=False)
+                # the snapshot is the flat layout; retire any generation
+                # pointer AFTER its manifest commit so readers flip from a
+                # complete old generation to the complete new snapshot
+                (store_dir / index_store.CURRENT_POINTER).unlink(
+                    missing_ok=True)
                 pkl.unlink(missing_ok=True)       # drop stale checkpoint
             else:
                 tmp = root / f"shard_{s}.pkl.tmp"
@@ -318,14 +404,24 @@ class ShardedAlignmentIndex:
         self._write_meta(root)
 
     def restore(self, root: str | Path, *, missing_ok: bool = True,
-                mmap: bool = False) -> list[int]:
+                mmap: bool = False, live: bool = False) -> list[int]:
         """Load shards from disk; returns the list of shard ids that were
         missing/corrupt and have been rebuilt empty (the caller re-adds only
         those shards' documents -- partial recovery).
 
         ``mmap=True`` maps frozen shards' table arrays instead of reading
         them into RAM (versioned store directories only; pickled build
-        checkpoints always materialize).
+        checkpoints always materialize).  ``live=True`` wraps every
+        store-backed shard in a :class:`~repro.core.live.LiveIndex` so the
+        restored index accepts ``add_text`` and ``compact()`` without
+        thawing (mutable pickled shards already accept adds and load as
+        usual).
+
+        The global id mapping is taken from the per-shard store manifests
+        where available (they are rewritten on every compaction promote),
+        with ``meta.json`` covering mutable/lost shards — so a shard
+        compacted after the root meta was last written still restores with
+        correct global ids.
         """
         root = Path(root)
         meta = json.loads((root / "meta.json").read_text())
@@ -338,21 +434,59 @@ class ShardedAlignmentIndex:
                 "rebuild (elastic re-shard)")
         self.doc_map = [tuple(x) for x in meta["doc_map"]]
         self._inverse = None
+        self._root = root
         lost = []
         for s in range(self.n_shards):
             try:
-                self.shards[s] = self._load_shard(root, s, mmap=mmap)
+                self.shards[s] = self._load_shard(root, s, mmap=mmap,
+                                                  live=live)
             except Exception:
                 if not missing_ok:
                     raise
                 self.shards[s] = IndexBuilder(scheme=self.scheme,
                                               method=self.method)
                 lost.append(s)
+        self._remap_doc_ids_from_stores(root, lost)
         return lost
 
-    def _load_shard(self, root: Path, s: int, *, mmap: bool):
+    def _remap_doc_ids_from_stores(self, root: Path, lost: list[int]) -> None:
+        """Overlay the per-shard store manifests' ``doc_map`` onto the
+        global map: local id ``lid`` of shard ``s`` serves global doc
+        ``manifest.doc_map[lid]``.  The manifests are authoritative for
+        frozen shards (promotion rewrites them atomically with the
+        arrays); ``meta.json`` keeps covering pickled shards and lost
+        shards' documents, and contiguous shard-local ids are no longer
+        assumed anywhere."""
+        for s in range(self.n_shards):
+            store_dir = root / f"shard_{s}"
+            if s in lost or not index_store.is_index_store(store_dir):
+                continue
+            shard_map = index_store.read_manifest(store_dir).get("doc_map")
+            if shard_map is None:
+                continue
+            for lid, gid in enumerate(shard_map):
+                gid = int(gid)
+                if gid >= len(self.doc_map):
+                    self.doc_map.extend(
+                        [None] * (gid + 1 - len(self.doc_map)))
+                self.doc_map[gid] = (s, lid)
+        holes = [g for g, e in enumerate(self.doc_map) if e is None]
+        if holes:
+            raise ValueError(
+                f"global doc ids {holes[:8]}{'...' if len(holes) > 8 else ''}"
+                f" appear in no shard manifest and predate {root}/meta.json;"
+                " the store is torn — re-save the index or restore the "
+                "missing shard stores")
+        self._inverse = None
+
+    def _load_shard(self, root: Path, s: int, *, mmap: bool,
+                    live: bool = False):
         store_dir = root / f"shard_{s}"
         if index_store.is_index_store(store_dir):
+            if live:
+                from .live import LiveIndex
+                return LiveIndex.open(store_dir, mmap=mmap,
+                                      scheme=self.scheme)
             return index_store.load_index(store_dir, mmap=mmap,
                                           scheme=self.scheme)
         with open(root / f"shard_{s}.pkl", "rb") as f:

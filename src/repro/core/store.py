@@ -32,6 +32,26 @@ manifest last, so a directory without a readable manifest is an aborted
 write, never a torn index.  ``FORMAT_VERSION`` is checked on load and
 unknown versions are rejected with ``ValueError`` (forward compatibility
 is an explicit migration, not a silent misread).
+
+Generations (live serving)
+--------------------------
+A live store grows *versions*: merge-compaction
+(:class:`repro.core.live.LiveIndex`) writes the folded index into a fresh
+``v{N:06d}/`` subdirectory and then flips the plain-text ``CURRENT``
+pointer file at the root (tmp + rename, after the new manifest exists)::
+
+    index_dir/
+      CURRENT                 "v000002" — the serving generation
+      manifest.json + *.npy   generation 0: the original flat layout
+      v000001/                older compacted generation (rollback target)
+      v000002/                serving generation (manifest + arrays)
+
+Readers resolve through :func:`resolve_store`: no ``CURRENT`` means the
+flat layout (every pre-generation store keeps loading unchanged).
+Promotion is atomic and ordered — arrays, then the generation's manifest,
+then the pointer — so a crash at any point leaves ``CURRENT`` naming a
+complete older generation; rolling back is rewriting ``CURRENT`` to a
+retained version's name (or deleting it to serve the flat root).
 """
 
 from __future__ import annotations
@@ -46,6 +66,7 @@ from .schemes import scheme_from_spec, scheme_spec
 
 FORMAT = "mono-index"
 FORMAT_VERSION = 1
+CURRENT_POINTER = "CURRENT"
 
 _ARRAYS = ("keys", "offsets", "windows")
 _DTYPES = {"keys": np.uint64, "offsets": np.int64, "windows": np.int32}
@@ -56,6 +77,92 @@ _ARENA_DTYPES = {"keys": np.uint64, "coords": np.uint16,
 
 def _table_path(root: Path, i: int, name: str) -> Path:
     return root / f"table_{i:02d}.{name}.npy"
+
+
+# --------------------------------------------------------------------------
+# store generations (live serving: compaction writes a new version dir and
+# atomically flips the CURRENT pointer; see the module docstring)
+# --------------------------------------------------------------------------
+
+def _read_pointer(root: Path) -> str | None:
+    try:
+        return (Path(root) / CURRENT_POINTER).read_text().strip() or None
+    except FileNotFoundError:
+        return None
+
+
+def generation_dir(root, gen: int) -> Path:
+    """Directory of generation ``gen``; 0 is the flat layout root itself."""
+    root = Path(root)
+    return root if gen == 0 else root / f"v{gen:06d}"
+
+
+def current_generation(root) -> int:
+    """The serving generation number: 0 (flat root) when no ``CURRENT``
+    pointer exists, else the ``N`` of the ``v{N:06d}`` dir it names."""
+    name = _read_pointer(Path(root))
+    return int(name.lstrip("v")) if name else 0
+
+
+def next_generation(root) -> int:
+    """The next free generation number: one past both the serving
+    generation and the largest COMMITTED one (manifest present).
+
+    Promoted generations are immutable — after a rollback the next
+    compaction must not renumber over a retained version directory (its
+    arrays may be mmap'd by running readers).  An aborted, manifest-less
+    directory is not committed and is reused by the retry.
+    """
+    root = Path(root)
+    committed = [0]
+    for p in root.glob("v[0-9][0-9][0-9][0-9][0-9][0-9]"):
+        if (p / "manifest.json").exists():
+            committed.append(int(p.name[1:]))
+    return max(max(committed), current_generation(root)) + 1
+
+
+def resolve_store(root) -> Path:
+    """Follow the generation pointer to the serving directory.
+
+    Flat stores (no ``CURRENT``) resolve to themselves, so every loader
+    can resolve unconditionally.  A pointer naming a version without a
+    readable manifest is a corrupt promotion (the pointer is only ever
+    flipped *after* the manifest commit) and is rejected loudly rather
+    than silently serving a stale flat root.
+    """
+    root = Path(root)
+    name = _read_pointer(root)
+    if name is None:
+        return root
+    target = root / name
+    if not (target / "manifest.json").exists():
+        raise ValueError(
+            f"{root}: {CURRENT_POINTER} names generation {name!r} but "
+            "that version has no manifest; the pointer file was edited or "
+            "the version directory was deleted — rewrite CURRENT to a "
+            "retained version (or delete it to serve the flat root)")
+    return target
+
+
+def promote_generation(root, gen: int) -> None:
+    """Atomically flip the serving pointer to generation ``gen``.
+
+    Refuses to point at a version without a committed manifest (an aborted
+    compaction must never become the serving generation).  The pointer is
+    written tmp + rename, so readers always see either the old or the new
+    generation, never a torn pointer.
+    """
+    root = Path(root)
+    if gen < 1:
+        raise ValueError("generation 0 is the flat root; delete the "
+                         f"{CURRENT_POINTER} file to serve it")
+    gdir = generation_dir(root, gen)
+    if not (gdir / "manifest.json").exists():
+        raise ValueError(f"{gdir} has no manifest (aborted compaction?); "
+                         "refusing to promote it to the serving generation")
+    tmp = root / (CURRENT_POINTER + ".tmp")
+    tmp.write_text(gdir.name)
+    tmp.rename(root / CURRENT_POINTER)      # atomic reader flip
 
 
 def _arena_path(root: Path, name: str) -> Path:
@@ -149,8 +256,9 @@ def save_index(index, path, *, doc_map=None,
 
 
 def read_manifest(path) -> dict:
-    """Read and validate a store directory's manifest."""
-    root = Path(path)
+    """Read and validate a store directory's manifest (the serving
+    generation's, when ``path`` is a versioned live-store root)."""
+    root = resolve_store(path)
     mpath = root / "manifest.json"
     if not mpath.exists():
         raise FileNotFoundError(f"{root} is not an index store "
@@ -178,7 +286,7 @@ def load_index(path, *, mmap: bool = True, scheme=None):
     scheme object across shards so sketches are computed once.
     """
     from .search import SearchIndex
-    root = Path(path)
+    root = resolve_store(path)
     manifest = read_manifest(root)
     if scheme is None:
         if manifest["scheme"] is None:
@@ -232,4 +340,8 @@ def _load_arena(root: Path, manifest: dict, tables: list[FrozenTable],
 
 
 def is_index_store(path) -> bool:
-    return (Path(path) / "manifest.json").exists()
+    root = Path(path)
+    if (root / "manifest.json").exists():
+        return True
+    name = _read_pointer(root)
+    return name is not None and (root / name / "manifest.json").exists()

@@ -62,6 +62,8 @@ def main():
           f"({B * G / dt:.1f} tok/s, batch decode)")
 
     if args.memcheck:
+        import tempfile
+
         from repro.api import Aligner
         from repro.data import synthetic_corpus, HashWordTokenizer
         tok = HashWordTokenizer(vocab=cfg.vocab)
@@ -69,12 +71,33 @@ def main():
         aligner = Aligner.build(corpus, similarity="multiset", seed=2,
                                 k=16).freeze()   # CSR serving layout
         t1 = time.time()
-        results = aligner.find_batch([np.asarray(gen[b], np.int64)
-                                      for b in range(B)], 0.5)
+        queries = [np.asarray(gen[b], np.int64) for b in range(B)]
+        results = aligner.find_batch(queries, 0.5)
         flagged = sum(1 for r in results if r)
         print(f"memorization scan: {flagged}/{B} generations align with the "
               f"training corpus at theta=0.5 "
               f"(batched frozen-index scan, {time.time() - t1:.3f}s)")
+
+        # live serving: ingest the generations online (delta index, no
+        # rebuild), then fold them into a promoted store generation and
+        # check the answers ride through the compaction unchanged
+        with tempfile.TemporaryDirectory() as store:
+            aligner.save(store)
+            live = Aligner.load(store, live=True)
+            t2 = time.time()
+            for q in queries:
+                live.add(q)
+            pre = live.find_batch(queries, 0.5)
+            live.compact()
+            post = live.find_batch(queries, 0.5)
+            assert [[h.text_id for h in r] for r in pre] == \
+                [[h.text_id for h in r] for r in post], \
+                "compaction changed live serving results"
+            gen_no = live._index.generation
+            self_hits = sum(1 for r in post if r)
+            print(f"live serve: ingested {B} generations online, compacted "
+                  f"to v{gen_no:06d} in {time.time() - t2:.3f}s; "
+                  f"{self_hits}/{B} generations now self-align ({live!r})")
 
 
 if __name__ == "__main__":
