@@ -19,8 +19,8 @@ import numpy as np
 import tempfile
 from pathlib import Path
 
-from repro.core import IndexBuilder, SearchIndex, ShardedAlignmentIndex, \
-    batch_query, make_scheme, query
+from repro.core import IndexBuilder, QueryOptions, SearchIndex, \
+    ShardedAlignmentIndex, batch_query, make_scheme, query
 
 from .common import print_table, save_result, timed, zipf_text
 
@@ -182,13 +182,18 @@ def run(quick: bool = True) -> dict:
     fan_sk = scheme2.sketch_batch(fan_qs)
     # warm-up: builds the per-shard arenas and the fan-out thread pool so
     # neither timed path pays one-time setup
-    sharded.batch_query(fan_qs[:8], theta2, sketches=fan_sk[:8])
+    sharded.batch_query(fan_qs[:8], theta2,
+                        options=QueryOptions(sketches=fan_sk[:8]))
     ser_res, t_serial = timed(
-        lambda: sharded.batch_query(fan_qs, theta2, sketches=fan_sk,
-                                    fanout="serial"), repeat=5)
+        lambda: sharded.batch_query(
+            fan_qs, theta2,
+            options=QueryOptions(sketches=fan_sk, fanout="serial")),
+        repeat=5)
     thr_res, t_threaded = timed(
-        lambda: sharded.batch_query(fan_qs, theta2, sketches=fan_sk,
-                                    fanout="threaded"), repeat=5)
+        lambda: sharded.batch_query(
+            fan_qs, theta2,
+            options=QueryOptions(sketches=fan_sk, fanout="threaded")),
+        repeat=5)
     fanout_equal = [_blocks(r) for r in ser_res] == \
         [_blocks(r) for r in thr_res]
     rows_fanout = [{"fanout": "serial", "shards": n_shards,

@@ -5,8 +5,9 @@ paper's ratio plots, vs n and vs f (multi-set Jaccard).
 
 from __future__ import annotations
 
-from repro.core import (AlignmentIndex, MultisetScheme, UniversalHash,
+from repro.core import (MultisetScheme, UniversalHash,
                         allalign_multiset, mono_active_multiset, query)
+from repro.core.index import AlignmentIndex
 
 from .common import controlled_f_text, print_table, save_result, timed, \
     zipf_text

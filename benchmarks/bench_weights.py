@@ -13,7 +13,7 @@ import numpy as np
 from repro.core import ICWS, mono_active_icws
 from repro.core.index import WeightedScheme
 from repro.core.query import query
-from repro.core import AlignmentIndex
+from repro.core.index import AlignmentIndex
 from repro.core.weights import WeightFn
 
 from .common import controlled_f_text, print_table, save_result, timed, \

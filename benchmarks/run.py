@@ -10,8 +10,8 @@ import sys
 import time
 
 from . import (bench_active_opt, bench_build, bench_live, bench_query,
-               bench_sketch_kernels, bench_vs_allalign, bench_weights,
-               roofline)
+               bench_serve, bench_sketch_kernels, bench_vs_allalign,
+               bench_weights, roofline)
 
 SUITES = {
     "active_opt": bench_active_opt.run,      # paper Fig. 5
@@ -20,6 +20,7 @@ SUITES = {
     "query": bench_query.run,                # paper §6 query study
     "build": bench_build.run,                # §6 construction study
     "live": bench_live.run,                  # incremental-serve study
+    "serve": bench_serve.run,                # serving front-end study
     "sketch_kernels": bench_sketch_kernels.run,
     "roofline": roofline.run,                # EXPERIMENTS.md §Roofline
 }

@@ -34,15 +34,18 @@ through the store manifest.
 from __future__ import annotations
 
 import json
+import warnings
 from dataclasses import dataclass
 from pathlib import Path
 
 import numpy as np
 
-from .core import make_scheme, query as _query, batch_query as _batch_query
+from .core import batch_query as _batch_query, make_scheme
 from .core.builder import IndexBuilder
 from .core.live import LiveIndex
 from .core.query import Alignment
+from .core.results import (UNSET, Match, QueryOptions, QueryResult,
+                           coerce_query_options)
 from .core.search import SearchIndex
 from .core.sharded_index import ShardedAlignmentIndex
 from .core.store import (CURRENT_POINTER, load_index, read_manifest,
@@ -212,30 +215,67 @@ class Aligner:
 
     # -- queries ------------------------------------------------------------
 
-    def find(self, text, theta: float) -> list[Alignment]:
+    def find(self, text, theta: float, *,
+             options: QueryOptions | None = None,
+             legacy_tuples: bool = False,
+             stage_times: dict | None = None) -> QueryResult:
         """All indexed subsequences aligned with ``text`` at estimated
-        (weighted) Jaccard >= theta (paper Definition 1)."""
-        tokens = self._tokens(text)
-        if isinstance(self._index, (ShardedAlignmentIndex, LiveIndex)):
-            return self._index.query(tokens, theta)
-        return _query(self._index, tokens, theta)
+        (weighted) Jaccard >= theta (paper Definition 1), as a
+        :class:`~repro.core.results.QueryResult` of typed
+        :class:`~repro.core.results.Match` records (iterating it yields
+        the matches, so ``for hit in aligner.find(...)`` is unchanged).
 
-    def find_batch(self, texts, theta: float, *, backend: str = "exact",
-                   probe_backend: str = "numpy") -> list[list[Alignment]]:
+        ``legacy_tuples=True`` returns the pre-typed ``list[Alignment]``
+        shape behind a ``DeprecationWarning``."""
+        return self.find_batch([text], theta, options=options,
+                               legacy_tuples=legacy_tuples,
+                               stage_times=stage_times)[0]
+
+    def find_batch(self, texts, theta: float, *,
+                   options: QueryOptions | None = None,
+                   backend=UNSET, probe_backend=UNSET,
+                   legacy_tuples: bool = False,
+                   stage_times: dict | None = None) -> list[QueryResult]:
         """Batched :meth:`find` (the serving path — one fused arena probe
-        for the whole batch).  ``backend="pallas"`` sketches weighted
-        queries on-device in one fused launch; ``probe_backend`` picks the
-        frozen-index probe stage: ``"numpy"`` (default, one host
-        ``searchsorted`` over the arena), ``"pallas"`` (device-side binary
-        search), or ``"percoord"`` (legacy per-coordinate loop).  Sharded
-        indexes fan the probes out across a thread pool."""
+        for the whole batch); one :class:`QueryResult` per input text.
+
+        Execution knobs come in as ``options=QueryOptions(...)``:
+        ``sketch_backend="pallas"`` sketches weighted queries on-device in
+        one fused launch; ``probe_backend`` picks the frozen-index probe
+        stage — ``"numpy"`` (default, one host ``searchsorted`` over the
+        arena), ``"pallas"`` (device-side binary search), or
+        ``"percoord"`` (legacy per-coordinate loop).  Sharded indexes fan
+        the probes out across a thread pool (``QueryOptions.fanout``).
+        The pre-redesign ``backend``/``probe_backend`` keywords still work
+        behind a ``DeprecationWarning``, as does ``legacy_tuples=True``
+        for the old ``list[list[Alignment]]`` return shape.
+        ``stage_times`` accumulates per-stage wall seconds under
+        ``"sketch"``/``"probe"``/``"sweep"`` (the serve-path metrics
+        hook)."""
+        opts = coerce_query_options(options, "Aligner.find_batch",
+                                    backend=backend,
+                                    probe_backend=probe_backend)
         tokens = [self._tokens(t) for t in texts]
         if isinstance(self._index, (ShardedAlignmentIndex, LiveIndex)):
-            return self._index.batch_query(tokens, theta, backend=backend,
-                                           probe_backend=probe_backend)
-        return _batch_query(self._index, tokens, theta,
-                            sketch_backend=backend,
-                            probe_backend=probe_backend)
+            res = self._index.batch_query(tokens, theta, options=opts,
+                                          stage_times=stage_times)
+        else:
+            res = _batch_query(self._index, tokens, theta,
+                               sketches=opts.sketches,
+                               sketch_backend=opts.sketch_backend,
+                               probe_backend=opts.probe_backend,
+                               sweep=opts.sweep, stage_times=stage_times)
+        if legacy_tuples:
+            warnings.warn(
+                "legacy_tuples=True is deprecated; Aligner.find/find_batch "
+                "return typed QueryResult containers of Match records "
+                "(iteration, len() and truthiness are unchanged)",
+                DeprecationWarning, stacklevel=2)
+            return res
+        k = self.scheme.k
+        return [QueryResult.from_alignments(r, theta=theta, k=k,
+                                            query_len=len(t))
+                for r, t in zip(res, tokens)]
 
     # -- persistence --------------------------------------------------------
 
@@ -407,4 +447,5 @@ def _tokenizer_from_spec(spec: dict | None):
 
 
 __all__ = ["Aligner", "AlignerConfig", "WeightFn", "Alignment",
+           "Match", "QueryResult", "QueryOptions",
            "SearchIndex", "IndexBuilder", "LiveIndex"]

@@ -3,15 +3,15 @@
 #
 # Build→serve lifecycle (PR 2): IndexBuilder (mutable dict tables) freezes
 # into SearchIndex (immutable CSR tables + versioned mmap-able store);
-# AlignmentIndex remains as a deprecation shim over the pair, and
-# repro.api.Aligner is the one-object facade.
+# repro.api.Aligner is the one-object facade.  The long-deprecated
+# AlignmentIndex shim is no longer re-exported here — import it from
+# repro.core.index if you still need the pre-split object.
 from .allalign import allalign_icws, allalign_multiset, allalign_partition
 from .builder import IndexBuilder
 from .columnar import ColumnarBuilder
 from .frozen import FrozenTable, ProbeArena
 from .hashing import MixHash, UniversalHash
 from .icws import ICWS
-from .index import AlignmentIndex
 from .keys import (KeySet, count_active_hashes, generate_keys_icws,
                    generate_keys_multiset, occurrence_lists)
 from .live import LiveIndex
@@ -21,6 +21,7 @@ from .oracle import (jaccard_multiset, jaccard_weighted,
 from .partition import (Partition, mono_active_icws, mono_active_multiset,
                         mono_all_icws, mono_all_multiset, monotonic_partition)
 from .query import Alignment, batch_query, estimate_similarity, query
+from .results import Match, QueryOptions, QueryResult
 from .schemes import (MultisetScheme, WeightedScheme, make_scheme,
                       scheme_from_spec, scheme_spec)
 from .search import SearchIndex
@@ -30,10 +31,10 @@ from .weights import WeightFn
 
 __all__ = [
     "ICWS", "UniversalHash", "MixHash", "WeightFn", "KeySet", "Partition",
-    "AlignmentIndex", "IndexBuilder", "ColumnarBuilder", "SearchIndex",
+    "IndexBuilder", "ColumnarBuilder", "SearchIndex",
     "LiveIndex", "MultisetScheme",
     "WeightedScheme", "make_scheme", "scheme_spec", "scheme_from_spec",
-    "Alignment",
+    "Alignment", "Match", "QueryResult", "QueryOptions",
     "generate_keys_multiset", "generate_keys_icws", "occurrence_lists",
     "count_active_hashes", "monotonic_partition", "mono_all_multiset",
     "mono_active_multiset", "mono_all_icws", "mono_active_icws",

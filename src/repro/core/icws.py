@@ -26,10 +26,12 @@ import numpy as np
 from .hashing import mix2, uniform01
 
 
-def _token_params(seed: int, t: np.ndarray) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """r_t, c_t, beta_t for token array t (float64)."""
+def _token_params(seed, t: np.ndarray) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """r_t, c_t, beta_t for token array t (float64).  ``seed`` may be a
+    scalar or an array broadcastable against ``t`` (the batched sketch
+    evaluates all k hashers in one (k, N) call)."""
     t = np.asarray(t, dtype=np.uint64)
-    base = mix2(np.uint64(seed), t)
+    base = mix2(np.asarray(seed, dtype=np.uint64), t)
     u1 = uniform01(mix2(base, np.uint64(1)))
     u2 = uniform01(mix2(base, np.uint64(2)))
     u3 = uniform01(mix2(base, np.uint64(3)))

@@ -40,6 +40,7 @@ on disk for rollback, and readers flip via
 from __future__ import annotations
 
 import math
+import time
 from dataclasses import dataclass, field
 from pathlib import Path
 
@@ -49,12 +50,21 @@ from . import store as index_store
 from .builder import IndexBuilder
 from .query import (Alignment, _sweep_gathered, batch_probe as _batch_probe,
                     query as _query)
+from .results import UNSET, QueryOptions, coerce_query_options
 from .search import SearchIndex
 
 
 @dataclass
 class LiveIndex:
-    """A frozen serving index that accepts writes without thawing."""
+    """A frozen serving index that accepts writes without thawing.
+
+    Local text id order is ``frozen`` ids first, then ``sealed`` (a delta
+    level snapshotted by an in-progress overlapped compaction), then the
+    active ``delta`` — and it is STABLE across promotion: when a merged
+    frozen+sealed generation is promoted, the sealed texts keep the same
+    local ids (now inside the new frozen) and the active delta keeps its
+    offsets, so in-flight queries and compactions never see ids move.
+    """
 
     frozen: SearchIndex
     delta: IndexBuilder
@@ -63,6 +73,10 @@ class LiveIndex:
     generation: int = 0                 # serving generation under ``root``
     mmap: bool = True                   # how compacted generations load back
     scheme_in_manifest: bool = True     # sharded shards omit the scheme spec
+    sealed: IndexBuilder | None = None  # delta level an overlapped compaction
+    #                                     is folding in (immutable once set)
+    _sealed_docs: list[int] = field(default_factory=list, init=False,
+                                    repr=False)
     _next_gid: int = field(default=0, init=False, repr=False)
 
     def __post_init__(self):
@@ -106,25 +120,36 @@ class LiveIndex:
     def is_live(self) -> bool:
         return True             # query.batch_probe dispatches on this
 
+    def _levels(self):
+        """The index levels in local-id order (frozen, sealed?, delta)."""
+        if self.sealed is not None:
+            return (self.frozen, self.sealed, self.delta)
+        return (self.frozen, self.delta)
+
     @property
     def num_texts(self) -> int:
-        return self.frozen.num_texts + self.delta.num_texts
+        return sum(lv.num_texts for lv in self._levels())
 
     @property
     def num_windows(self) -> int:
-        return self.frozen.num_windows + self.delta.num_windows
+        return sum(lv.num_windows for lv in self._levels())
 
     @property
     def text_lengths(self) -> list[int]:
-        return list(self.frozen.text_lengths) + list(self.delta.text_lengths)
+        out: list[int] = []
+        for lv in self._levels():
+            out.extend(lv.text_lengths)
+        return out
 
     @property
     def delta_fraction(self) -> float:
-        """Delta share of the corpus — the compaction trigger metric."""
-        return self.delta.num_texts / max(1, self.num_texts)
+        """Unfolded (sealed + delta) share of the corpus — the compaction
+        trigger metric."""
+        folded = self.frozen.num_texts
+        return (self.num_texts - folded) / max(1, self.num_texts)
 
     def nbytes(self) -> int:
-        return self.frozen.nbytes() + self.delta.nbytes()
+        return sum(lv.nbytes() for lv in self._levels())
 
     # -- writes -------------------------------------------------------------
 
@@ -135,8 +160,9 @@ class LiveIndex:
         assigns those); default is one past the largest id seen."""
         if gid is None:
             gid = self._next_gid
-        lid = self.frozen.num_texts + \
-            self.delta.add_text(np.asarray(tokens, np.int64))
+        base = self.frozen.num_texts + \
+            (self.sealed.num_texts if self.sealed is not None else 0)
+        lid = base + self.delta.add_text(np.asarray(tokens, np.int64))
         self.doc_map.append(int(gid))
         self._next_gid = max(self._next_gid, int(gid) + 1)
         return lid
@@ -144,69 +170,175 @@ class LiveIndex:
     # -- queries ------------------------------------------------------------
 
     def lookup(self, i: int, v):
-        """Merged postings of identity ``v``: frozen rows first, delta rows
-        re-based after them (grouped by tid, as ``query`` expects)."""
+        """Merged postings of identity ``v``: frozen rows first, then each
+        delta level's rows re-based after it (grouped by tid, as ``query``
+        expects)."""
         rows = [tuple(int(x) for x in r) for r in self.frozen.lookup(i, v)]
         base = self.frozen.num_texts
-        rows.extend((tid + base, a, b, c, d)
-                    for (tid, a, b, c, d) in self.delta.lookup(i, v))
+        for lv in self._levels()[1:]:
+            rows.extend((tid + base, a, b, c, d)
+                        for (tid, a, b, c, d) in lv.lookup(i, v))
+            base += lv.num_texts
         return rows
 
     def batch_probe(self, sketches, *, probe_backend: str = "numpy"
                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """The live probe stage: one arena probe of the frozen index, one
-        dict probe of the delta, delta tids re-based — a single gathered
-        (query ids, windows, coordinate ids) triple for the shared sweep."""
-        fq, fw, fc = _batch_probe(self.frozen, sketches,
-                                  probe_backend=probe_backend)
-        dq, dw, dc = _batch_probe(self.delta, sketches,
-                                  probe_backend=probe_backend)
-        if not len(dq):
-            return fq, fw, fc
-        dw = dw.copy()
-        dw[:, 0] += self.frozen.num_texts
-        return (np.concatenate([fq, dq]), np.concatenate([fw, dw]),
-                np.concatenate([fc, dc]))
+        """The live probe stage: one arena probe of the frozen index plus
+        one dict probe per non-empty delta level, level tids re-based into
+        the local id order — a single gathered (query ids, windows,
+        coordinate ids) triple for the shared sweep.
+
+        Empty levels are skipped before probing: a freshly opened live
+        store (zero delta tables) pays exactly the frozen arena probe and
+        nothing else.
+        """
+        chunks = []
+        base = 0
+        for lv in self._levels():
+            if lv.num_texts:
+                q, w, c = _batch_probe(lv, sketches,
+                                       probe_backend=probe_backend)
+                if len(q):
+                    if base:
+                        w = w.copy()
+                        w[:, 0] += base
+                    chunks.append((q, w, c))
+            base += lv.num_texts
+        if not chunks:
+            return (np.empty(0, np.int64), np.empty((0, 5), np.int64),
+                    np.empty(0, np.int64))
+        if len(chunks) == 1:
+            return chunks[0]
+        return tuple(np.concatenate(parts)
+                     for parts in zip(*chunks))
 
     def query(self, tokens, theta: float) -> list[Alignment]:
-        """Definition-1 alignment over frozen + delta, in global doc ids."""
+        """Definition-1 alignment over frozen + deltas, in global doc ids."""
         return sorted((Alignment(text_id=self.doc_map[al.text_id],
-                                 blocks=al.blocks)
+                                 blocks=al.blocks, ncoords=al.ncoords)
                        for al in _query(self, tokens, theta)),
                       key=lambda a: a.text_id)
 
     def batch_query(self, texts, theta: float, *,
-                    sketches: list[list] | None = None,
-                    backend: str = "exact", probe_backend: str = "numpy",
-                    sweep: str = "grouped") -> list[list[Alignment]]:
+                    options: QueryOptions | None = None,
+                    sketches=UNSET, backend=UNSET, probe_backend=UNSET,
+                    sweep=UNSET,
+                    stage_times: dict | None = None) -> list[list[Alignment]]:
         """Batched :meth:`query` (the serving path): sketch once, merge the
-        frozen and delta probes, sweep the union, remap to global ids."""
+        frozen and delta probes, sweep the union, remap to global ids.
+
+        Execution knobs come in as ``options=QueryOptions(...)``; the
+        pre-redesign ``sketches``/``backend``/``probe_backend``/``sweep``
+        keywords still work behind a ``DeprecationWarning``.
+        ``stage_times`` accumulates per-stage wall seconds under
+        ``"sketch"``/``"probe"``/``"sweep"`` when given.
+        """
+        opts = coerce_query_options(options, "LiveIndex.batch_query",
+                                    sketches=sketches, backend=backend,
+                                    probe_backend=probe_backend, sweep=sweep)
         if not len(texts):
             return []
-        if sketches is None:
-            sketches = self.scheme.sketch_batch(texts, backend=backend)
+        t0 = time.perf_counter()
+        sk = opts.sketches
+        if sk is None:
+            sk = self.scheme.sketch_batch(texts, backend=opts.sketch_backend)
         m = max(1, math.ceil(self.scheme.k * theta))
-        gathered = self.batch_probe(sketches, probe_backend=probe_backend)
-        return [sorted((Alignment(text_id=self.doc_map[al.text_id],
-                                  blocks=al.blocks) for al in res),
-                       key=lambda a: a.text_id)
-                for res in _sweep_gathered(gathered, len(texts), m, sweep)]
+        t1 = time.perf_counter()
+        gathered = self.batch_probe(sk, probe_backend=opts.probe_backend)
+        t2 = time.perf_counter()
+        out = [sorted((Alignment(text_id=self.doc_map[al.text_id],
+                                 blocks=al.blocks, ncoords=al.ncoords)
+                       for al in res),
+                      key=lambda a: a.text_id)
+               for res in _sweep_gathered(gathered, len(texts), m,
+                                          opts.sweep)]
+        if stage_times is not None:
+            t3 = time.perf_counter()
+            stage_times["sketch"] = stage_times.get("sketch", 0.) + (t1 - t0)
+            stage_times["probe"] = stage_times.get("probe", 0.) + (t2 - t1)
+            stage_times["sweep"] = stage_times.get("sweep", 0.) + (t3 - t2)
+        return out
 
     # -- compaction ---------------------------------------------------------
 
-    def _merged_builder(self):
-        """Frozen tables + delta, absorbed into one columnar builder —
-        block-identical to a from-scratch build of the union corpus."""
+    def _merged_builder(self, *, levels=None):
+        """The given levels (default: all of them), absorbed into one
+        columnar builder — block-identical to a from-scratch build of the
+        same corpus."""
         from .columnar import ColumnarBuilder
         builder = ColumnarBuilder(scheme=self.scheme, method=self.method)
-        builder.absorb_index(self.frozen)
-        builder.absorb_builder(self.delta)
+        for lv in (self._levels() if levels is None else levels):
+            if lv.is_frozen:
+                builder.absorb_index(lv)
+            else:
+                builder.absorb_builder(lv)
         return builder
 
     def freeze(self) -> SearchIndex:
-        """Merge frozen + delta into one in-memory ``SearchIndex`` (the
+        """Merge frozen + deltas into one in-memory ``SearchIndex`` (the
         build→serve handoff; use :meth:`compact` to persist in place)."""
         return self._merged_builder().freeze(arena=True)
+
+    # Overlapped (two-phase) compaction: the server's engine thread calls
+    # ``seal_delta`` (cheap pointer swap), a background thread runs
+    # ``merge_sealed`` over the now-immutable frozen + sealed levels while
+    # queries and adds keep flowing, and the engine thread finishes with
+    # ``promote_sealed`` between batches.  Local ids never move (sealed
+    # texts keep their offsets inside the new frozen), so queries started
+    # before, during, or after any phase see identical results.
+
+    def seal_delta(self) -> int:
+        """Phase 1: freeze the active delta as the ``sealed`` level and
+        start a fresh one; returns the number of texts sealed.  Must not
+        overlap a previous unfinished seal."""
+        if self.sealed is not None:
+            raise RuntimeError("a sealed delta is already being compacted")
+        if len(self.doc_map) != self.num_texts:
+            raise RuntimeError(
+                f"doc_map has {len(self.doc_map)} entries for "
+                f"{self.num_texts} texts; refusing to seal a torn state")
+        self.sealed = self.delta
+        self.delta = IndexBuilder(scheme=self.scheme, method=self.method)
+        # snapshot the doc ids the merged generation will cover; adds keep
+        # appending to doc_map but never touch this prefix
+        self._sealed_docs = list(self.doc_map[:self.frozen.num_texts +
+                                              self.sealed.num_texts])
+        return self.sealed.num_texts
+
+    def merge_sealed(self) -> tuple[int, SearchIndex]:
+        """Phase 2: fold frozen + sealed into a NEW committed (manifest on
+        disk, ``CURRENT`` untouched) store generation.  Reads only
+        immutable state, so it can run off-thread under live traffic.
+        Returns ``(generation, its SearchIndex)`` for ``promote_sealed``."""
+        if self.sealed is None:
+            raise RuntimeError("nothing sealed: call seal_delta() first")
+        if self.root is None:
+            raise RuntimeError(
+                "this LiveIndex is not store-backed; compaction writes a "
+                "new store generation — open it with LiveIndex.open(path) "
+                "(or use freeze() for an in-memory merge)")
+        gen = index_store.next_generation(self.root)
+        gen_dir = index_store.generation_dir(self.root, gen)
+        new_idx = self._merged_builder(
+            levels=(self.frozen, self.sealed)).freeze_to_store(
+            gen_dir, mmap=self.mmap, include_scheme=self.scheme_in_manifest,
+            doc_map=self._sealed_docs)
+        return gen, new_idx
+
+    def promote_sealed(self, gen: int, new_idx: SearchIndex) -> int:
+        """Phase 3: flip the store's ``CURRENT`` pointer to ``gen`` and
+        swap serving onto its index, retiring the sealed level.  Atomic
+        from a query's point of view: local ids are unchanged, and
+        in-flight queries holding the old (frozen, sealed, delta) refs
+        finish against them bit-identically."""
+        if self.sealed is None:
+            raise RuntimeError("nothing sealed: call seal_delta() first")
+        index_store.promote_generation(self.root, gen)
+        self.frozen = new_idx
+        self.sealed = None
+        self._sealed_docs = []
+        self.generation = gen
+        return gen
 
     def compact(self, *, promote: bool = True) -> int:
         """Fold the delta into a NEW store generation and promote it.
@@ -220,30 +352,36 @@ class LiveIndex:
         this index still serving frozen + delta.  ``promote=False`` stops
         after the manifest commit and returns the generation number — the
         sharded process fan-out promotes from the parent.
+
+        This is the synchronous form of the seal → merge → promote
+        overlapped sequence above (all three phases inline).
         """
         if self.root is None:
             raise RuntimeError(
                 "this LiveIndex is not store-backed; compaction writes a "
                 "new store generation — open it with LiveIndex.open(path) "
                 "(or use freeze() for an in-memory merge)")
-        if self.delta.num_texts == 0:
+        if self.sealed is None and self.delta.num_texts == 0:
             # nothing to fold in: don't rewrite the whole corpus into a
             # duplicate generation (timer-driven compactors hit this)
             return self.generation
-        if len(self.doc_map) != self.num_texts:
-            raise RuntimeError(
-                f"doc_map has {len(self.doc_map)} entries for "
-                f"{self.num_texts} texts; refusing to write a torn manifest")
-        gen = index_store.next_generation(self.root)
-        gen_dir = index_store.generation_dir(self.root, gen)
-        new_idx = self._merged_builder().freeze_to_store(
-            gen_dir, mmap=self.mmap, include_scheme=self.scheme_in_manifest,
-            doc_map=self.doc_map)
+        if self.sealed is None:
+            self.seal_delta()
+            try:
+                gen, new_idx = self.merge_sealed()
+            except BaseException:
+                # synchronous path: no add can have landed between seal and
+                # merge, so un-seal and restore the pre-call state (a crash
+                # mid-merge must leave the index exactly as it was)
+                if self.delta.num_texts == 0:
+                    self.delta = self.sealed
+                    self.sealed = None
+                    self._sealed_docs = []
+                raise
+        else:
+            gen, new_idx = self.merge_sealed()
         if promote:
-            index_store.promote_generation(self.root, gen)
-            self.frozen = new_idx
-            self.delta = IndexBuilder(scheme=self.scheme, method=self.method)
-            self.generation = gen
+            self.promote_sealed(gen, new_idx)
         return gen
 
 

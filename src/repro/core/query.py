@@ -23,6 +23,7 @@ Two execution paths over the same algorithm:
 from __future__ import annotations
 
 import math
+import time
 from collections import defaultdict
 from dataclasses import dataclass
 
@@ -41,6 +42,9 @@ class Alignment:
 
     text_id: int
     blocks: list[tuple[int, int, int, int]]
+    # distinct colliding sketch coordinates (>= ceil(k*theta) whenever
+    # blocks is non-empty); ncoords/k estimates the query<->text Jaccard
+    ncoords: int | None = None
 
     def cells(self) -> set[tuple[int, int]]:
         out = set()
@@ -121,7 +125,8 @@ def query(index, query_tokens, theta: float
             continue
         blocks = _sweep_text(wins, m)
         if blocks:
-            results.append(Alignment(text_id=int(tid), blocks=blocks))
+            results.append(Alignment(text_id=int(tid), blocks=blocks,
+                                     ncoords=int(ncoords[tid])))
     return results
 
 
@@ -260,7 +265,8 @@ def batch_query(index, queries, theta: float, *,
                 sketches: list[list] | None = None,
                 sketch_backend: str = "exact",
                 probe_backend: str = "numpy",
-                sweep: str = "grouped") -> list[list[Alignment]]:
+                sweep: str = "grouped",
+                stage_times: dict | None = None) -> list[list[Alignment]]:
     """Definition-1 alignment for a batch of queries (the serving path).
 
     ``sketches`` short-circuits sketching when the caller already holds the
@@ -276,15 +282,28 @@ def batch_query(index, queries, theta: float, *,
     always take that path).  ``sweep="grouped"`` batches small (query,
     text) groups through the vectorized small-group sweep; ``"loop"``
     sweeps every group individually.  All combinations are block-identical.
+
+    ``stage_times``, when given, accumulates per-stage wall seconds under
+    the keys ``"sketch"``, ``"probe"`` and ``"sweep"`` (the serve-path
+    metrics hook; += so one dict can span many batches).
     """
     B = len(queries)
     if B == 0:
         return []
     m = max(1, math.ceil(index.scheme.k * theta))
+    t0 = time.perf_counter()
     if sketches is None:
         sketches = index.scheme.sketch_batch(queries, backend=sketch_backend)
+    t1 = time.perf_counter()
     gathered = batch_probe(index, sketches, probe_backend=probe_backend)
-    return _sweep_gathered(gathered, B, m, sweep)
+    t2 = time.perf_counter()
+    out = _sweep_gathered(gathered, B, m, sweep)
+    if stage_times is not None:
+        t3 = time.perf_counter()
+        stage_times["sketch"] = stage_times.get("sketch", 0.0) + (t1 - t0)
+        stage_times["probe"] = stage_times.get("probe", 0.0) + (t2 - t1)
+        stage_times["sweep"] = stage_times.get("sweep", 0.0) + (t3 - t2)
+    return out
 
 
 def batch_probe(index, sketches, *, probe_backend: str = "numpy"
@@ -377,7 +396,8 @@ def _sweep_gathered(gathered, B: int, m: int, sweep: str
             _sweep_text(win_all[lo:ends[g], 1:5], m)
         if blocks:
             results[int(qid_all[lo])].append(
-                Alignment(text_id=int(win_all[lo, 0]), blocks=blocks))
+                Alignment(text_id=int(win_all[lo, 0]), blocks=blocks,
+                          ncoords=int(distinct[g])))
     return results
 
 

@@ -34,6 +34,7 @@ from __future__ import annotations
 import json
 import math
 import pickle
+import time
 from dataclasses import dataclass, field
 from pathlib import Path
 
@@ -42,6 +43,7 @@ import numpy as np
 from . import store as index_store
 from .builder import IndexBuilder
 from .query import Alignment, _sweep_gathered, batch_probe, query
+from .results import UNSET, QueryOptions, coerce_query_options
 from .search import SearchIndex
 
 META_VERSION = 1
@@ -213,46 +215,60 @@ class ShardedAlignmentIndex:
         for s, shard in enumerate(self.shards):
             for al in query(shard, tokens, theta):
                 out.append(Alignment(text_id=inverse[(s, al.text_id)],
-                                     blocks=al.blocks))
+                                     blocks=al.blocks, ncoords=al.ncoords))
         return sorted(out, key=lambda a: a.text_id)
 
     def batch_query(self, texts, theta: float, *,
-                    sketches: list[list] | None = None,
-                    backend: str = "exact", probe_backend: str = "numpy",
-                    fanout: str = "threaded") -> list[list[Alignment]]:
+                    options: QueryOptions | None = None,
+                    sketches=UNSET, backend=UNSET, probe_backend=UNSET,
+                    fanout=UNSET,
+                    stage_times: dict | None = None) -> list[list[Alignment]]:
         """Batched fan-out: sketch the batch once (shards share the hash
         family), probe every shard's tables with the same sketches, union
         per query in the global id space.
 
-        ``fanout="threaded"`` (default) overlaps the per-shard *probe*
-        stage (:func:`repro.core.query.batch_probe`) with a thread pool —
-        NumPy releases the GIL inside searchsorted/gather and mmap-backed
-        shards overlap page-ins — and then runs the GIL-bound plane-sweep
-        stage serially (threading it just convoys on the GIL);
-        ``"serial"`` keeps the fully sequential loop.  Results are merged
-        in shard order either way, so the two are block-identical.
-        ``probe_backend`` picks each shard's probe path, and ``sketches``
-        short-circuits sketching when the caller already holds the batch's
-        sketch coordinates (shards share the hash family, so they are
-        computed once regardless).
+        Execution knobs come in as ``options=QueryOptions(...)``; the
+        pre-redesign ``sketches``/``backend``/``probe_backend``/``fanout``
+        keywords still work behind a ``DeprecationWarning``.
+
+        ``QueryOptions.fanout="threaded"`` (default) overlaps the
+        per-shard *probe* stage (:func:`repro.core.query.batch_probe`)
+        with a thread pool — NumPy releases the GIL inside
+        searchsorted/gather and mmap-backed shards overlap page-ins — and
+        then runs the GIL-bound plane-sweep stage serially (threading it
+        just convoys on the GIL); ``"serial"`` keeps the fully sequential
+        loop.  Results are merged in shard order either way, so the two
+        are block-identical.  ``probe_backend`` picks each shard's probe
+        path, and ``sketches`` short-circuits sketching when the caller
+        already holds the batch's sketch coordinates (shards share the
+        hash family, so they are computed once regardless).
+        ``stage_times`` accumulates per-stage wall seconds under
+        ``"sketch"``/``"probe"``/``"sweep"`` when given.
         """
+        opts = coerce_query_options(
+            options, "ShardedAlignmentIndex.batch_query", sketches=sketches,
+            backend=backend, probe_backend=probe_backend, fanout=fanout)
         if not texts:
             return []
-        if sketches is None:
-            sketches = self.scheme.sketch_batch(texts, backend=backend)
+        t0 = time.perf_counter()
+        sk = opts.sketches
+        if sk is None:
+            sk = self.scheme.sketch_batch(texts, backend=opts.sketch_backend)
         inverse = self._inverse_doc_map()
         B = len(texts)
         m = max(1, math.ceil(self.scheme.k * theta))
 
         def probe_shard(shard):
-            return batch_probe(shard, sketches, probe_backend=probe_backend)
+            return batch_probe(shard, sk, probe_backend=opts.probe_backend)
 
-        if fanout == "threaded" and self.n_shards > 1:
+        t1 = time.perf_counter()
+        if opts.fanout == "threaded" and self.n_shards > 1:
             gathered = list(self._fanout_pool().map(probe_shard,
                                                     self.shards))
         else:
             gathered = [probe_shard(shard) for shard in self.shards]
-        shard_results = [_sweep_gathered(g, B, m, "grouped")
+        t2 = time.perf_counter()
+        shard_results = [_sweep_gathered(g, B, m, opts.sweep)
                          for g in gathered]
 
         per_q: list[list[Alignment]] = [[] for _ in texts]
@@ -260,8 +276,15 @@ class ShardedAlignmentIndex:
             for qi, als in enumerate(res):
                 per_q[qi].extend(
                     Alignment(text_id=inverse[(s, al.text_id)],
-                              blocks=al.blocks) for al in als)
-        return [sorted(r, key=lambda a: a.text_id) for r in per_q]
+                              blocks=al.blocks, ncoords=al.ncoords)
+                    for al in als)
+        out = [sorted(r, key=lambda a: a.text_id) for r in per_q]
+        if stage_times is not None:
+            t3 = time.perf_counter()
+            stage_times["sketch"] = stage_times.get("sketch", 0.) + (t1 - t0)
+            stage_times["probe"] = stage_times.get("probe", 0.) + (t2 - t1)
+            stage_times["sweep"] = stage_times.get("sweep", 0.) + (t3 - t2)
+        return out
 
     def freeze(self) -> "ShardedAlignmentIndex":
         """Freeze every shard into the CSR serving layout (idempotent).
@@ -293,9 +316,10 @@ class ShardedAlignmentIndex:
             raise RuntimeError(
                 "no live shards to compact; restore the index with "
                 "live=True (Aligner.load(path, live=True)) to serve writes")
-        # shards whose delta is empty have nothing to fold in — don't
-        # rewrite them into duplicate generations
-        live = [s for s in live if self.shards[s].delta.num_texts]
+        # shards whose delta levels are empty have nothing to fold in —
+        # don't rewrite them into duplicate generations
+        live = [s for s in live if self.shards[s].delta.num_texts
+                or self.shards[s].sealed is not None]
         if not live:
             return self
         if fanout == "process" and len(live) > 1:

@@ -1,0 +1,40 @@
+"""Async serving front end: an asyncio HTTP + WebSocket server around
+:class:`repro.api.Aligner` with a dynamic micro-batcher.
+
+The paper's headline number is query latency, and the repo's batched
+engine (`find_batch` over the fused ``ProbeArena``) is several times the
+throughput of looped ``find`` — but only for callers who hand-assemble
+batches.  This package turns that batched throughput into tail-latency
+wins for *concurrent single-query* clients:
+
+* :class:`~repro.serve.batcher.DynamicBatcher` — concurrent requests
+  enqueue into a coalescing queue; a drain loop forms ``find_batch``
+  batches under a max-batch-size / max-linger policy and runs the
+  GIL-releasing probe off the event loop on a single engine thread.
+  Admission control (bounded in-flight count → 503) and per-request
+  deadlines (expired work dropped before probing → 504) included.
+* :class:`~repro.serve.app.AlignServer` — pure-stdlib asyncio HTTP/1.1 +
+  RFC 6455 WebSocket front end speaking the typed
+  :class:`~repro.core.results.Match`/``QueryResult`` JSON protocol
+  (:mod:`repro.serve.protocol`), with ``/metrics`` observability
+  (:mod:`repro.serve.metrics`) and graceful generation-swap compaction:
+  ``/compact`` seals the live delta on the engine thread, merges it into
+  a new store generation on a background thread while traffic keeps
+  flowing, and promotes the ``CURRENT`` pointer between batches — no
+  request is ever dropped or served torn state.
+
+Start one with::
+
+    PYTHONPATH=src python -m repro.serve --store idx_dir --live
+
+and query it with :mod:`repro.serve.client` or plain ``curl``.
+"""
+
+from .app import AlignServer
+from .batcher import DeadlineExceeded, DynamicBatcher, QueueFull
+from .client import AlignClient, AsyncAlignClient
+from .metrics import ServeMetrics
+
+__all__ = ["AlignServer", "DynamicBatcher", "ServeMetrics",
+           "AlignClient", "AsyncAlignClient", "QueueFull",
+           "DeadlineExceeded"]

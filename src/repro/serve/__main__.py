@@ -1,0 +1,62 @@
+"""Serve CLI: run an align server over a saved index store.
+
+    PYTHONPATH=src python -m repro.serve --store idx_dir --live \
+        --port 8080 --max-batch 32 --linger-us 2000
+
+``--live`` opens the store for incremental serving (POST /add and
+POST /compact work); without it the server is query-only.
+"""
+
+from __future__ import annotations
+
+import argparse
+import asyncio
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        "python -m repro.serve",
+        description="asyncio alignment server with dynamic batching")
+    ap.add_argument("--store", required=True,
+                    help="index store directory (Aligner.save / build store=)")
+    ap.add_argument("--live", action="store_true",
+                    help="open live: accept /add writes and /compact")
+    ap.add_argument("--no-mmap", action="store_true",
+                    help="materialize the index instead of mmap-serving it")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8080)
+    ap.add_argument("--max-batch", type=int, default=32,
+                    help="dynamic batch size cap (default 32)")
+    ap.add_argument("--linger-us", type=float, default=2000.0,
+                    help="max micro-batch linger in microseconds")
+    ap.add_argument("--queue-cap", type=int, default=256,
+                    help="in-flight request cap; beyond it requests get 503")
+    args = ap.parse_args(argv)
+
+    from repro.api import Aligner
+    from repro.serve import AlignServer
+
+    aligner = Aligner.load(args.store, mmap=not args.no_mmap, live=args.live)
+    print(f"serving {aligner!r}")
+
+    async def run():
+        server = AlignServer(aligner, host=args.host, port=args.port,
+                             max_batch=args.max_batch,
+                             max_linger_us=args.linger_us,
+                             queue_cap=args.queue_cap)
+        await server.start()
+        print(f"listening on http://{server.host}:{server.port} "
+              f"(endpoints: /query /add /compact /metrics /healthz /ws)")
+        try:
+            await server._server.serve_forever()
+        finally:
+            await server.close()
+
+    try:
+        asyncio.run(run())
+    except KeyboardInterrupt:
+        pass
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,257 @@
+"""The dynamic micro-batcher: coalesce concurrent single-query requests
+into ``find_batch`` calls, run them off the event loop, fan results back
+to per-request futures.
+
+Concurrency model — ONE engine thread for ALL index access:
+
+Every operation that touches the index — query batches, ``add`` writes,
+the seal and promote phases of compaction — runs as a job on a single
+``ThreadPoolExecutor(max_workers=1)``.  That serialization is the whole
+correctness story: the mutable delta's dict tables are never read while
+being written, generation swaps land *between* batches (a batch holds
+its references for the duration of one ``find_batch`` call and the swap
+only rebinds attributes for later batches), and FIFO job order gives
+read-your-writes (a query enqueued after an ``add`` sees its document).
+The only index work OFF this thread is the compaction *merge*, which
+reads exclusively immutable state (frozen arrays + the sealed delta) —
+see :meth:`repro.serve.app.AlignServer.compact`.
+
+The drain loop implements the batching policy:
+
+* pop a request, then keep coalescing requests with the same
+  ``(theta, QueryOptions.batch_key())`` until ``max_batch`` is reached or
+  ``max_linger_us`` expires — under load the linger never sleeps because
+  the queue already holds a backlog;
+* a control job (add/seal/promote) or an incompatible query stops the
+  current batch (preserving FIFO order: it is stashed and handled next);
+* requests whose deadline passed while queued are completed with
+  :class:`DeadlineExceeded` *before* the probe runs — expired work never
+  costs engine time;
+* admission control caps the number of in-flight requests
+  (:class:`QueueFull` → HTTP 503).  Control jobs are always admitted:
+  backpressure must shed query load without wedging writes or
+  compaction.
+"""
+
+from __future__ import annotations
+
+import asyncio
+from concurrent.futures import ThreadPoolExecutor
+
+from ..core.results import QueryOptions
+from .metrics import ServeMetrics
+
+
+class QueueFull(Exception):
+    """Admission control rejected the request (queue at capacity)."""
+
+
+class DeadlineExceeded(Exception):
+    """The request's deadline passed before its batch was probed."""
+
+
+class _QueryItem:
+    __slots__ = ("tokens", "theta", "options", "deadline", "enqueued",
+                 "future")
+
+    def __init__(self, tokens, theta, options, deadline, enqueued, future):
+        self.tokens = tokens
+        self.theta = theta
+        self.options = options
+        self.deadline = deadline        # absolute loop.time(), or None
+        self.enqueued = enqueued
+        self.future = future
+
+    def batch_key(self):
+        return (self.theta, self.options.batch_key())
+
+
+class _ControlItem:
+    __slots__ = ("fn", "future", "label")
+
+    def __init__(self, fn, future, label):
+        self.fn = fn
+        self.future = future
+        self.label = label
+
+
+class DynamicBatcher:
+    """Coalescing queue + single-threaded engine around an ``Aligner``."""
+
+    def __init__(self, aligner, *, max_batch: int = 32,
+                 max_linger_us: float = 2000.0, queue_cap: int = 256,
+                 metrics: ServeMetrics | None = None):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.aligner = aligner
+        self.max_batch = max_batch
+        self.linger_s = max_linger_us / 1e6
+        self.queue_cap = queue_cap
+        self.metrics = metrics if metrics is not None else ServeMetrics()
+        self._queue: asyncio.Queue = asyncio.Queue()
+        self._stash = None              # item popped but not yet batchable
+        self._inflight = 0
+        self._engine = ThreadPoolExecutor(max_workers=1,
+                                          thread_name_prefix="align-engine")
+        self._task: asyncio.Task | None = None
+        self._closed = False
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> None:
+        if self._task is None:
+            self._task = asyncio.get_running_loop().create_task(
+                self._drain(), name="batcher-drain")
+
+    async def close(self) -> None:
+        self._closed = True
+        if self._task is not None:
+            self._task.cancel()
+            try:
+                await self._task
+            except asyncio.CancelledError:
+                pass
+            self._task = None
+        while not self._queue.empty():
+            item = self._queue.get_nowait()
+            if not item.future.done():
+                item.future.cancel()
+        if self._stash is not None and not self._stash.future.done():
+            self._stash.future.cancel()
+        self._engine.shutdown(wait=True)
+
+    # -- submission ----------------------------------------------------------
+
+    def submit_query(self, tokens, theta: float,
+                     options: QueryOptions | None = None,
+                     deadline_s: float | None = None) -> asyncio.Future:
+        """Enqueue one query; the returned future resolves to its
+        ``QueryResult`` (or ``DeadlineExceeded``).  Raises
+        :class:`QueueFull` when admission control is at capacity."""
+        if self._closed:
+            raise QueueFull("server is shutting down")
+        if self._inflight >= self.queue_cap:
+            self.metrics.inc("rejected_total")
+            raise QueueFull(
+                f"{self._inflight} requests in flight (cap "
+                f"{self.queue_cap})")
+        loop = asyncio.get_running_loop()
+        now = loop.time()
+        fut = loop.create_future()
+        item = _QueryItem(
+            tokens=tokens, theta=float(theta),
+            options=options if options is not None else QueryOptions(),
+            deadline=None if deadline_s is None else now + deadline_s,
+            enqueued=now, future=fut)
+        self._inflight += 1
+        fut.add_done_callback(self._on_done(item, loop))
+        self.metrics.inc("requests_total")
+        self._queue.put_nowait(item)
+        self.start()
+        return fut
+
+    def submit_control(self, fn, label: str = "control") -> asyncio.Future:
+        """Run ``fn()`` alone on the engine thread, in FIFO order with the
+        query stream.  Always admitted (never sheds writes/compaction)."""
+        loop = asyncio.get_running_loop()
+        fut = loop.create_future()
+        self._queue.put_nowait(_ControlItem(fn=fn, future=fut, label=label))
+        self.start()
+        return fut
+
+    def run_offband(self, fn) -> asyncio.Future:
+        """Run ``fn()`` on a throwaway thread OUTSIDE the engine — for
+        work that must overlap serving and only reads immutable state
+        (the compaction merge)."""
+        loop = asyncio.get_running_loop()
+        return loop.run_in_executor(None, fn)
+
+    def _on_done(self, item: _QueryItem, loop):
+        def cb(fut):
+            self._inflight -= 1
+            if not fut.cancelled() and fut.exception() is None:
+                self.metrics.observe_latency(loop.time() - item.enqueued)
+        return cb
+
+    # -- drain loop ----------------------------------------------------------
+
+    async def _drain(self) -> None:
+        loop = asyncio.get_running_loop()
+        while True:
+            item = self._stash
+            self._stash = None
+            if item is None:
+                item = await self._queue.get()
+            if isinstance(item, _ControlItem):
+                await self._run_control(item)
+                continue
+            batch = [item]
+            key = item.batch_key()
+            end = loop.time() + self.linger_s
+            while len(batch) < self.max_batch:
+                wait = end - loop.time()
+                try:
+                    if wait > 0:
+                        nxt = await asyncio.wait_for(self._queue.get(),
+                                                     wait)
+                    else:
+                        # linger spent: sweep only what is already queued
+                        nxt = self._queue.get_nowait()
+                except (asyncio.TimeoutError, asyncio.QueueEmpty):
+                    break
+                if isinstance(nxt, _ControlItem) or nxt.batch_key() != key:
+                    self._stash = nxt       # FIFO: handled right after us
+                    break
+                batch.append(nxt)
+            await self._dispatch(batch, loop)
+
+    async def _run_control(self, item: _ControlItem) -> None:
+        loop = asyncio.get_running_loop()
+        try:
+            out = await loop.run_in_executor(self._engine, item.fn)
+        except Exception as e:                      # noqa: BLE001
+            if not item.future.done():
+                item.future.set_exception(e)
+        else:
+            if not item.future.done():
+                item.future.set_result(out)
+
+    async def _dispatch(self, batch: list, loop) -> None:
+        now = loop.time()
+        live, expired = [], []
+        for q in batch:
+            if q.future.done():
+                continue                 # client went away / cancelled
+            if q.deadline is not None and now > q.deadline:
+                expired.append(q)
+            else:
+                live.append(q)
+        for q in expired:
+            self.metrics.inc("expired_total")
+            q.future.set_exception(DeadlineExceeded(
+                f"deadline passed {1e3 * (now - q.deadline):.1f} ms before "
+                "the batch was probed"))
+        if not live:
+            return                       # nothing left: skip the probe
+        stage: dict = {}
+        try:
+            results = await loop.run_in_executor(
+                self._engine, self._probe, live, stage)
+        except Exception as e:                      # noqa: BLE001
+            self.metrics.inc("errors_total", by=len(live))
+            for q in live:
+                if not q.future.done():
+                    q.future.set_exception(e)
+            return
+        self.metrics.observe_batch(
+            len(live), [now - q.enqueued for q in live], stage)
+        for q, res in zip(live, results):
+            if not q.future.done():
+                q.future.set_result(res)
+
+    def _probe(self, live: list, stage: dict):
+        """Engine-thread body: ONE ``find_batch`` over the coalesced
+        queries (all share theta and an options batch key)."""
+        return self.aligner.find_batch(
+            [q.tokens for q in live], live[0].theta,
+            options=live[0].options, stage_times=stage)

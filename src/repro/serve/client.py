@@ -1,0 +1,276 @@
+"""Minimal clients for the align server — test/bench plumbing, not an
+SDK.
+
+* :class:`AlignClient` — blocking, one keep-alive HTTP connection
+  (stdlib ``http.client``).
+* :class:`AsyncAlignClient` — asyncio, one keep-alive HTTP connection,
+  requests serialized per connection (a closed-loop virtual client).
+* :class:`AsyncWSClient` — asyncio WebSocket connection with pipelining:
+  many queries in flight at once, correlated by the protocol's ``id``
+  field (the open-loop bench driver).
+"""
+
+from __future__ import annotations
+
+import asyncio
+import base64
+import hashlib
+import http.client
+import itertools
+import json
+import os
+import struct
+
+from .app import _WS_GUID, _ws_read_frame
+
+
+class ServerError(RuntimeError):
+    def __init__(self, status: int, message: str):
+        super().__init__(f"HTTP {status}: {message}")
+        self.status = status
+
+
+def _raise_for(status: int, payload: dict):
+    if status != 200:
+        raise ServerError(status, payload.get("error", "unknown error"))
+
+
+def _query_body(text, theta, options=None, deadline_ms=None, id=None
+                ) -> dict:
+    body = {"text": text if isinstance(text, str) else
+            [int(t) for t in text], "theta": theta}
+    if options is not None:
+        body["options"] = options if isinstance(options, dict) \
+            else options.to_dict()
+    if deadline_ms is not None:
+        body["deadline_ms"] = deadline_ms
+    if id is not None:
+        body["id"] = id
+    return body
+
+
+class AlignClient:
+    """Blocking client over one keep-alive HTTP connection."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0,
+                 timeout: float = 30.0):
+        self._conn = http.client.HTTPConnection(host, port, timeout=timeout)
+
+    def close(self) -> None:
+        self._conn.close()
+
+    def __enter__(self) -> "AlignClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _request(self, method: str, path: str, body: dict | None = None
+                 ) -> tuple[int, dict]:
+        payload = json.dumps(body).encode() if body is not None else b""
+        self._conn.request(method, path, body=payload,
+                           headers={"Content-Type": "application/json"})
+        resp = self._conn.getresponse()
+        return resp.status, json.loads(resp.read())
+
+    def query(self, text, theta: float, *, options=None, deadline_ms=None
+              ) -> dict:
+        """Returns the response's ``result`` dict
+        (``QueryResult.to_dict()`` shape — rebuild with
+        ``QueryResult.from_dict`` if you want the typed object)."""
+        status, payload = self._request(
+            "POST", "/query", _query_body(text, theta, options=options,
+                                          deadline_ms=deadline_ms))
+        _raise_for(status, payload)
+        return payload["result"]
+
+    def add(self, text) -> int:
+        status, payload = self._request(
+            "POST", "/add", {"text": text if isinstance(text, str) else
+                             [int(t) for t in text]})
+        _raise_for(status, payload)
+        return payload["doc_id"]
+
+    def compact(self) -> int:
+        status, payload = self._request("POST", "/compact", {})
+        _raise_for(status, payload)
+        return payload["generation"]
+
+    def metrics(self) -> dict:
+        return self._request("GET", "/metrics")[1]
+
+    def healthz(self) -> dict:
+        return self._request("GET", "/healthz")[1]
+
+
+class AsyncAlignClient:
+    """One keep-alive HTTP connection; requests serialized on it (a
+    closed-loop virtual client issues one request at a time anyway)."""
+
+    def __init__(self, reader, writer):
+        self._reader = reader
+        self._writer = writer
+        self._lock = asyncio.Lock()
+
+    @classmethod
+    async def connect(cls, host: str, port: int) -> "AsyncAlignClient":
+        reader, writer = await asyncio.open_connection(host, port)
+        return cls(reader, writer)
+
+    async def close(self) -> None:
+        self._writer.close()
+        try:
+            await self._writer.wait_closed()
+        except (ConnectionResetError, BrokenPipeError):
+            pass
+
+    async def request(self, method: str, path: str,
+                      body: dict | None = None) -> tuple[int, dict]:
+        payload = json.dumps(body).encode() if body is not None else b""
+        head = (f"{method} {path} HTTP/1.1\r\n"
+                "Host: align\r\n"
+                "Content-Type: application/json\r\n"
+                f"Content-Length: {len(payload)}\r\n\r\n").encode()
+        async with self._lock:
+            self._writer.write(head + payload)
+            await self._writer.drain()
+            status_line = await self._reader.readline()
+            status = int(status_line.split()[1])
+            n = 0
+            while True:
+                h = await self._reader.readline()
+                if h in (b"\r\n", b"\n", b""):
+                    break
+                if h.lower().startswith(b"content-length:"):
+                    n = int(h.split(b":", 1)[1])
+            body_bytes = await self._reader.readexactly(n) if n else b"{}"
+        return status, json.loads(body_bytes)
+
+    async def query(self, text, theta: float, *, options=None,
+                    deadline_ms=None) -> tuple[int, dict]:
+        """Returns (status, payload) — the bench wants non-200s as data,
+        not exceptions."""
+        return await self.request(
+            "POST", "/query", _query_body(text, theta, options=options,
+                                          deadline_ms=deadline_ms))
+
+    async def add(self, text) -> int:
+        status, payload = await self.request(
+            "POST", "/add", {"text": text if isinstance(text, str) else
+                             [int(t) for t in text]})
+        _raise_for(status, payload)
+        return payload["doc_id"]
+
+    async def compact(self) -> int:
+        status, payload = await self.request("POST", "/compact", {})
+        _raise_for(status, payload)
+        return payload["generation"]
+
+    async def metrics(self) -> dict:
+        return (await self.request("GET", "/metrics"))[1]
+
+
+class AsyncWSClient:
+    """WebSocket client with pipelining: ``submit`` returns a future, a
+    reader task correlates responses by the echoed ``id``."""
+
+    def __init__(self, reader, writer):
+        self._reader = reader
+        self._writer = writer
+        self._pending: dict[str, asyncio.Future] = {}
+        self._ids = itertools.count()
+        self._reader_task: asyncio.Task | None = None
+
+    @classmethod
+    async def connect(cls, host: str, port: int) -> "AsyncWSClient":
+        reader, writer = await asyncio.open_connection(host, port)
+        key = base64.b64encode(os.urandom(16)).decode()
+        writer.write((f"GET /ws HTTP/1.1\r\nHost: {host}\r\n"
+                      "Upgrade: websocket\r\nConnection: Upgrade\r\n"
+                      f"Sec-WebSocket-Key: {key}\r\n"
+                      "Sec-WebSocket-Version: 13\r\n\r\n").encode())
+        await writer.drain()
+        status = await reader.readline()
+        if b"101" not in status:
+            raise ConnectionError(f"WebSocket upgrade refused: {status!r}")
+        expect = base64.b64encode(hashlib.sha1(
+            (key + _WS_GUID).encode()).digest()).decode()
+        accepted = False
+        while True:
+            h = await reader.readline()
+            if h in (b"\r\n", b"\n", b""):
+                break
+            if h.lower().startswith(b"sec-websocket-accept:"):
+                accepted = h.split(b":", 1)[1].strip().decode() == expect
+        if not accepted:
+            raise ConnectionError("bad Sec-WebSocket-Accept")
+        self = cls(reader, writer)
+        self._reader_task = asyncio.get_running_loop().create_task(
+            self._read_loop())
+        return self
+
+    async def close(self) -> None:
+        if self._reader_task is not None:
+            self._reader_task.cancel()
+            try:
+                await self._reader_task
+            except asyncio.CancelledError:
+                pass
+        self._writer.close()
+        try:
+            await self._writer.wait_closed()
+        except (ConnectionResetError, BrokenPipeError):
+            pass
+        for fut in self._pending.values():
+            if not fut.done():
+                fut.cancel()
+        self._pending.clear()
+
+    def submit(self, text, theta: float, *, options=None,
+               deadline_ms=None) -> asyncio.Future:
+        """Fire one query; the future resolves to the response payload
+        dict (``ok``/``result`` or ``ok: false``/``status``)."""
+        rid = f"q{next(self._ids)}"
+        fut = asyncio.get_running_loop().create_future()
+        self._pending[rid] = fut
+        payload = json.dumps(_query_body(
+            text, theta, options=options, deadline_ms=deadline_ms,
+            id=rid)).encode()
+        self._writer.write(_masked_frame(0x1, payload))
+        return fut
+
+    async def _read_loop(self) -> None:
+        try:
+            while True:
+                frame = await _ws_read_frame(self._reader)
+                if frame is None:
+                    break
+                opcode, payload = frame
+                if opcode != 0x1:
+                    continue
+                msg = json.loads(payload)
+                fut = self._pending.pop(msg.get("id"), None)
+                if fut is None and not msg.get("ok", False):
+                    # errors lose the id (the server echoes it only on
+                    # success); resolve the oldest pending query
+                    if self._pending:
+                        fut = self._pending.pop(next(iter(self._pending)))
+                if fut is not None and not fut.done():
+                    fut.set_result(msg)
+        except (asyncio.IncompleteReadError, ConnectionResetError):
+            pass
+
+
+def _masked_frame(opcode: int, payload: bytes) -> bytes:
+    """One client->server frame (fin=1, masked, as RFC 6455 requires)."""
+    head = bytes([0x80 | opcode])
+    n = len(payload)
+    if n < 126:
+        head += bytes([0x80 | n])
+    elif n < (1 << 16):
+        head += bytes([0x80 | 126]) + struct.pack("!H", n)
+    else:
+        head += bytes([0x80 | 127]) + struct.pack("!Q", n)
+    mask = os.urandom(4)
+    return head + mask + bytes(c ^ mask[i % 4]
+                               for i, c in enumerate(payload))

@@ -1,0 +1,119 @@
+"""The server's wire protocol: JSON request/response schemas over HTTP
+POST bodies and WebSocket text frames.
+
+Query request::
+
+    {"text": "a string" | [int tokens],
+     "theta": 0.8,
+     "options": {"probe_backend": "numpy", ...},   # QueryOptions.to_dict()
+     "deadline_ms": 50,                            # optional, relative
+     "id": "any-client-token"}                     # optional, echoed back
+
+Query response (200)::
+
+    {"ok": true, "id": ..., "result": QueryResult.to_dict()}
+
+where ``result.matches[*]`` is a :class:`repro.core.results.Match` record::
+
+    {"doc_id": 5, "span": [3, 41], "query_span": [0, 44],
+     "estimated_similarity": 0.8125, "blocks": [[3, 7, 30, 41], ...]}
+
+Errors carry ``{"ok": false, "error": "...", "status": 503|504|400}`` —
+503 when admission control rejects at queue capacity, 504 when the
+deadline expired before the probe ran.
+
+``/add`` takes ``{"text": ...}`` and returns ``{"ok": true, "doc_id": n}``;
+``/compact`` takes ``{}`` and returns ``{"ok": true, "generation": g}``.
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from ..core.results import QueryOptions
+
+
+class ProtocolError(ValueError):
+    """Malformed request body → HTTP 400."""
+
+
+class QueryRequest:
+    __slots__ = ("text", "theta", "options", "deadline_s", "id")
+
+    def __init__(self, text, theta: float, options: QueryOptions,
+                 deadline_s: float | None, id=None):
+        self.text = text
+        self.theta = theta
+        self.options = options
+        self.deadline_s = deadline_s
+        self.id = id
+
+
+def parse_query_request(body: bytes | str | dict) -> QueryRequest:
+    d = _as_dict(body)
+    if "text" not in d:
+        raise ProtocolError("query request needs a 'text' field")
+    text = d["text"]
+    if not isinstance(text, str):
+        try:
+            text = np.asarray(text, np.int64)
+        except (TypeError, ValueError) as e:
+            raise ProtocolError(
+                f"'text' must be a string or a list of ints: {e}") from None
+        if text.ndim != 1:
+            raise ProtocolError("'text' token array must be 1-D")
+    theta = d.get("theta", 0.5)
+    if not isinstance(theta, (int, float)) or not 0.0 < theta <= 1.0:
+        raise ProtocolError("'theta' must be a number in (0, 1]")
+    try:
+        options = QueryOptions.from_dict(d.get("options"))
+    except ValueError as e:
+        raise ProtocolError(str(e)) from None
+    deadline_ms = d.get("deadline_ms")
+    if deadline_ms is not None and (
+            not isinstance(deadline_ms, (int, float)) or deadline_ms <= 0):
+        raise ProtocolError("'deadline_ms' must be a positive number")
+    return QueryRequest(text=text, theta=float(theta), options=options,
+                        deadline_s=(None if deadline_ms is None
+                                    else float(deadline_ms) / 1e3),
+                        id=d.get("id"))
+
+
+def parse_add_request(body: bytes | str | dict):
+    d = _as_dict(body)
+    if "text" not in d:
+        raise ProtocolError("add request needs a 'text' field")
+    text = d["text"]
+    if isinstance(text, str):
+        return text
+    try:
+        arr = np.asarray(text, np.int64)
+    except (TypeError, ValueError) as e:
+        raise ProtocolError(
+            f"'text' must be a string or a list of ints: {e}") from None
+    if arr.ndim != 1:
+        raise ProtocolError("'text' token array must be 1-D")
+    return arr
+
+
+def ok_response(payload: dict) -> bytes:
+    return json.dumps({"ok": True, **payload}).encode()
+
+
+def error_response(message: str, status: int) -> bytes:
+    return json.dumps({"ok": False, "error": message,
+                       "status": status}).encode()
+
+
+def _as_dict(body) -> dict:
+    if isinstance(body, dict):
+        return body
+    try:
+        d = json.loads(body)
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise ProtocolError(f"request body is not JSON: {e}") from None
+    if not isinstance(d, dict):
+        raise ProtocolError("request body must be a JSON object")
+    return d

@@ -305,12 +305,15 @@ def test_sharded_inverse_doc_map_cached_and_invalidated():
 # --------------------------------------------------------------------------
 
 def test_legacy_entry_points_importable_and_working():
-    # the full pre-split surface must keep importing from repro.core
-    from repro.core import (AlignmentIndex, FrozenTable, MultisetScheme,
+    # the pre-split surface keeps importing from repro.core — except the
+    # AlignmentIndex shim, whose package re-export is now gone (the shim
+    # itself stays importable from its home module one release longer)
+    from repro.core import (FrozenTable, MultisetScheme,
                             ShardedAlignmentIndex, WeightedScheme, WeightFn)
-    from repro.core.index import AlignmentIndex as FromIndexModule
+    from repro.core.index import AlignmentIndex
     from repro.data import default_scheme
-    assert FromIndexModule is AlignmentIndex
+    import repro.core
+    assert not hasattr(repro.core, "AlignmentIndex")
     assert isinstance(default_scheme("weighted", k=4).weight, WeightFn)
     assert isinstance(default_scheme("multiset", k=4), MultisetScheme)
     assert isinstance(make_scheme("weighted", k=4), WeightedScheme)

@@ -5,9 +5,10 @@ frozen persistence round-trips (flat and sharded)."""
 import numpy as np
 import pytest
 
-from repro.core import (AlignmentIndex, FrozenTable, MultisetScheme,
+from repro.core import (FrozenTable, MultisetScheme,
                         ShardedAlignmentIndex, WeightedScheme, WeightFn,
                         batch_query, query)
+from repro.core.index import AlignmentIndex
 
 
 def _corpus(rng, n_docs=6, vocab=30, n=50):

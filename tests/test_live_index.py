@@ -7,8 +7,8 @@ import numpy as np
 import pytest
 
 from repro.api import Aligner
-from repro.core import (IndexBuilder, ShardedAlignmentIndex, batch_query,
-                        make_scheme, query, save_index)
+from repro.core import (IndexBuilder, QueryOptions, ShardedAlignmentIndex,
+                        batch_query, make_scheme, query, save_index)
 from repro.core import store as index_store
 from repro.core.live import LiveIndex
 from repro.core.store import (CURRENT_POINTER, IndexWriter,
@@ -118,7 +118,8 @@ def test_live_probe_backends_agree(tmp_path, probe_backend):
     qs = _queries(rng, base, delta)
     oracle = IndexBuilder(scheme=scheme).build(base + delta)
     assert _batch_blocks(
-        live.batch_query(qs, 0.5, probe_backend=probe_backend)) == \
+        live.batch_query(qs, 0.5,
+                         options=QueryOptions(probe_backend=probe_backend))) == \
         _batch_blocks(batch_query(oracle, qs, 0.5))
 
 

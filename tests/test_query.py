@@ -5,8 +5,8 @@ import math
 import numpy as np
 import pytest
 
-from repro.core import (AlignmentIndex, MultisetScheme, WeightFn,
-                        WeightedScheme, query)
+from repro.core import MultisetScheme, WeightFn, WeightedScheme, query
+from repro.core.index import AlignmentIndex
 
 
 def brute_force_results(scheme, data_texts, q_tokens, theta):

@@ -167,7 +167,8 @@ def test_contamination_checker_finds_leak():
 
 
 def test_sharded_index_matches_flat_index():
-    from repro.core import AlignmentIndex, query
+    from repro.core import query
+    from repro.core.index import AlignmentIndex
     from repro.core.sharded_index import ShardedAlignmentIndex
     scheme = default_scheme("weighted", seed=5, k=16)
     scheme_flat = default_scheme("weighted", seed=5, k=16)
