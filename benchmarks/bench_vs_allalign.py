@@ -5,9 +5,8 @@ paper's ratio plots, vs n and vs f (multi-set Jaccard).
 
 from __future__ import annotations
 
-from repro.core import (MultisetScheme, UniversalHash,
+from repro.core import (IndexBuilder, MultisetScheme, UniversalHash,
                         allalign_multiset, mono_active_multiset, query)
-from repro.core.index import AlignmentIndex
 
 from .common import controlled_f_text, print_table, save_result, timed, \
     zipf_text
@@ -52,7 +51,7 @@ def run(quick: bool = True) -> dict:
     qtext = docs[1][300:420].copy()
     for method in ("mono_active", "allalign"):
         scheme = MultisetScheme(seed=9, k=k)
-        idx = AlignmentIndex(scheme=scheme, method=method).build(docs)
+        idx = IndexBuilder(scheme=scheme, method=method).build(docs)
         res, t = timed(lambda: query(idx, qtext, 0.6), repeat=3)
         rows_q.append({"method": method, "windows": idx.num_windows,
                        "query_s": t, "hits": len(res)})

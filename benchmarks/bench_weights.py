@@ -10,10 +10,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import ICWS, mono_active_icws
+from repro.core import ICWS, IndexBuilder, mono_active_icws
 from repro.core.index import WeightedScheme
 from repro.core.query import query
-from repro.core.index import AlignmentIndex
 from repro.core.weights import WeightFn
 
 from .common import controlled_f_text, print_table, save_result, timed, \
@@ -59,7 +58,7 @@ def run(quick: bool = True) -> dict:
     for tf in TFS:
         scheme = WeightedScheme(weight=WeightFn(tf=tf, idf="unary"),
                                 seed=3, k=k)
-        idx = AlignmentIndex(scheme=scheme).build(docs)
+        idx = IndexBuilder(scheme=scheme).build(docs)
         res, t = timed(lambda: query(idx, qtext, 0.6), repeat=3)
         rows_q.append({"tf": tf, "windows": idx.num_windows,
                        "query_s": t, "hits": len(res)})

@@ -1,0 +1,23 @@
+"""``repro.analysis`` — stdlib-only AST invariant checker for this repo.
+
+Rule families (run ``python -m repro.analysis --list-rules``):
+
+* ``RPR1xx`` engine-affinity race lint (:mod:`.rules_engine`)
+* ``RPR2xx`` store crash-safety ordering (:mod:`.rules_store`)
+* ``RPR3xx`` Pallas kernel purity (:mod:`.rules_kernel`)
+* ``RPR4xx`` deprecated API surfaces (:mod:`.rules_api`)
+
+Importing this package registers every rule module with the framework's
+checker registry; ``run_analysis`` is the one-call entry point.
+"""
+
+from .framework import (CHECKERS, RULE_DOCS, Finding, Project, Report,
+                        checker, load_project, render_json, render_text,
+                        run_analysis)
+from . import (rules_api, rules_engine, rules_kernel,  # noqa: F401  (import registers the checkers)
+               rules_store)
+
+__all__ = [
+    "CHECKERS", "RULE_DOCS", "Finding", "Project", "Report", "checker",
+    "load_project", "render_json", "render_text", "run_analysis",
+]

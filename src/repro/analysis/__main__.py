@@ -1,0 +1,51 @@
+"""CLI: ``python -m repro.analysis [--rules RPR1,RPR403] [--format json]
+[paths...]`` — exits nonzero iff unsuppressed findings remain."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from . import RULE_DOCS, render_json, render_text, run_analysis
+
+DEFAULT_PATHS = ("src", "tests", "benchmarks", "examples")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST invariant checker: engine-thread race lint, "
+                    "store crash-safety ordering, kernel purity, API "
+                    "deprecations.")
+    ap.add_argument("paths", nargs="*",
+                    help="files/directories to check (default: "
+                         f"{', '.join(DEFAULT_PATHS)} where present)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule-id prefixes to keep "
+                         "(e.g. RPR2 or RPR101,RPR403)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print every rule id and summary, then exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule_id, summary in sorted(RULE_DOCS.items()):
+            print(f"{rule_id}  {summary}")
+        return 0
+
+    paths = args.paths or [p for p in DEFAULT_PATHS if Path(p).exists()]
+    if not paths:
+        print("no paths to check", file=sys.stderr)
+        return 2
+    rules = ([r.strip() for r in args.rules.split(",") if r.strip()]
+             if args.rules else None)
+    report = run_analysis(paths, rules=rules)
+    out = render_json(report) if args.format == "json" \
+        else render_text(report)
+    print(out)
+    return 1 if report.findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

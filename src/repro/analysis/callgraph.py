@@ -1,0 +1,183 @@
+"""Intra-repo call-graph builder for the engine-affinity rule.
+
+Python resolution is undecidable statically, so this graph is pragmatic
+and tuned to this repo's idiom.  A call site resolves to project
+function definitions by, in order:
+
+1. ``self.m()`` — the enclosing class's own ``m`` (exact);
+2. receiver name affinity — ``live.seal_delta()`` resolves to
+   ``LiveIndex.seal_delta`` because exactly one class whose lowercase
+   name extends the receiver hint (``live``/``aligner``/``batcher``…)
+   defines ``m``;
+3. bare-name calls — the nested or module-level def of that name in the
+   same file;
+4. name-unique fallback — any project def named ``m``, **except** for
+   generic container/executor method names (``add``, ``get``,
+   ``close``…) that would collide with builtins.
+
+Rules consume :class:`DefInfo` (one per function/method, with decorator
+names, async-ness and nesting) and :meth:`CallGraph.resolve`.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+from .framework import Project, SourceFile, dotted_name, receiver_hint
+
+#: method names too generic to resolve by bare-name uniqueness — they
+#: collide with set/dict/queue/executor builtins all over the tree
+GENERIC_NAMES = frozenset({
+    "add", "append", "extend", "insert", "update", "pop", "remove",
+    "discard", "clear", "get", "put", "put_nowait", "get_nowait",
+    "close", "open", "start", "stop", "run", "cancel", "done", "result",
+    "set_result", "set_exception", "items", "keys", "values", "copy",
+    "join", "split", "write", "read", "send", "submit", "freeze", "load",
+    "save", "build", "query",
+})
+
+
+@dataclass(eq=False)
+class DefInfo:
+    """One function/method definition (identity-hashed, so defs can live
+    in taint sets)."""
+
+    name: str
+    cls: str | None                  # enclosing class, if a method
+    node: ast.AST                    # FunctionDef | AsyncFunctionDef
+    file: SourceFile
+    is_async: bool
+    decorators: frozenset[str]       # trailing dotted names, e.g. engine_only
+    parent: "DefInfo | None" = None  # enclosing def for nested functions
+    dispatched: bool = False         # referenced by name in dispatcher args
+
+    @property
+    def qualname(self) -> str:
+        return f"{self.file.rel}:{self.cls + '.' if self.cls else ''}" \
+               f"{self.name}"
+
+    def has_decorator(self, *names: str) -> bool:
+        return any(d == n or d.endswith("." + n)
+                   for d in self.decorators for n in names)
+
+
+def _decorator_names(node) -> frozenset[str]:
+    out = set()
+    for dec in node.decorator_list:
+        name = dotted_name(dec)
+        if name:
+            out.add(name)
+    return frozenset(out)
+
+
+@dataclass
+class CallGraph:
+    defs: list[DefInfo] = field(default_factory=list)
+    #: method/function name -> every def with that name
+    by_name: dict[str, list[DefInfo]] = field(default_factory=dict)
+    #: class name -> {method name -> DefInfo}
+    by_class: dict[str, dict[str, DefInfo]] = field(default_factory=dict)
+    #: (file rel, parent def id, name) -> nested/module-level def
+    _scoped: dict[tuple, DefInfo] = field(default_factory=dict)
+
+    def _add(self, d: DefInfo) -> None:
+        self.defs.append(d)
+        self.by_name.setdefault(d.name, []).append(d)
+        if d.cls is not None:
+            self.by_class.setdefault(d.cls, {})[d.name] = d
+        self._scoped[(d.file.rel, id(d.parent.node) if d.parent else None,
+                      d.name)] = d
+
+    def scoped_lookup(self, file: SourceFile, enclosing: DefInfo | None,
+                      name: str) -> DefInfo | None:
+        """A bare-name callee: the nested def in ``enclosing`` (walking
+        outward), else the module-level def in the same file."""
+        d: DefInfo | None = enclosing
+        while d is not None:
+            hit = self._scoped.get((file.rel, id(d.node), name))
+            if hit is not None:
+                return hit
+            d = d.parent
+        return self._scoped.get((file.rel, None, name))
+
+    def resolve(self, call: ast.Call, caller: DefInfo) -> DefInfo | None:
+        """The project def a call most plausibly targets (None: external
+        or unresolvable).  See the module docstring for the heuristics."""
+        func = call.func
+        if isinstance(func, ast.Attribute):
+            m = func.attr
+            recv = func.value
+            if isinstance(recv, ast.Name) and recv.id == "self" \
+                    and caller.cls is not None:
+                return self.by_class.get(caller.cls, {}).get(m)
+            hint = receiver_hint(recv)
+            if hint:
+                hl = hint.lower().lstrip("_")
+                owners = [c for c, methods in self.by_class.items()
+                          if m in methods
+                          and (c.lower().startswith(hl)
+                               or hl.startswith(c.lower()))]
+                if len(owners) == 1:
+                    return self.by_class[owners[0]][m]
+            if m in GENERIC_NAMES:
+                return None
+            candidates = self.by_name.get(m, [])
+            return candidates[0] if candidates else None
+        if isinstance(func, ast.Name):
+            return self.scoped_lookup(caller.file, caller, func.id)
+        return None
+
+    def candidates(self, call: ast.Call, caller: DefInfo) -> list[DefInfo]:
+        """Every def the call could target under the same heuristics
+        (used for taint: a call is tainted when ANY candidate is)."""
+        func = call.func
+        if isinstance(func, ast.Attribute):
+            m = func.attr
+            recv = func.value
+            if isinstance(recv, ast.Name) and recv.id == "self" \
+                    and caller.cls is not None:
+                own = self.by_class.get(caller.cls, {}).get(m)
+                return [own] if own is not None else []
+            hint = receiver_hint(recv)
+            if hint:
+                hl = hint.lower().lstrip("_")
+                owners = [c for c, methods in self.by_class.items()
+                          if m in methods
+                          and (c.lower().startswith(hl)
+                               or hl.startswith(c.lower()))]
+                if len(owners) == 1:
+                    return [self.by_class[owners[0]][m]]
+            if m in GENERIC_NAMES:
+                return []
+            return list(self.by_name.get(m, []))
+        if isinstance(func, ast.Name):
+            hit = self.scoped_lookup(caller.file, caller, func.id)
+            return [hit] if hit is not None else []
+        return []
+
+
+def build_callgraph(project: Project) -> CallGraph:
+    graph = CallGraph()
+    for sf in project.files:
+        _collect(graph, sf, sf.tree, cls=None, parent=None)
+    return graph
+
+
+def _collect(graph: CallGraph, sf: SourceFile, node: ast.AST,
+             cls: str | None, parent: DefInfo | None) -> None:
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, ast.ClassDef):
+            _collect(graph, sf, child, cls=child.name, parent=parent)
+        elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            info = DefInfo(
+                name=child.name, cls=cls, node=child, file=sf,
+                is_async=isinstance(child, ast.AsyncFunctionDef),
+                decorators=_decorator_names(child), parent=parent)
+            graph._add(info)
+            # nested defs belong to the function, not the class namespace
+            _collect(graph, sf, child, cls=None, parent=info)
+
+
+def project_callgraph(project: Project) -> CallGraph:
+    return project.shared("callgraph", build_callgraph)

@@ -1,0 +1,252 @@
+"""Core of the ``repro.analysis`` static checker: file loading with a
+per-file AST cache, the rule registry, ``# repro: allow[...]``
+suppressions, and the text/JSON reporters.
+
+The checker is deliberately stdlib-only (``ast`` + ``re``) and import-free
+with respect to the code it analyzes: rules read syntax, never execute the
+tree, so it runs in milliseconds inside CI's ``static-analysis`` job with
+no numpy/jax import cost.
+
+Suppressions are line-scoped: ``# repro: allow[RPR202]`` on the flagged
+line (or alone on the line directly above it) moves that finding from
+``findings`` to ``suppressed``; ``allow[RPR202,RPR403]`` lists several
+rules, ``allow[*]`` allows everything on that line.  Suppressed findings
+still appear in the JSON report so a reviewer can audit every waiver.
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable
+
+_ALLOW_RE = re.compile(r"#\s*repro:\s*allow\[([^\]]+)\]")
+
+#: (path, mtime_ns, size) -> parsed module.  Re-running the analyzer in
+#: one process (the fixture tests do, repeatedly) never re-parses a file
+#: that has not changed on disk.
+_AST_CACHE: dict[tuple[str, int, int], ast.Module] = {}
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    rule: str
+    path: str            # project-root-relative, '/'-separated
+    line: int
+    message: str
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "message": self.message}
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+    def sort_key(self):
+        return (self.path, self.line, self.rule)
+
+
+@dataclass
+class SourceFile:
+    """One parsed file plus its suppression table."""
+
+    path: Path           # absolute
+    rel: str             # root-relative display path
+    text: str
+    tree: ast.Module
+    allow: dict[int, set[str]] = field(default_factory=dict)
+
+    @property
+    def parts(self) -> tuple[str, ...]:
+        return Path(self.rel).parts
+
+    def is_allowed(self, line: int, rule: str) -> bool:
+        """Suppression applies on the flagged line or the line above."""
+        for ln in (line, line - 1):
+            ids = self.allow.get(ln)
+            if ids and ("*" in ids or rule in ids):
+                return True
+        return False
+
+
+@dataclass
+class Project:
+    """The analyzed tree: parsed files plus lazily built shared state
+    (rules stash cross-file structures like the call graph here)."""
+
+    root: Path
+    files: list[SourceFile]
+    skipped: list[Finding] = field(default_factory=list)  # parse errors
+    _shared: dict = field(default_factory=dict)
+
+    def shared(self, key: str, build: Callable[["Project"], object]):
+        if key not in self._shared:
+            self._shared[key] = build(self)
+        return self._shared[key]
+
+
+def _parse_allow(text: str) -> dict[int, set[str]]:
+    allow: dict[int, set[str]] = {}
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        for m in _ALLOW_RE.finditer(line):
+            ids = {s.strip() for s in m.group(1).split(",") if s.strip()}
+            allow.setdefault(lineno, set()).update(ids)
+    return allow
+
+
+def _load_file(path: Path, rel: str) -> SourceFile | Finding:
+    text = path.read_text(encoding="utf-8", errors="replace")
+    st = path.stat()
+    key = (str(path), st.st_mtime_ns, st.st_size)
+    tree = _AST_CACHE.get(key)
+    if tree is None:
+        try:
+            tree = ast.parse(text, filename=str(path))
+        except SyntaxError as e:
+            return Finding(rule="RPR000", path=rel, line=e.lineno or 1,
+                           message=f"file does not parse: {e.msg}")
+        _AST_CACHE[key] = tree
+    return SourceFile(path=path, rel=rel, text=text, tree=tree,
+                      allow=_parse_allow(text))
+
+
+def load_project(paths, *, root=None) -> Project:
+    """Collect and parse every ``.py`` file under ``paths`` (files or
+    directories, resolved against ``root``, default cwd)."""
+    root = Path(root) if root is not None else Path.cwd()
+    seen: set[Path] = set()
+    files: list[SourceFile] = []
+    skipped: list[Finding] = []
+    for p in paths:
+        p = Path(p)
+        if not p.is_absolute():
+            p = root / p
+        candidates = ([p] if p.is_file() else
+                      sorted(p.rglob("*.py")) if p.is_dir() else [])
+        for f in candidates:
+            if f in seen or "__pycache__" in f.parts:
+                continue
+            seen.add(f)
+            try:
+                rel = str(f.relative_to(root)).replace("\\", "/")
+            except ValueError:
+                rel = str(f)
+            loaded = _load_file(f, rel)
+            if isinstance(loaded, Finding):
+                skipped.append(loaded)
+            else:
+                files.append(loaded)
+    return Project(root=root, files=files, skipped=skipped)
+
+
+# --------------------------------------------------------------------------
+# rule registry
+# --------------------------------------------------------------------------
+
+#: rule id -> one-line summary (what the rule protects)
+RULE_DOCS: dict[str, str] = {}
+
+#: registered checkers; each maps Project -> list[Finding]
+CHECKERS: list[Callable[[Project], list[Finding]]] = []
+
+
+def checker(*rules: tuple[str, str]):
+    """Register a checker implementing one or more rule ids."""
+    def deco(fn):
+        for rule_id, summary in rules:
+            RULE_DOCS[rule_id] = summary
+        CHECKERS.append(fn)
+        return fn
+    return deco
+
+
+@dataclass
+class Report:
+    findings: list[Finding]
+    suppressed: list[Finding]
+    checked_files: int
+
+    def to_dict(self) -> dict:
+        return {
+            "checked_files": self.checked_files,
+            "rules": dict(sorted(RULE_DOCS.items())),
+            "findings": [f.to_dict() for f in self.findings],
+            "suppressed": [f.to_dict() for f in self.suppressed],
+        }
+
+
+def run_analysis(paths, *, rules=None, root=None) -> Report:
+    """Run every registered checker over ``paths`` and split the results
+    into unsuppressed findings and allow-listed ones.  ``rules`` filters
+    by rule-id prefix (``["RPR2"]`` keeps the store-ordering family)."""
+    project = load_project(paths, root=root)
+    by_rel = {sf.rel: sf for sf in project.files}
+    findings: list[Finding] = list(project.skipped)
+    suppressed: list[Finding] = []
+    for check in CHECKERS:
+        for f in check(project):
+            if rules and not any(f.rule.startswith(r) for r in rules):
+                continue
+            sf = by_rel.get(f.path)
+            if sf is not None and sf.is_allowed(f.line, f.rule):
+                suppressed.append(f)
+            else:
+                findings.append(f)
+    findings.sort(key=Finding.sort_key)
+    suppressed.sort(key=Finding.sort_key)
+    return Report(findings=findings, suppressed=suppressed,
+                  checked_files=len(project.files))
+
+
+def render_text(report: Report) -> str:
+    lines = [f.render() for f in report.findings]
+    lines.append(f"{len(report.findings)} finding(s), "
+                 f"{len(report.suppressed)} suppressed, "
+                 f"{report.checked_files} file(s) checked")
+    return "\n".join(lines)
+
+
+def render_json(report: Report) -> str:
+    return json.dumps(report.to_dict(), indent=1)
+
+
+# --------------------------------------------------------------------------
+# small AST helpers shared by the rule modules
+# --------------------------------------------------------------------------
+
+def dotted_name(node: ast.AST) -> str | None:
+    """``a.b.c`` for Name/Attribute chains (through Call: the callee's
+    name), else None."""
+    if isinstance(node, ast.Call):
+        return dotted_name(node.func)
+    if isinstance(node, ast.Attribute):
+        base = dotted_name(node.value)
+        return f"{base}.{node.attr}" if base else node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def receiver_hint(node: ast.AST) -> str | None:
+    """The last identifier of a call receiver (``self.aligner`` ->
+    ``aligner``; ``self.shards[k]`` -> ``shards``), used to resolve
+    methods to classes by name affinity."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, (ast.Subscript, ast.Call)):
+        return receiver_hint(node.value if isinstance(node, ast.Subscript)
+                             else node.func)
+    return None
+
+
+def string_constants(node: ast.AST):
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+            yield sub.value

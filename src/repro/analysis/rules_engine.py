@@ -1,0 +1,125 @@
+"""RPR101 — engine-affinity race lint.
+
+Every mutating index API is declared ``@engine_only``
+(:mod:`repro.core.guard`).  Inside :mod:`repro.serve`, the ONLY
+sanctioned way to reach one is to submit it to the
+``DynamicBatcher`` engine (``submit_query``/``submit_control``; the
+off-band ``run_offband``/``loop.run_in_executor`` dispatchers cover the
+immutable-read merge).  This rule taints every project def that can
+reach an engine-only function through the call graph, then flags any
+call in a serve-side, non-engine context that targets a tainted def
+outside a dispatcher's argument list.
+
+Exempt contexts: defs themselves decorated ``@engine_only`` (they run on
+the engine), nested defs referenced by name in a dispatcher call
+(``submit_control(_seal, "seal")``), and call nodes lexically inside
+dispatcher arguments (``submit_control(lambda: idx.promote_sealed(...),
+"promote")``).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .callgraph import DefInfo, project_callgraph
+from .framework import Finding, Project, checker, dotted_name
+
+#: the sanctioned engine/off-band hand-off points
+DISPATCHERS = frozenset({"submit_query", "submit_control", "submit",
+                         "run_offband", "run_in_executor"})
+
+RPR101 = ("RPR101",
+          "engine-only API reached from a non-engine context in "
+          "repro.serve without going through the DynamicBatcher")
+
+
+def _is_dispatcher_call(node: ast.Call) -> bool:
+    name = dotted_name(node.func)
+    return bool(name) and name.rsplit(".", 1)[-1] in DISPATCHERS
+
+
+def _body_calls(d: DefInfo) -> tuple[list[ast.Call], set[str]]:
+    """Call nodes lexically belonging to ``d`` (not to nested defs, not
+    inside dispatcher arguments), plus the names ``d`` passes to
+    dispatchers (its dispatched nested defs)."""
+    calls: list[ast.Call] = []
+    dispatched_names: set[str] = set()
+
+    def walk(node: ast.AST, top: bool) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue                      # nested defs analyzed solo
+            if isinstance(child, ast.Call) and _is_dispatcher_call(child):
+                calls.append(child)           # the dispatcher call itself
+                for arg in list(child.args) + \
+                        [kw.value for kw in child.keywords]:
+                    if isinstance(arg, ast.Name):
+                        dispatched_names.add(arg.id)
+                walk(child.func, False)       # receiver may contain calls
+                continue                      # argument subtree is exempt
+            if isinstance(child, ast.Call):
+                calls.append(child)
+            walk(child, False)
+
+    walk(d.node, True)
+    return calls, dispatched_names
+
+
+@checker(RPR101)
+def check_engine_affinity(project: Project) -> list[Finding]:
+    graph = project_callgraph(project)
+    body: dict[DefInfo, list[ast.Call]] = {}
+    for d in graph.defs:
+        calls, dispatched = _body_calls(d)
+        body[d] = calls
+        for name in dispatched:
+            nested = graph.scoped_lookup(d.file, d, name)
+            if nested is not None and nested.parent is d:
+                nested.dispatched = True
+
+    # taint fixpoint from the @engine_only seeds
+    tainted = {d for d in graph.defs if d.has_decorator("engine_only")}
+    changed = True
+    while changed:
+        changed = False
+        for d in graph.defs:
+            if d in tainted:
+                continue
+            for call in body[d]:
+                if any(c in tainted for c in graph.candidates(call, d)):
+                    tainted.add(d)
+                    changed = True
+                    break
+
+    findings: list[Finding] = []
+    for d in graph.defs:
+        if "serve" not in d.file.parts:
+            continue
+        if _engine_context(d):
+            continue
+        for call in body[d]:
+            hits = [c for c in graph.candidates(call, d) if c in tainted]
+            if not hits:
+                continue
+            target = hits[0]
+            root = target if target.has_decorator("engine_only") else None
+            what = (f"engine-only {target.qualname}" if root
+                    else f"{target.qualname}, which reaches an "
+                         "engine-only API")
+            findings.append(Finding(
+                rule="RPR101", path=d.file.rel, line=call.lineno,
+                message=f"{d.qualname} calls {what} outside the engine "
+                        "thread; submit it via DynamicBatcher."
+                        "submit_control/submit_query"))
+    return findings
+
+
+def _engine_context(d: DefInfo) -> bool:
+    """True when ``d``'s body runs on the engine thread (or is handed to
+    a dispatcher wholesale) — its calls need no further routing."""
+    cur: DefInfo | None = d
+    while cur is not None:
+        if cur.has_decorator("engine_only") or cur.dispatched:
+            return True
+        cur = cur.parent
+    return False

@@ -1,0 +1,150 @@
+"""RPR301/RPR302/RPR303 — Pallas kernel purity.
+
+A Pallas kernel body executes as a trace over device references; host
+NumPy, host syncs and Python control flow on traced values either crash
+at trace time or silently bake one traced value into the compiled
+kernel.  These rules fence the ``kernels/`` tree:
+
+* **RPR301** — ``np.``/``numpy.`` attribute use inside a kernel body
+  (use ``jnp``/``lax``/``pl`` primitives; host NumPy belongs in the
+  wrapper that builds inputs).
+* **RPR302** — host-sync calls inside a kernel body: ``.item()``,
+  ``.tolist()``, ``.block_until_ready()``, ``device_get`` — these force
+  a device round-trip that cannot exist at trace time.
+* **RPR303** — Python ``if``/``while`` whose test reads a traced value
+  (a ref parameter or something derived from one).  Use ``pl.when``,
+  ``jnp.where`` or ``lax.cond``; Python branching on a tracer raises
+  ``TracerBoolConversionError``.
+
+Kernel bodies are found two ways: defs named ``*_kernel``, and any def
+passed as the first argument of ``pl.pallas_call`` (directly or through
+``functools.partial``).  Keyword-only parameters are treated as static
+(this repo binds block shapes via ``partial``); positional parameters
+are the traced refs.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .framework import Finding, Project, checker, dotted_name
+
+RPR301 = ("RPR301",
+          "host NumPy call inside a Pallas kernel body (use jnp/lax/pl)")
+RPR302 = ("RPR302",
+          "host sync (.item/.tolist/block_until_ready/device_get) inside "
+          "a Pallas kernel body")
+RPR303 = ("RPR303",
+          "Python if/while on a traced value inside a Pallas kernel body "
+          "(use pl.when / jnp.where / lax.cond)")
+
+_SYNC_METHODS = frozenset({"item", "tolist", "block_until_ready"})
+
+#: calls whose results stay traced when fed traced operands
+_TRACED_PRODUCERS = ("program_id", "load", "dot", "where", "sum", "max",
+                     "min", "dot_general")
+
+
+def _kernel_arg_names(tree: ast.Module) -> set[str]:
+    """Names passed as the kernel argument of ``pl.pallas_call`` —
+    directly or wrapped in ``functools.partial(name, ...)``."""
+    names: set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = dotted_name(node.func) or ""
+        if callee.rsplit(".", 1)[-1] != "pallas_call" or not node.args:
+            continue
+        first = node.args[0]
+        if isinstance(first, ast.Call):
+            inner = dotted_name(first.func) or ""
+            if inner.rsplit(".", 1)[-1] == "partial" and first.args:
+                first = first.args[0]
+        if isinstance(first, ast.Name):
+            names.add(first.id)
+    return names
+
+
+def _traced_names(fn) -> set[str]:
+    """Positional params (the refs) plus names assigned from expressions
+    that read a traced name — a one-pass forward propagation, enough for
+    straight-line kernel bodies."""
+    traced = {a.arg for a in fn.args.args + fn.args.posonlyargs}
+    changed = True
+    while changed:
+        changed = False
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                value = node.value
+                if value is None or not _reads_traced(value, traced):
+                    continue
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    for leaf in ast.walk(t):
+                        if isinstance(leaf, ast.Name) \
+                                and leaf.id not in traced:
+                            traced.add(leaf.id)
+                            changed = True
+    return traced
+
+
+def _reads_traced(expr: ast.AST, traced: set[str]) -> bool:
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Name) and node.id in traced:
+            return True
+        if isinstance(node, ast.Call):
+            callee = dotted_name(node.func) or ""
+            if callee.rsplit(".", 1)[-1] in _TRACED_PRODUCERS:
+                return True
+    return False
+
+
+@checker(RPR301, RPR302, RPR303)
+def check_kernel_purity(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    for sf in project.files:
+        if "kernels" not in sf.parts:
+            continue
+        called = _kernel_arg_names(sf.tree)
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                continue
+            if not (node.name.endswith("_kernel") or node.name in called):
+                continue
+            findings.extend(_check_kernel(sf, node))
+    return findings
+
+
+def _check_kernel(sf, fn) -> list[Finding]:
+    findings: list[Finding] = []
+    traced = _traced_names(fn)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Attribute):
+            base = dotted_name(node.value)
+            if base in ("np", "numpy"):
+                findings.append(Finding(
+                    rule="RPR301", path=sf.rel, line=node.lineno,
+                    message=f"{fn.name} uses host NumPy ({base}."
+                            f"{node.attr}) inside a kernel body; use "
+                            "jnp/lax/pl primitives"))
+        if isinstance(node, ast.Call):
+            callee = dotted_name(node.func) or ""
+            leaf = callee.rsplit(".", 1)[-1]
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _SYNC_METHODS) \
+                    or leaf == "device_get":
+                findings.append(Finding(
+                    rule="RPR302", path=sf.rel, line=node.lineno,
+                    message=f"{fn.name} forces a host sync "
+                            f"({leaf}) inside a kernel body"))
+        if isinstance(node, (ast.If, ast.While)) \
+                and _reads_traced(node.test, traced):
+            kind = "if" if isinstance(node, ast.If) else "while"
+            findings.append(Finding(
+                rule="RPR303", path=sf.rel, line=node.lineno,
+                message=f"{fn.name} branches with Python `{kind}` on a "
+                        "traced value; use pl.when / jnp.where / "
+                        "lax.cond"))
+    return findings

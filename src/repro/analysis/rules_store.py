@@ -1,0 +1,144 @@
+"""RPR201/RPR202 — store crash-safety ordering.
+
+The on-disk store's crash-safety contract (:mod:`repro.core.store`) is
+strictly ordered: array payloads land first, then the generation's
+``manifest.json`` commits them (tmp + atomic rename), then the
+``CURRENT`` pointer promotes the generation (tmp + atomic rename).  A
+reader that follows ``CURRENT`` therefore never observes a manifest
+naming missing arrays, and a crash at any point leaves the previous
+generation intact.
+
+* **RPR201** — within one function, a *commit event* (``finalize()``,
+  ``promote_generation()``, or an evidence-bearing durable write/rename)
+  appears on a line before an *array event* (``add_table``/``add_arena``/
+  ``np.save*``).  Committing before the payload exists publishes a
+  manifest that can name missing files after a crash.
+
+* **RPR202** — outside ``src/repro/core/store.py``, a direct
+  non-tmp write to a manifest/pointer path (``write_text``/
+  ``write_bytes``/``open(..., "w")`` whose expression mentions
+  ``manifest.json``, ``CURRENT`` or ``CURRENT_POINTER`` without a
+  ``.tmp`` staging name).  Pointer files must only be produced by the
+  store's tmp + rename helpers; an in-place write can be observed
+  half-written.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .framework import (Finding, Project, checker, dotted_name,
+                        string_constants)
+
+RPR201 = ("RPR201",
+          "manifest/pointer committed before the array payload it names "
+          "(crash window: manifest references missing files)")
+RPR202 = ("RPR202",
+          "direct non-atomic write to a manifest/CURRENT path outside "
+          "core/store.py (must go through tmp + rename)")
+
+STORE_FILE = "src/repro/core/store.py"
+
+_ARRAY_METHODS = frozenset({"add_table", "add_arena"})
+_NP_SAVE = frozenset({"save", "savez", "savez_compressed"})
+_WRITE_METHODS = frozenset({"write_text", "write_bytes"})
+
+
+def _has_evidence(call: ast.Call) -> bool:
+    """Does the call expression mention a manifest/pointer path?"""
+    for s in string_constants(call):
+        if "manifest.json" in s or s == "CURRENT":
+            return True
+    for sub in ast.walk(call):
+        if isinstance(sub, ast.Name) and sub.id == "CURRENT_POINTER":
+            return True
+        if isinstance(sub, ast.Attribute) and sub.attr == "CURRENT_POINTER":
+            return True
+    return False
+
+
+def _is_tmp_staged(call: ast.Call) -> bool:
+    return any(".tmp" in s for s in string_constants(call))
+
+
+def _durable_write(call: ast.Call) -> bool:
+    """write_text/write_bytes, or open(..., mode containing 'w')."""
+    name = dotted_name(call.func)
+    if not name:
+        return False
+    leaf = name.rsplit(".", 1)[-1]
+    if leaf in _WRITE_METHODS:
+        return True
+    if leaf == "open":
+        for arg in list(call.args[1:]) + [kw.value for kw in call.keywords
+                                          if kw.arg == "mode"]:
+            if isinstance(arg, ast.Constant) and isinstance(arg.value, str) \
+                    and "w" in arg.value:
+                return True
+    return False
+
+
+def _classify(call: ast.Call) -> str | None:
+    """'array', 'commit', or None."""
+    name = dotted_name(call.func)
+    leaf = name.rsplit(".", 1)[-1] if name else ""
+    if leaf in _ARRAY_METHODS:
+        return "array"
+    if name and leaf in _NP_SAVE and \
+            name.rsplit(".", 1)[0].rsplit(".", 1)[-1] in ("np", "numpy"):
+        return "array"
+    if leaf in ("finalize", "promote_generation"):
+        return "commit"
+    if (_durable_write(call) or leaf in ("rename", "replace")) \
+            and _has_evidence(call) and not _is_tmp_staged(call):
+        return "commit"
+    return None
+
+
+@checker(RPR201, RPR202)
+def check_store_ordering(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    for sf in project.files:
+        for node in ast.walk(sf.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                findings.extend(_check_function(sf, node))
+        if sf.rel != STORE_FILE:
+            for node in ast.walk(sf.tree):
+                if isinstance(node, ast.Call) and _durable_write(node) \
+                        and _has_evidence(node) and not _is_tmp_staged(node):
+                    findings.append(Finding(
+                        rule="RPR202", path=sf.rel, line=node.lineno,
+                        message="direct write to a manifest/CURRENT path; "
+                                "stage to .tmp and rename (or use the "
+                                "store helpers) so readers never see a "
+                                "torn pointer"))
+    return findings
+
+
+def _check_function(sf, fn) -> list[Finding]:
+    """Flag commit events that precede an array event inside ``fn``
+    (lexical line order stands in for program order — the store API is
+    written straight-line)."""
+    events: list[tuple[int, str]] = []
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node is not fn:
+            continue
+        if isinstance(node, ast.Call):
+            kind = _classify(node)
+            if kind:
+                events.append((node.lineno, kind))
+    if not events:
+        return []
+    last_array = max((ln for ln, kind in events if kind == "array"),
+                     default=None)
+    if last_array is None:
+        return []
+    return [
+        Finding(rule="RPR201", path=sf.rel, line=ln,
+                message=f"{fn.name} commits the manifest/pointer at line "
+                        f"{ln} before the array payload written at line "
+                        f"{last_array}; write arrays first, then "
+                        "finalize, then promote")
+        for ln, kind in events if kind == "commit" and ln < last_array
+    ]

@@ -227,6 +227,7 @@ class Aligner:
 
         ``legacy_tuples=True`` returns the pre-typed ``list[Alignment]``
         shape behind a ``DeprecationWarning``."""
+        # repro: allow[RPR402] (the shim forwards its own legacy flag)
         return self.find_batch([text], theta, options=options,
                                legacy_tuples=legacy_tuples,
                                stage_times=stage_times)[0]

@@ -28,6 +28,7 @@ import numpy as np
 
 from .allalign import allalign_partition
 from .frozen import FrozenTable, dict_tables_nbytes
+from .guard import engine_only
 from .keys import occurrence_lists
 from .partition import monotonic_partition
 
@@ -58,6 +59,7 @@ class IndexBuilder:
     def is_frozen(self) -> bool:
         return False
 
+    @engine_only
     def add_text(self, tokens) -> int:
         """Partition one text under all k hash functions and index it."""
         tid = self.num_texts

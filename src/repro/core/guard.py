@@ -1,0 +1,111 @@
+"""Engine-thread affinity guard for the serving concurrency model.
+
+The serving stack's correctness rests on ONE invariant: every operation
+that touches a served index's mutable state — delta adds, the seal and
+promote phases of compaction — runs on the single
+``DynamicBatcher`` engine thread (a ``ThreadPoolExecutor(max_workers=1,
+thread_name_prefix="align-engine")``).  That invariant used to live only
+in docstrings; this module makes it machine-checkable twice over:
+
+* **statically** — ``@engine_only`` marks the mutating APIs, and
+  ``python -m repro.analysis`` (rule RPR101) flags any call path in
+  :mod:`repro.serve` that reaches a marked function without going
+  through ``DynamicBatcher.submit_query``/``submit_control``;
+* **at runtime** — with ``REPRO_THREAD_GUARD=1`` in the environment, a
+  marked method raises :class:`EngineAffinityError` when called on an
+  *engine-owned* object from any thread other than the engine.
+
+Ownership keeps the guard precise: ``DynamicBatcher`` calls
+:func:`adopt` on the index it serves (and :func:`disown` on close), so
+build scripts, benchmarks and tests that mutate indexes no server owns
+keep working unguarded even with the env var set.
+
+The env var is read ONCE, at import time.  Guard off (the default) means
+``engine_only`` hands back the original function — the decorated call
+path carries zero overhead, not even an ``if``.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+import threading
+
+#: Thread-name prefix of the batcher's single-worker engine executor.
+ENGINE_THREAD_PREFIX = "align-engine"
+
+#: Read once at import: runtime enforcement is opt-in per process.
+GUARD_ENABLED = os.environ.get("REPRO_THREAD_GUARD", "") == "1"
+
+
+class EngineAffinityError(RuntimeError):
+    """An engine-only method ran off the engine thread while its object
+    was owned by a serving ``DynamicBatcher``."""
+
+
+def on_engine_thread() -> bool:
+    """True when the current thread is a batcher engine worker."""
+    return threading.current_thread().name.startswith(ENGINE_THREAD_PREFIX)
+
+
+def adopt(*objs) -> None:
+    """Mark objects engine-owned: their ``@engine_only`` methods must now
+    run on the engine thread (no-op unless the guard is enabled)."""
+    for o in objs:
+        if o is None:
+            continue
+        try:
+            o._engine_owned = True
+        except (AttributeError, TypeError):
+            pass                      # slots/frozen objects stay unguarded
+
+
+def disown(*objs) -> None:
+    """Release engine ownership (the batcher shut its engine down)."""
+    for o in objs:
+        if o is None:
+            continue
+        try:
+            o._engine_owned = False
+        except (AttributeError, TypeError):
+            pass
+
+
+def engine_only(fn=None, *, reads_immutable: bool = False):
+    """Declare a method part of the engine-only mutating API.
+
+    Always attaches the static markers ``__engine_only__`` (and
+    ``__engine_reads_immutable__``) that ``repro.analysis`` keys on.
+    With ``REPRO_THREAD_GUARD=1`` it additionally wraps the method to
+    raise :class:`EngineAffinityError` when the receiver is engine-owned
+    (see :func:`adopt`) and the caller is not the engine thread.
+
+    ``reads_immutable=True`` is for the one sanctioned exception — the
+    compaction *merge*, which deliberately runs off-band and reads only
+    immutable state (frozen arrays + the sealed delta).  It gets the
+    static marker but never the runtime check.
+    """
+    def mark(f):
+        f.__engine_only__ = True
+        f.__engine_reads_immutable__ = reads_immutable
+        return f
+
+    def wrap(f):
+        if not GUARD_ENABLED or reads_immutable:
+            return mark(f)            # guard off: the original function
+
+        @functools.wraps(f)
+        def guarded(self, *args, **kwargs):
+            if getattr(self, "_engine_owned", False) \
+                    and not on_engine_thread():
+                raise EngineAffinityError(
+                    f"{type(self).__name__}.{f.__name__} is engine-only: "
+                    f"this object is served by a DynamicBatcher engine, "
+                    f"but the call came from thread "
+                    f"{threading.current_thread().name!r}; route it "
+                    "through DynamicBatcher.submit_control/submit_query")
+            return f(self, *args, **kwargs)
+
+        return mark(guarded)
+
+    return wrap if fn is None else wrap(fn)

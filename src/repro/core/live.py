@@ -48,6 +48,7 @@ import numpy as np
 
 from . import store as index_store
 from .builder import IndexBuilder
+from .guard import engine_only
 from .query import (Alignment, _sweep_gathered, batch_probe as _batch_probe,
                     query as _query)
 from .results import UNSET, QueryOptions, coerce_query_options
@@ -153,6 +154,7 @@ class LiveIndex:
 
     # -- writes -------------------------------------------------------------
 
+    @engine_only
     def add_text(self, tokens, *, gid: int | None = None) -> int:
         """Index one more document into the delta; returns its LOCAL text
         id (frozen ids come first, delta ids after — stable across
@@ -287,6 +289,7 @@ class LiveIndex:
     # texts keep their offsets inside the new frozen), so queries started
     # before, during, or after any phase see identical results.
 
+    @engine_only
     def seal_delta(self) -> int:
         """Phase 1: freeze the active delta as the ``sealed`` level and
         start a fresh one; returns the number of texts sealed.  Must not
@@ -305,6 +308,7 @@ class LiveIndex:
                                               self.sealed.num_texts])
         return self.sealed.num_texts
 
+    @engine_only(reads_immutable=True)
     def merge_sealed(self) -> tuple[int, SearchIndex]:
         """Phase 2: fold frozen + sealed into a NEW committed (manifest on
         disk, ``CURRENT`` untouched) store generation.  Reads only
@@ -325,6 +329,7 @@ class LiveIndex:
             doc_map=self._sealed_docs)
         return gen, new_idx
 
+    @engine_only
     def promote_sealed(self, gen: int, new_idx: SearchIndex) -> int:
         """Phase 3: flip the store's ``CURRENT`` pointer to ``gen`` and
         swap serving onto its index, retiring the sealed level.  Atomic
@@ -340,6 +345,7 @@ class LiveIndex:
         self.generation = gen
         return gen
 
+    @engine_only
     def compact(self, *, promote: bool = True) -> int:
         """Fold the delta into a NEW store generation and promote it.
 

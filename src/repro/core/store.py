@@ -29,7 +29,10 @@ pages per key and the plane sweep reads only the collided rows.
 
 Writes are crash-safe by ordering: the arrays are written first and the
 manifest last, so a directory without a readable manifest is an aborted
-write, never a torn index.  ``FORMAT_VERSION`` is checked on load and
+write, never a torn index.  ``python -m repro.analysis`` enforces this
+ordering statically — RPR201 flags any function that commits a
+manifest/pointer before its array payload, RPR202 flags manifest/CURRENT
+writes outside this module that skip the tmp + rename staging below.  ``FORMAT_VERSION`` is checked on load and
 unknown versions are rejected with ``ValueError`` (forward compatibility
 is an explicit migration, not a silent misread).
 
@@ -150,7 +153,8 @@ def promote_generation(root, gen: int) -> None:
     Refuses to point at a version without a committed manifest (an aborted
     compaction must never become the serving generation).  The pointer is
     written tmp + rename, so readers always see either the old or the new
-    generation, never a torn pointer.
+    generation, never a torn pointer.  This helper (and ``IndexWriter``)
+    is the only sanctioned CURRENT writer — RPR202 lints any other.
     """
     root = Path(root)
     if gen < 1:
@@ -226,6 +230,7 @@ class IndexWriter:
             "tables": self._tables,
             "arena": self._arena,
         }
+        # last write in the RPR201 ordering: arrays, then this commit
         tmp = self.root / "manifest.json.tmp"
         tmp.write_text(json.dumps(manifest))
         tmp.rename(self.root / "manifest.json")  # atomic commit marker

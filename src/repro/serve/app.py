@@ -138,6 +138,9 @@ class AlignServer:
         except (ProtocolError, ValueError) as e:
             return 400, error_response(str(e), 400)
         try:
+            # add mutates the delta, so it is @engine_only: calling
+            # aligner.add() here directly would race the batch in flight
+            # (RPR101 flags it); submit_control serializes it FIFO
             doc_id = await self.batcher.submit_control(
                 lambda: self.aligner.add(tokens), "add")
         except RuntimeError as e:       # frozen (non-live) index
@@ -155,7 +158,12 @@ class AlignServer:
     async def compact(self) -> int:
         """Fold the live delta into a new promoted store generation
         WITHOUT pausing traffic (seal on engine → merge off-band →
-        promote on engine); returns the serving generation."""
+        promote on engine); returns the serving generation.
+
+        Every index touch below rides a dispatcher: ``seal_delta`` and
+        ``promote_sealed`` are ``@engine_only`` (RPR101) and go through
+        ``submit_control``; ``merge_sealed`` reads only immutable state
+        and runs via ``run_offband`` so serving never pauses."""
         idx = self.aligner._index
         if isinstance(idx, ShardedAlignmentIndex):
             # per-shard deltas: run the whole fold as one engine op (it

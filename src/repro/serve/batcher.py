@@ -38,6 +38,8 @@ from __future__ import annotations
 import asyncio
 from concurrent.futures import ThreadPoolExecutor
 
+from ..core import guard
+from ..core.guard import engine_only
 from ..core.results import QueryOptions
 from .metrics import ServeMetrics
 
@@ -91,10 +93,16 @@ class DynamicBatcher:
         self._queue: asyncio.Queue = asyncio.Queue()
         self._stash = None              # item popped but not yet batchable
         self._inflight = 0
-        self._engine = ThreadPoolExecutor(max_workers=1,
-                                          thread_name_prefix="align-engine")
+        self._engine = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix=guard.ENGINE_THREAD_PREFIX)
         self._task: asyncio.Task | None = None
         self._closed = False
+        # engine-affinity guard (REPRO_THREAD_GUARD=1): while this engine
+        # serves them, the index, its shards, and the batcher itself only
+        # accept @engine_only calls from the engine thread
+        idx = getattr(aligner, "_index", None)
+        self._owned = (self, idx, *getattr(idx, "shards", ()))
+        guard.adopt(*self._owned)
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -119,6 +127,7 @@ class DynamicBatcher:
         if self._stash is not None and not self._stash.future.done():
             self._stash.future.cancel()
         self._engine.shutdown(wait=True)
+        guard.disown(*self._owned)
 
     # -- submission ----------------------------------------------------------
 
@@ -249,6 +258,7 @@ class DynamicBatcher:
             if not q.future.done():
                 q.future.set_result(res)
 
+    @engine_only
     def _probe(self, live: list, stage: dict):
         """Engine-thread body: ONE ``find_batch`` over the coalesced
         queries (all share theta and an options batch key)."""

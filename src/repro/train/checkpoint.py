@@ -85,7 +85,11 @@ def save_checkpoint(root: str | Path, step: int, tree, *,
     def _write():
         dest.mkdir(parents=True, exist_ok=True)
         np.savez(dest / "shard_0.npz", **shards)
-        (dest / "manifest.json").write_text(json.dumps(manifest))
+        # manifest lands via tmp + rename so a crash mid-write can never
+        # leave a torn manifest next to a COMMITTED marker
+        tmp = dest / "manifest.json.tmp"
+        tmp.write_text(json.dumps(manifest))
+        tmp.replace(dest / "manifest.json")
         (dest / "COMMITTED").write_text("ok")          # atomic marker
         _gc(root, keep)
 

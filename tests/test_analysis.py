@@ -1,0 +1,276 @@
+"""The ``repro.analysis`` invariant checker: each rule family catches a
+seeded-bad fixture, dispatcher/exempt paths stay clean, suppressions
+move findings aside (but keep them auditable), and the real tree is
+finding-free.
+
+Fixtures are written to ``tmp_path`` so the full-tree run never sees
+them."""
+
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis import run_analysis
+from repro.analysis.framework import render_json
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _write(tmp_path: Path, rel: str, src: str) -> Path:
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(src)
+    return p
+
+
+def _rules(report):
+    return sorted({f.rule for f in report.findings})
+
+
+# -- RPR1xx: engine affinity ------------------------------------------------
+
+
+ENGINE_FIXTURE = '''
+from repro.core.guard import engine_only
+
+class LiveIndex:
+    @engine_only
+    def add_text(self, tokens):
+        pass
+
+    @engine_only
+    def promote_sealed(self, gen, idx):
+        pass
+
+class Handlers:
+    async def handle_add_bad(self, tokens):
+        return self.live.add_text(tokens)            # line 16: flagged
+
+    async def handle_add_ok(self, tokens):
+        return await self.batcher.submit_control(
+            lambda: self.live.add_text(tokens), "add")
+
+    async def compact_ok(self):
+        def _seal():
+            self.live.promote_sealed(1, None)        # dispatched: exempt
+        await self.batcher.submit_control(_seal, "seal")
+
+    def helper(self, tokens):
+        self.live.add_text(tokens)                   # taints helper
+
+    async def handle_indirect_bad(self, tokens):
+        self.helper(tokens)                          # flagged via taint
+'''
+
+
+def test_engine_rule_flags_direct_and_indirect_calls(tmp_path):
+    _write(tmp_path, "serve/handlers.py", ENGINE_FIXTURE)
+    report = run_analysis(["serve"], rules=["RPR1"], root=tmp_path)
+    assert _rules(report) == ["RPR101"]
+    lines = sorted(f.line for f in report.findings)
+    by_line = {f.line: f.message for f in report.findings}
+    # the direct call in handle_add_bad
+    assert any("handle_add_bad" in m and "add_text" in m
+               for m in by_line.values())
+    # the indirect call through the tainted helper
+    assert any("handle_indirect_bad" in m and "helper" in m
+               for m in by_line.values())
+    # the helper's own direct call is a finding in its own right
+    assert any(m.startswith("serve/handlers.py:Handlers.helper")
+               for m in by_line.values())
+    # nothing flagged inside the dispatcher-routed paths
+    assert all("handle_add_ok" not in m and "compact_ok" not in m
+               and "_seal" not in m for m in by_line.values())
+    assert len(lines) == 3
+
+
+def test_engine_rule_only_fires_in_serve_paths(tmp_path):
+    # identical code outside a serve/ path: build scripts may mutate
+    _write(tmp_path, "tools/handlers.py", ENGINE_FIXTURE)
+    report = run_analysis(["tools"], rules=["RPR1"], root=tmp_path)
+    assert report.findings == []
+
+
+# -- RPR2xx: store ordering -------------------------------------------------
+
+
+STORE_FIXTURE = '''
+import numpy as np
+
+def bad_commit_order(writer, root, arrays):
+    writer.finalize(num_texts=1, num_windows=1, text_lengths=[1])
+    for i, a in enumerate(arrays):
+        np.save(root / f"t_{i}.npy", a)
+
+def good_commit_order(writer, root, arrays):
+    for i, a in enumerate(arrays):
+        np.save(root / f"t_{i}.npy", a)
+    writer.finalize(num_texts=1, num_windows=1, text_lengths=[1])
+
+def bad_pointer_write(root):
+    (root / "CURRENT").write_text("v000001")
+
+def good_pointer_write(root):
+    tmp = root / "CURRENT.tmp"
+    tmp.write_text("v000001")
+    tmp.rename(root / "CURRENT")
+'''
+
+
+def test_store_rules_flag_bad_order_and_raw_pointer_writes(tmp_path):
+    _write(tmp_path, "pkg/writer.py", STORE_FIXTURE)
+    report = run_analysis(["pkg"], rules=["RPR2"], root=tmp_path)
+    msgs = {f.rule: [] for f in report.findings}
+    for f in report.findings:
+        msgs[f.rule].append(f.message)
+    assert sorted(msgs) == ["RPR201", "RPR202"]
+    assert any("bad_commit_order" in m for m in msgs["RPR201"])
+    assert all("good_commit_order" not in m for m in msgs["RPR201"])
+    # the raw write is flagged; the tmp+rename one is not
+    lines202 = [f.line for f in report.findings if f.rule == "RPR202"]
+    assert len(lines202) == 1
+
+
+def test_store_module_itself_is_exempt_from_rpr202(tmp_path):
+    _write(tmp_path, "src/repro/core/store.py",
+           '(root / "CURRENT").write_text("v1")\n')
+    report = run_analysis(["src"], rules=["RPR202"], root=tmp_path)
+    assert report.findings == []
+
+
+# -- RPR3xx: kernel purity --------------------------------------------------
+
+
+KERNEL_FIXTURE = '''
+import numpy as np
+from functools import partial
+import jax.experimental.pallas as pl
+
+def _sum_kernel(x_ref, o_ref, *, block):
+    total = np.sum(x_ref[...])                       # RPR301
+    if total > 0:                                    # RPR303 (traced)
+        o_ref[...] = total
+    host = total.item()                              # RPR302
+
+def clean_body(x_ref, o_ref, *, block):
+    i = pl.program_id(0)
+    o_ref[...] = x_ref[...] * 2
+
+def run(x):
+    return pl.pallas_call(partial(clean_body, block=8))(x)
+
+def host_helper(arr):
+    if arr.size > 0:                                 # not a kernel: fine
+        return np.sum(arr)
+'''
+
+
+def test_kernel_rules_flag_numpy_sync_and_traced_branch(tmp_path):
+    _write(tmp_path, "kernels/bad.py", KERNEL_FIXTURE)
+    report = run_analysis(["kernels"], root=tmp_path)
+    assert _rules(report) == ["RPR301", "RPR302", "RPR303"]
+    assert all("_sum_kernel" in f.message for f in report.findings)
+
+
+def test_kernel_rules_scope_to_kernels_dirs(tmp_path):
+    _write(tmp_path, "models/bad.py", KERNEL_FIXTURE)
+    report = run_analysis(["models"], rules=["RPR3"], root=tmp_path)
+    assert report.findings == []
+
+
+# -- RPR4xx: API deprecations -----------------------------------------------
+
+
+API_FIXTURE = '''
+from repro.core.index import AlignmentIndex          # RPR403
+
+def old_style(aligner, qs):
+    res = aligner.find_batch(qs, 0.5, probe_backend="percoord")  # RPR401
+    raw = aligner.find(qs[0], 0.5, legacy_tuples=True)           # RPR402
+    idx = AlignmentIndex(scheme=None)                # RPR403
+    return res, raw, idx
+
+def new_style(aligner, qs, opts):
+    return aligner.find_batch(qs, 0.5, options=opts)
+
+def core_function_ok(index, qs):
+    from repro.core import batch_query
+    return batch_query(index, qs, 0.5, sketch_backend="exact")
+'''
+
+
+def test_api_rules_flag_each_deprecated_surface(tmp_path):
+    _write(tmp_path, "pkg/old.py", API_FIXTURE)
+    report = run_analysis(["pkg"], root=tmp_path)
+    assert _rules(report) == ["RPR401", "RPR402", "RPR403"]
+    assert sum(f.rule == "RPR403" for f in report.findings) == 2
+    assert all("new_style" not in f.message for f in report.findings)
+
+
+# -- suppressions, parse errors, CLI ----------------------------------------
+
+
+def test_allow_comment_suppresses_but_stays_auditable(tmp_path):
+    _write(tmp_path, "pkg/waived.py", '''
+def bad(root):
+    (root / "CURRENT").write_text("v1")  # repro: allow[RPR202]
+
+def bad_above(root):
+    # repro: allow[RPR202]
+    (root / "CURRENT").write_text("v2")
+
+def bad_unwaived(root):
+    (root / "CURRENT").write_text("v3")
+
+def bad_wrong_rule(root):
+    (root / "CURRENT").write_text("v4")  # repro: allow[RPR999]
+
+def bad_wildcard(root):
+    (root / "CURRENT").write_text("v5")  # repro: allow[*]
+''')
+    report = run_analysis(["pkg"], rules=["RPR202"], root=tmp_path)
+    assert len(report.findings) == 2          # unwaived + wrong-rule
+    assert len(report.suppressed) == 3        # same-line, above, wildcard
+    # suppressed findings stay in the JSON artifact for audit
+    payload = json.loads(render_json(report))
+    assert len(payload["suppressed"]) == 3
+    assert payload["checked_files"] == 1
+
+
+def test_syntax_errors_surface_as_findings(tmp_path):
+    _write(tmp_path, "pkg/broken.py", "def f(:\n")
+    report = run_analysis(["pkg"], root=tmp_path)
+    assert [f.rule for f in report.findings] == ["RPR000"]
+
+
+def test_cli_exit_codes_and_json(tmp_path):
+    _write(tmp_path, "pkg/bad.py",
+           '(root / "CURRENT").write_text("v1")\n')
+    env = {"PYTHONPATH": str(REPO / "src")}
+    bad = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--format", "json", "pkg"],
+        cwd=tmp_path, env=env, capture_output=True, text=True, timeout=120)
+    assert bad.returncode == 1
+    payload = json.loads(bad.stdout)
+    assert payload["findings"][0]["rule"] == "RPR202"
+    assert "RPR101" in payload["rules"]       # every family documented
+    ok = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--rules", "RPR3", "pkg"],
+        cwd=tmp_path, env=env, capture_output=True, text=True, timeout=120)
+    assert ok.returncode == 0, ok.stdout
+
+
+# -- the real tree is clean -------------------------------------------------
+
+
+def test_repository_tree_has_zero_findings():
+    paths = [p for p in ("src", "tests", "benchmarks", "examples")
+             if (REPO / p).exists()]
+    report = run_analysis(paths, root=REPO)
+    assert report.findings == [], "\n".join(
+        f.render() for f in report.findings)
+    # the waivers on deprecation/corruption tests stay visible
+    assert report.suppressed, "expected audited allow[] waivers"

@@ -310,7 +310,7 @@ def test_legacy_entry_points_importable_and_working():
     # itself stays importable from its home module one release longer)
     from repro.core import (FrozenTable, MultisetScheme,
                             ShardedAlignmentIndex, WeightedScheme, WeightFn)
-    from repro.core.index import AlignmentIndex
+    from repro.core.index import AlignmentIndex   # repro: allow[RPR403]
     from repro.data import default_scheme
     import repro.core
     assert not hasattr(repro.core, "AlignmentIndex")
@@ -322,7 +322,7 @@ def test_legacy_entry_points_importable_and_working():
     rng = np.random.default_rng(11)
     docs = _corpus(rng, n_docs=4)
     with pytest.warns(DeprecationWarning):
-        idx = AlignmentIndex(scheme=MultisetScheme(seed=1, k=8))
+        idx = AlignmentIndex(scheme=MultisetScheme(seed=1, k=8))  # repro: allow[RPR403]
     idx.build(docs)
     looped = _blocks(query(idx, docs[2][5:50], 0.5))
     idx.freeze()

@@ -316,7 +316,7 @@ def test_promote_refuses_manifestless_generation(tmp_path):
     with pytest.raises(ValueError, match="generation 0"):
         promote_generation(root, 0)
     # a hand-corrupted pointer is rejected loudly, not served stale
-    (root / CURRENT_POINTER).write_text("v000042")
+    (root / CURRENT_POINTER).write_text("v000042")  # repro: allow[RPR202]
     with pytest.raises(ValueError, match="v000042"):
         resolve_store(root)
     (root / CURRENT_POINTER).unlink()

@@ -10,6 +10,7 @@ from repro.core import (FrozenTable, IndexBuilder, MultisetScheme,
                         WeightedScheme, WeightFn, batch_query,
                         estimate_similarity, query)
 from repro.core.frozen import KIND_EMPTY, MODE_COORD, MODE_PACKED
+from repro.core.results import QueryOptions
 from repro.core.query import _sweep_small_batch, _sweep_text
 
 SCHEMES = {
@@ -214,10 +215,10 @@ def test_sharded_threaded_equals_serial(kind):
                                     n_shards=3).build(docs)
     looped = [_blocks(sharded.query(q, 0.5)) for q in qs]
     sharded.freeze()
-    serial = [_blocks(r) for r in sharded.batch_query(qs, 0.5,
-                                                      fanout="serial")]
-    threaded = [_blocks(r) for r in sharded.batch_query(qs, 0.5,
-                                                        fanout="threaded")]
+    serial = [_blocks(r) for r in sharded.batch_query(
+        qs, 0.5, options=QueryOptions(fanout="serial"))]
+    threaded = [_blocks(r) for r in sharded.batch_query(
+        qs, 0.5, options=QueryOptions(fanout="threaded"))]
     assert serial == threaded == looped
 
 

@@ -5,8 +5,8 @@ import math
 import numpy as np
 import pytest
 
-from repro.core import MultisetScheme, WeightFn, WeightedScheme, query
-from repro.core.index import AlignmentIndex
+from repro.core import (IndexBuilder, MultisetScheme, WeightFn,
+                        WeightedScheme, query)
 
 
 def brute_force_results(scheme, data_texts, q_tokens, theta):
@@ -40,7 +40,7 @@ def test_query_equals_bruteforce_multiset(method):
     data = [rng.integers(0, 8, size=24).astype(np.int64) for _ in range(3)]
     q = data[0][5:15].copy()
     scheme = MultisetScheme(seed=13, k=8)
-    index = AlignmentIndex(scheme=scheme, method=method).build(data)
+    index = IndexBuilder(scheme=scheme, method=method).build(data)
     for theta in (0.3, 0.6, 0.9):
         assert index_results(index, q, theta) == \
             brute_force_results(scheme, data, q, theta), (method, theta)
@@ -52,7 +52,7 @@ def test_query_equals_bruteforce_weighted(tf):
     data = [rng.integers(0, 6, size=20).astype(np.int64) for _ in range(2)]
     q = data[1][3:13].copy()
     scheme = WeightedScheme(weight=WeightFn(tf=tf), seed=21, k=8)
-    index = AlignmentIndex(scheme=scheme, method="mono_active").build(data)
+    index = IndexBuilder(scheme=scheme, method="mono_active").build(data)
     for theta in (0.4, 0.75):
         assert index_results(index, q, theta) == \
             brute_force_results(scheme, data, q, theta), (tf, theta)
@@ -64,7 +64,7 @@ def test_exact_duplicate_found_at_theta_1():
     data = [np.concatenate([rng.integers(0, 50, size=10), doc,
                             rng.integers(0, 50, size=10)])]
     scheme = MultisetScheme(seed=3, k=16)
-    index = AlignmentIndex(scheme=scheme, method="mono_active").build(data)
+    index = IndexBuilder(scheme=scheme, method="mono_active").build(data)
     res = index_results(index, doc, theta=1.0)
     assert (0, 10, 49) in res       # the exact copy is always retrieved
 
@@ -74,7 +74,7 @@ def test_disjoint_query_returns_nothing():
     data = [rng.integers(0, 20, size=30).astype(np.int64)]
     q = rng.integers(100, 120, size=10).astype(np.int64)
     scheme = MultisetScheme(seed=7, k=16)
-    index = AlignmentIndex(scheme=scheme, method="mono_active").build(data)
+    index = IndexBuilder(scheme=scheme, method="mono_active").build(data)
     assert index_results(index, q, theta=0.2) == set()
 
 
@@ -82,9 +82,9 @@ def test_index_state_dict_roundtrip():
     rng = np.random.default_rng(8)
     data = [rng.integers(0, 10, size=25).astype(np.int64) for _ in range(2)]
     scheme = MultisetScheme(seed=9, k=8)
-    index = AlignmentIndex(scheme=scheme, method="mono_active").build(data)
+    index = IndexBuilder(scheme=scheme, method="mono_active").build(data)
     state = index.state_dict()
-    index2 = AlignmentIndex(scheme=MultisetScheme(seed=9, k=8))
+    index2 = IndexBuilder(scheme=MultisetScheme(seed=9, k=8))
     index2.load_state_dict(state)
     q = data[0][2:18]
     a = index_results(index, q, 0.5)

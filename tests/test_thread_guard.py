@@ -1,0 +1,173 @@
+"""Runtime engine-affinity guard (REPRO_THREAD_GUARD=1): ownership +
+thread-name enforcement, the zero-overhead off path, and end-to-end
+subprocess runs with the env var set and unset.
+
+The env var is read once at ``repro.core.guard`` import, so the two
+end-to-end cases run in subprocesses with a controlled environment; the
+in-process tests flip ``guard.GUARD_ENABLED`` via monkeypatch and
+decorate *fresh* functions (decoration-time check)."""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import threading
+from pathlib import Path
+
+import pytest
+
+from repro.core import IndexBuilder, guard
+from repro.core.live import LiveIndex
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _sub_env(**extra):
+    env = {k: v for k, v in os.environ.items()
+           if k not in ("REPRO_THREAD_GUARD",)}
+    env.update({"PYTHONPATH": str(REPO / "src"), "JAX_PLATFORMS": "cpu"})
+    env.update(extra)
+    return env
+
+
+# -- static markers (always on, guard on or off) ----------------------------
+
+
+def test_engine_only_markers_are_always_attached():
+    for fn in (IndexBuilder.add_text, LiveIndex.add_text,
+               LiveIndex.seal_delta, LiveIndex.promote_sealed,
+               LiveIndex.compact):
+        assert getattr(fn, "__engine_only__", False)
+        assert not fn.__engine_reads_immutable__
+    assert LiveIndex.merge_sealed.__engine_only__
+    assert LiveIndex.merge_sealed.__engine_reads_immutable__
+
+
+@pytest.mark.skipif(guard.GUARD_ENABLED,
+                    reason="suite launched with REPRO_THREAD_GUARD=1")
+def test_guard_off_returns_the_original_function():
+    # zero overhead off: no wrapper, not even an if
+    assert not hasattr(LiveIndex.add_text, "__wrapped__")
+    assert not hasattr(IndexBuilder.add_text, "__wrapped__")
+
+
+# -- enforcement semantics (fresh decorations with the flag flipped) --------
+
+
+def _fresh_guarded(monkeypatch, **kw):
+    monkeypatch.setattr(guard, "GUARD_ENABLED", True)
+
+    class Idx:
+        def __init__(self):
+            self.calls = 0
+
+        @guard.engine_only(**kw) if kw else guard.engine_only
+        def mutate(self):
+            self.calls += 1
+            return self.calls
+
+    return Idx()
+
+
+def test_guarded_call_raises_off_engine_when_owned(monkeypatch):
+    idx = _fresh_guarded(monkeypatch)
+    idx.mutate()                       # unowned: any thread may mutate
+    guard.adopt(idx)
+    with pytest.raises(guard.EngineAffinityError, match="engine-only"):
+        idx.mutate()
+    assert idx.calls == 1              # the guarded call never ran
+    guard.disown(idx)
+    idx.mutate()                       # released: unguarded again
+    assert idx.calls == 2
+
+
+def test_guarded_call_succeeds_on_engine_named_thread(monkeypatch):
+    idx = _fresh_guarded(monkeypatch)
+    guard.adopt(idx)
+    out = []
+    t = threading.Thread(target=lambda: out.append(idx.mutate()),
+                         name=guard.ENGINE_THREAD_PREFIX + "_test_0")
+    t.start()
+    t.join(10)
+    assert out == [1]
+
+
+def test_reads_immutable_never_wraps(monkeypatch):
+    idx = _fresh_guarded(monkeypatch, reads_immutable=True)
+    guard.adopt(idx)
+    assert idx.mutate() == 1           # off-band merge path stays callable
+    assert type(idx).mutate.__engine_only__
+    assert type(idx).mutate.__engine_reads_immutable__
+    assert not hasattr(type(idx).mutate, "__wrapped__")
+
+
+def test_adopt_tolerates_none_and_slots():
+    class Slotted:
+        __slots__ = ()
+
+    guard.adopt(None, Slotted())       # must not raise
+    guard.disown(None, Slotted())
+
+
+# -- end-to-end subprocess runs ---------------------------------------------
+
+
+_E2E_SCRIPT = r"""
+import asyncio, json
+import numpy as np
+from repro.api import Aligner
+from repro.serve import AlignServer
+
+rng = np.random.default_rng(0)
+docs = [rng.integers(0, 1 << 30, size=60) for _ in range(4)]
+store = "idx_store"
+Aligner.build(docs, similarity="multiset", seed=3, k=4,
+              pipeline="columnar", store=store)
+aligner = Aligner.load(store, live=True)
+
+async def main():
+    srv = await AlignServer(aligner).start()
+    try:
+        body = json.dumps(
+            {"text": [int(t) for t in docs[0][:30]]}).encode()
+        status, _ = await srv.handle_add(body)
+        assert status == 200, f"engine-path add failed: {status}"
+        print("ENGINE-OK")
+        try:
+            aligner.add([9, 9, 9])          # main thread, engine-owned
+        except Exception as e:
+            print("DIRECT:" + type(e).__name__)
+        else:
+            print("DIRECT:no-error")
+    finally:
+        await srv.close()
+    aligner.add([7, 7, 7])                  # disowned on close: allowed
+    print("POST-CLOSE-OK")
+
+asyncio.run(main())
+"""
+
+
+def _run_e2e(tmp_path, env):
+    return subprocess.run(
+        [sys.executable, "-c", _E2E_SCRIPT], cwd=tmp_path, env=env,
+        capture_output=True, text=True, timeout=300)
+
+
+def test_guard_on_blocks_direct_add_but_not_engine_path(tmp_path):
+    proc = _run_e2e(tmp_path, _sub_env(REPRO_THREAD_GUARD="1"))
+    assert proc.returncode == 0, proc.stderr
+    out = proc.stdout.split()
+    assert "ENGINE-OK" in out
+    assert "DIRECT:EngineAffinityError" in out
+    assert "POST-CLOSE-OK" in out
+
+
+def test_guard_off_direct_add_is_unrestricted(tmp_path):
+    proc = _run_e2e(tmp_path, _sub_env())
+    assert proc.returncode == 0, proc.stderr
+    out = proc.stdout.split()
+    assert "ENGINE-OK" in out
+    assert "DIRECT:no-error" in out

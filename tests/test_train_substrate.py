@@ -89,7 +89,7 @@ def test_checkpoint_skips_uncommitted(tmp_path):
     # simulate a crash mid-write of step 3: no COMMITTED marker
     d = tmp_path / "step_00000003"
     d.mkdir()
-    (d / "manifest.json").write_text("{}")
+    (d / "manifest.json").write_text("{}")  # repro: allow[RPR202] (deliberately torn)
     assert latest_step(tmp_path) == 2
 
 
@@ -167,8 +167,7 @@ def test_contamination_checker_finds_leak():
 
 
 def test_sharded_index_matches_flat_index():
-    from repro.core import query
-    from repro.core.index import AlignmentIndex
+    from repro.core import IndexBuilder, query
     from repro.core.sharded_index import ShardedAlignmentIndex
     scheme = default_scheme("weighted", seed=5, k=16)
     scheme_flat = default_scheme("weighted", seed=5, k=16)
@@ -176,7 +175,7 @@ def test_sharded_index_matches_flat_index():
     docs = [rng.integers(0, 500, 60).astype(np.int64) for _ in range(9)]
     docs[4] = docs[1].copy()                        # a planted duplicate
     sharded = ShardedAlignmentIndex(scheme=scheme, n_shards=3).build(docs)
-    flat = AlignmentIndex(scheme=scheme_flat).build(docs)
+    flat = IndexBuilder(scheme=scheme_flat).build(docs)
     q = docs[1][5:50]
     r1 = sharded.query(q, 0.5)
     r2 = query(flat, q, 0.5)
