@@ -12,11 +12,28 @@ scheme, and after the final compaction the on-disk generation's CSR
 arrays must be bit-identical to a scratch freeze — the live path is
 allowed zero drift, ever.  A second soak drives the sharded index
 (per-shard deltas, one process-pool compaction) through the same oracle.
+
+Chaos kill-loop (``--chaos N``, the CI ``tier1-chaos`` job): the same
+churn workload, but each iteration runs in a child process armed with a
+seeded :mod:`repro.fault` plan that ``os._exit``\\ s it at one fsio
+checkpoint (every site in the seal → merge → promote → prune path, both
+just *before* and just *after* the durable write).  The parent then
+verifies in-process that the store still fscks clean with nothing
+quarantined, and the next child — which reopens the store through the
+recovery path — must serve results **bit-identical to a from-scratch
+oracle** of exactly the committed corpus.  The deterministic corpus
+(``chaos_doc``) makes "what should be on disk" a pure function of the
+committed doc count, so no state is carried between iterations.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import shutil
+import subprocess
+import sys
 import tempfile
 import time
 from pathlib import Path
@@ -27,7 +44,7 @@ from repro.api import Aligner
 from repro.core import (IndexBuilder, ShardedAlignmentIndex, batch_query,
                         make_scheme, save_index)
 from repro.core.live import LiveIndex
-from repro.core.store import current_generation
+from repro.core.store import current_generation, prune_generations
 
 VOCAB, DOC_LEN, K, THETA = 40, 60, 8, 0.5
 
@@ -128,16 +145,238 @@ def churn_sharded(rounds: int, docs_per_round: int, root: Path) -> None:
           f"(last one process-pool), {len(corpus)} docs, cold restore agrees")
 
 
+# --------------------------------------------------------------------------
+# chaos kill-loop (--chaos N)
+# --------------------------------------------------------------------------
+
+CHAOS_SEED_DOCS = 8
+CHAOS_MODES = ("crash", "crash_after")
+
+
+def chaos_doc(i: int) -> np.ndarray:
+    """Document ``i`` of the chaos corpus — a pure function of ``i``.
+
+    A killed child leaves no hand-off state: whatever doc count the
+    store actually committed before the kill, the next child regenerates
+    exactly that corpus prefix and oracle-checks against it.  Every 5th
+    doc from 10 on duplicates an earlier one so compactions keep folding
+    real matches, not just surviving."""
+    rng = np.random.default_rng(100_000 + i)
+    if i >= 10 and i % 5 == 0:
+        return chaos_doc(int(rng.integers(0, i - 1)))
+    return rng.integers(0, VOCAB, DOC_LEN).astype(np.int64)
+
+
+def _chaos_queries(corpus):
+    rng = np.random.default_rng(200_000 + len(corpus))
+    return [corpus[2][5:50], corpus[-1][:30],
+            rng.integers(1000, 1040, 20).astype(np.int64)]
+
+
+def chaos_child(store: Path, add_n: int) -> None:
+    """One chaos iteration, run in a subprocess with ``REPRO_FAULT_PLAN``
+    armed: recover the store, verify it serves exactly the committed
+    corpus, ingest, compact, prune, verify again.  A fault plan kills
+    this process (``os._exit``) at one durable-write checkpoint."""
+    scheme = make_scheme("multiset", seed=11, k=K)
+    live = LiveIndex.open(store, mmap=True)       # the recovery path
+    n = live.frozen.num_texts
+    corpus = [chaos_doc(i) for i in range(n)]
+    qs = _chaos_queries(corpus)
+    _check(live.batch_query(qs, THETA), scheme, corpus, qs,
+           f"chaos child: recovered store ({n} docs)")
+
+    for i in range(n, n + add_n):
+        live.add_text(chaos_doc(i))
+    corpus = [chaos_doc(i) for i in range(n + add_n)]
+    qs = _chaos_queries(corpus)
+    _check(live.batch_query(qs, THETA), scheme, corpus, qs,
+           "chaos child: pre-compact")
+
+    gen = live.compact()
+    prune_generations(store, keep=2)
+    _check(live.batch_query(qs, THETA), scheme, corpus, qs,
+           f"chaos child: post-compact (gen {gen})")
+    # the recovered-and-compacted store is bit-identical to a from-scratch
+    # build of the same corpus, no matter what the previous kill left
+    scratch = IndexBuilder(scheme=scheme).build(corpus).freeze()
+    for ta, tb in zip(live.frozen.tables, scratch.tables):
+        assert np.array_equal(ta.keys, tb.keys)
+        assert np.array_equal(ta.offsets, tb.offsets)
+        assert np.array_equal(ta.windows, tb.windows)
+    print(f"chaos child OK: {n} -> {n + add_n} docs, gen {gen}")
+
+
+def _record_chaos_schedule(add_n: int) -> list:
+    """One clean in-process run of the child workload under
+    ``fault.record_sites()``: the (site, occurrence) pairs it returns ARE
+    the kill schedule — every durable write the workload performs, with
+    no hand-maintained site list to go stale."""
+    from repro import fault
+    tmp = Path(tempfile.mkdtemp())
+    try:
+        root = tmp / "rec"
+        scheme = make_scheme("multiset", seed=11, k=K)
+        corpus = [chaos_doc(i) for i in range(CHAOS_SEED_DOCS)]
+        save_index(IndexBuilder(scheme=scheme).build(corpus).freeze(), root)
+        live = LiveIndex.open(root, mmap=True)
+        with fault.record_sites() as sites:
+            for i in range(CHAOS_SEED_DOCS, CHAOS_SEED_DOCS + add_n):
+                live.add_text(chaos_doc(i))
+            live.compact()
+            prune_generations(root, keep=2)
+        return sorted(set(sites))
+    finally:
+        shutil.rmtree(tmp)
+
+
+def chaos_soak(iters: int, seed: int, store: Path, add_n: int,
+               out_path: Path | None) -> None:
+    """The headline robustness proof: ``iters`` child runs, each killed
+    at a seeded fault site in the seal → merge → promote → prune path;
+    after every kill the store must fsck clean with nothing quarantined,
+    and the next child must serve bit-identical to a from-scratch
+    oracle.  Ends with one clean run that must converge."""
+    from repro import fault
+    from repro.fsck import check_store
+
+    if store.exists():
+        shutil.rmtree(store)
+    store.mkdir(parents=True)
+    scheme = make_scheme("multiset", seed=11, k=K)
+    corpus = [chaos_doc(i) for i in range(CHAOS_SEED_DOCS)]
+    save_index(IndexBuilder(scheme=scheme).build(corpus).freeze(), store)
+
+    schedule = _record_chaos_schedule(add_n)
+    cases = [(site, hit, mode) for (site, hit) in schedule
+             for mode in CHAOS_MODES]
+    order = np.random.default_rng(seed).permutation(len(cases))
+    print(f"chaos soak: {len(schedule)} durable-write sites x "
+          f"{len(CHAOS_MODES)} kill modes = {len(cases)} cases, "
+          f"{iters} iterations (seed {seed})")
+
+    src_root = Path(__file__).resolve().parent.parent / "src"
+    env = {**os.environ}
+    env["PYTHONPATH"] = str(src_root) + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.pop("REPRO_FAULT_PLAN", None)
+
+    def run_child(extra_env):
+        return subprocess.run(
+            [sys.executable, str(Path(__file__).resolve()), "--chaos-child",
+             "--store", str(store), "--docs-per-round", str(add_n)],
+            env={**env, **extra_env}, capture_output=True, text=True)
+
+    outcomes = []
+    killed = survived = 0
+    for it in range(iters):
+        site, hit, mode = cases[int(order[it % len(cases)])]
+        plan = fault.FaultPlan(
+            triggers=[fault.Trigger(site=site, hit=hit, mode=mode)],
+            seed=seed)
+        proc = run_child({"REPRO_FAULT_PLAN": plan.to_json()})
+        if proc.returncode not in (0, fault.FAULT_EXIT):
+            raise AssertionError(
+                f"chaos iteration {it} ({mode} at {site}@{hit}) exited "
+                f"{proc.returncode}, not a clean kill:\n"
+                f"{proc.stdout}\n{proc.stderr}")
+        rep = check_store(store)
+        assert rep["ok"], (
+            f"chaos iteration {it}: store fails fsck after {mode} at "
+            f"{site}@{hit}: {rep}")
+        assert not rep["quarantined"], (
+            f"chaos iteration {it}: a valid generation was quarantined "
+            f"after {mode} at {site}@{hit}: {rep['quarantined']}")
+        if proc.returncode == fault.FAULT_EXIT:
+            killed += 1
+        else:
+            survived += 1          # the plan's site wasn't reached this run
+        outcomes.append({"iteration": it, "site": site, "hit": hit,
+                         "mode": mode, "exit": proc.returncode,
+                         "generation": current_generation(store)})
+        if (it + 1) % 10 == 0 or it + 1 == iters:
+            print(f"  {it + 1}/{iters}: {killed} killed, {survived} "
+                  f"survived, serving gen {current_generation(store)}, "
+                  "fsck clean")
+
+    # convergence: one clean run must recover whatever the last kill left
+    proc = run_child({})
+    assert proc.returncode == 0, (
+        f"clean convergence run failed (exit {proc.returncode}):\n"
+        f"{proc.stdout}\n{proc.stderr}")
+    rep = check_store(store)
+    assert rep["ok"] and not rep["quarantined"]
+
+    result = {"iterations": iters, "seed": seed,
+              "docs_per_iteration": add_n,
+              "schedule": [{"site": s, "hit": h} for s, h in schedule],
+              "modes": list(CHAOS_MODES), "killed": killed,
+              "survived": survived,
+              "final_generation": current_generation(store),
+              "outcomes": outcomes, "ok": True}
+    if out_path is not None:
+        out_path.parent.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps(result, indent=2))
+        print(f"chaos schedule + outcomes written to {out_path}")
+    print(f"chaos soak OK: {iters} fault-injected runs ({killed} killed, "
+          f"{survived} survived), store fsck-clean throughout, nothing "
+          f"quarantined, converged at generation "
+          f"{current_generation(store)}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=3,
                     help="add/query/compact rounds per soak")
     ap.add_argument("--docs-per-round", type=int, default=3)
+    ap.add_argument("--keep-store", type=Path, default=None, metavar="DIR",
+                    help="build the churn stores here (persisted for a "
+                         "later `python -m repro.fsck`) instead of a "
+                         "temp dir")
+    ap.add_argument("--chaos", type=int, default=0, metavar="N",
+                    help="run the seeded kill-loop soak for N iterations "
+                         "instead of the plain churn soaks")
+    ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument("--chaos-store", type=Path, default=None, metavar="DIR",
+                    help="store directory for the kill-loop (wiped; "
+                         "persisted for a later fsck); default: temp dir")
+    ap.add_argument("--chaos-out", type=Path, default=None, metavar="JSON",
+                    help="write the kill schedule + per-iteration "
+                         "outcomes here")
+    # internal: one kill-loop iteration, run as a subprocess with
+    # REPRO_FAULT_PLAN armed
+    ap.add_argument("--chaos-child", action="store_true",
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--store", type=Path, help=argparse.SUPPRESS)
     args = ap.parse_args()
+
+    if args.chaos_child:
+        chaos_child(args.store, args.docs_per_round)
+        return
+
     t0 = time.time()
-    with tempfile.TemporaryDirectory() as d:
-        churn_single(args.rounds, args.docs_per_round, Path(d) / "flat")
-        churn_sharded(args.rounds, args.docs_per_round, Path(d) / "sharded")
+    if args.chaos:
+        if args.chaos_store is not None:
+            chaos_soak(args.chaos, args.chaos_seed, args.chaos_store,
+                       args.docs_per_round, args.chaos_out)
+        else:
+            with tempfile.TemporaryDirectory() as d:
+                chaos_soak(args.chaos, args.chaos_seed, Path(d) / "chaos",
+                           args.docs_per_round, args.chaos_out)
+        print(f"chaos soak passed in {time.time() - t0:.1f}s")
+        return
+
+    if args.keep_store is not None:
+        args.keep_store.mkdir(parents=True, exist_ok=True)
+        churn_single(args.rounds, args.docs_per_round,
+                     args.keep_store / "flat")
+        churn_sharded(args.rounds, args.docs_per_round,
+                      args.keep_store / "sharded")
+    else:
+        with tempfile.TemporaryDirectory() as d:
+            churn_single(args.rounds, args.docs_per_round, Path(d) / "flat")
+            churn_sharded(args.rounds, args.docs_per_round,
+                          Path(d) / "sharded")
     print(f"churn soak passed in {time.time() - t0:.1f}s")
 
 

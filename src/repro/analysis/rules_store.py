@@ -1,4 +1,4 @@
-"""RPR201/RPR202 — store crash-safety ordering.
+"""RPR201/RPR202/RPR203 — store crash-safety ordering and fault routing.
 
 The on-disk store's crash-safety contract (:mod:`repro.core.store`) is
 strictly ordered: array payloads land first, then the generation's
@@ -21,6 +21,18 @@ generation intact.
   ``.tmp`` staging name).  Pointer files must only be produced by the
   store's tmp + rename helpers; an in-place write can be observed
   half-written.
+
+* **RPR203** — a store/checkpoint filesystem mutation that bypasses
+  :mod:`repro.fault.fsio`.  The fault-injection harness can only crash,
+  tear, or fail writes that route through the ``fsio`` indirection; a
+  direct ``write_bytes``/``rename``/``rmtree``/``np.save`` against store
+  artifacts is a blind spot the chaos soak cannot exercise.  Fires on
+  any mutation inside the enforced durability modules (``core/store.py``,
+  ``core/sharded_index.py``, ``train/checkpoint.py``) and, elsewhere, on
+  mutations whose expression names store artifacts (``manifest.json``,
+  ``CURRENT``, ``COMMITTED``, ``meta.json``, ``.npy``/``.npz``/``.pkl``).
+  Deliberate-corruption fixtures waive it line-by-line with
+  ``# repro: allow[RPR203]``.
 """
 
 from __future__ import annotations
@@ -36,12 +48,28 @@ RPR201 = ("RPR201",
 RPR202 = ("RPR202",
           "direct non-atomic write to a manifest/CURRENT path outside "
           "core/store.py (must go through tmp + rename)")
+RPR203 = ("RPR203",
+          "store/checkpoint filesystem mutation bypasses repro.fault.fsio "
+          "(fault injection cannot reach it)")
 
 STORE_FILE = "src/repro/core/store.py"
+FSIO_FILE = "src/repro/fault/fsio.py"
+
+#: modules whose durable mutations must ALL route through fsio (they
+#: implement the store/checkpoint formats the chaos harness exercises)
+FSIO_ENFORCED = frozenset({STORE_FILE, "src/repro/core/sharded_index.py",
+                           "src/repro/train/checkpoint.py"})
 
 _ARRAY_METHODS = frozenset({"add_table", "add_arena"})
 _NP_SAVE = frozenset({"save", "savez", "savez_compressed"})
+_FSIO_SAVE = frozenset({"np_save", "np_savez"})
+_FSIO_COMMIT = frozenset({"commit_text", "commit_bytes"})
 _WRITE_METHODS = frozenset({"write_text", "write_bytes"})
+_MUTATION_LEAVES = _WRITE_METHODS | frozenset(
+    {"rename", "replace", "rmtree", "unlink"})
+#: substrings that mark a call as touching store/checkpoint artifacts
+_STORE_ARTIFACTS = ("manifest.json", "meta.json", "COMMITTED",
+                    ".npy", ".npz", ".pkl")
 
 
 def _has_evidence(call: ast.Call) -> bool:
@@ -78,16 +106,24 @@ def _durable_write(call: ast.Call) -> bool:
     return False
 
 
+def _is_fsio_call(call: ast.Call) -> bool:
+    """Routed through the repro.fault.fsio indirection?"""
+    name = dotted_name(call.func)
+    return bool(name) and "fsio" in name.split(".")[:-1]
+
+
 def _classify(call: ast.Call) -> str | None:
     """'array', 'commit', or None."""
     name = dotted_name(call.func)
     leaf = name.rsplit(".", 1)[-1] if name else ""
-    if leaf in _ARRAY_METHODS:
+    if leaf in _ARRAY_METHODS or leaf in _FSIO_SAVE:
         return "array"
     if name and leaf in _NP_SAVE and \
             name.rsplit(".", 1)[0].rsplit(".", 1)[-1] in ("np", "numpy"):
         return "array"
     if leaf in ("finalize", "promote_generation"):
+        return "commit"
+    if leaf in _FSIO_COMMIT and _has_evidence(call):
         return "commit"
     if (_durable_write(call) or leaf in ("rename", "replace")) \
             and _has_evidence(call) and not _is_tmp_staged(call):
@@ -105,6 +141,7 @@ def check_store_ordering(project: Project) -> list[Finding]:
         if sf.rel != STORE_FILE:
             for node in ast.walk(sf.tree):
                 if isinstance(node, ast.Call) and _durable_write(node) \
+                        and not _is_fsio_call(node) \
                         and _has_evidence(node) and not _is_tmp_staged(node):
                     findings.append(Finding(
                         rule="RPR202", path=sf.rel, line=node.lineno,
@@ -112,6 +149,57 @@ def check_store_ordering(project: Project) -> list[Finding]:
                                 "stage to .tmp and rename (or use the "
                                 "store helpers) so readers never see a "
                                 "torn pointer"))
+    return findings
+
+
+def _rpr203_evidence(call: ast.Call) -> bool:
+    """Does the call expression name a store/checkpoint artifact?"""
+    if _has_evidence(call):            # manifest.json / CURRENT[_POINTER]
+        return True
+    return any(tok in s for s in string_constants(call)
+               for tok in _STORE_ARTIFACTS)
+
+
+def _is_store_mutation(call: ast.Call) -> bool:
+    name = dotted_name(call.func)
+    leaf = name.rsplit(".", 1)[-1] if name else ""
+    if leaf in _MUTATION_LEAVES:
+        # str.replace heuristic: two positional string-constant args is a
+        # string substitution, not a filesystem rename
+        if leaf == "replace" and len(call.args) == 2 and all(
+                isinstance(a, ast.Constant) and isinstance(a.value, str)
+                for a in call.args):
+            return False
+        return True
+    if name and leaf in _NP_SAVE and \
+            name.rsplit(".", 1)[0].rsplit(".", 1)[-1] in ("np", "numpy"):
+        return True
+    return _durable_write(call)
+
+
+@checker(RPR203)
+def check_fsio_routing(project: Project) -> list[Finding]:
+    """Durable store/checkpoint mutations must route through
+    :mod:`repro.fault.fsio` so fault plans can reach them."""
+    findings: list[Finding] = []
+    for sf in project.files:
+        if sf.rel == FSIO_FILE:
+            continue                   # the indirection itself
+        enforced = sf.rel in FSIO_ENFORCED
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call) or _is_fsio_call(node):
+                continue
+            if not _is_store_mutation(node):
+                continue
+            if not (enforced or _rpr203_evidence(node)):
+                continue
+            findings.append(Finding(
+                rule="RPR203", path=sf.rel, line=node.lineno,
+                message="store/checkpoint mutation bypasses "
+                        "repro.fault.fsio; route it through the fsio "
+                        "helpers so fault plans can crash/tear/fail it "
+                        "(deliberate-corruption fixtures: "
+                        "# repro: allow[RPR203])"))
     return findings
 
 

@@ -33,12 +33,15 @@ through the store manifest.
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import warnings
 from dataclasses import dataclass
 from pathlib import Path
 
 import numpy as np
+
+from .fault import fsio
 
 from .core import batch_query as _batch_query, make_scheme
 from .core.builder import IndexBuilder
@@ -257,7 +260,15 @@ class Aligner:
                                     backend=backend,
                                     probe_backend=probe_backend)
         tokens = [self._tokens(t) for t in texts]
-        if isinstance(self._index, (ShardedAlignmentIndex, LiveIndex)):
+        failed: list[int] = []
+        if isinstance(self._index, ShardedAlignmentIndex):
+            # degraded fan-out: a shard that keeps failing is skipped
+            # (retried with backoff) and reported on the results instead
+            # of failing the whole batch
+            res = self._index.batch_query(tokens, theta, options=opts,
+                                          stage_times=stage_times,
+                                          failures=failed)
+        elif isinstance(self._index, LiveIndex):
             res = self._index.batch_query(tokens, theta, options=opts,
                                           stage_times=stage_times)
         else:
@@ -274,16 +285,23 @@ class Aligner:
                 DeprecationWarning, stacklevel=2)
             return res
         k = self.scheme.k
-        return [QueryResult.from_alignments(r, theta=theta, k=k,
-                                            query_len=len(t))
-                for r, t in zip(res, tokens)]
+        results = [QueryResult.from_alignments(r, theta=theta, k=k,
+                                               query_len=len(t))
+                   for r, t in zip(res, tokens)]
+        if failed:
+            fs = tuple(sorted(set(failed)))
+            results = [dataclasses.replace(r, degraded=True,
+                                           failed_shards=fs)
+                       for r in results]
+        return results
 
     # -- persistence --------------------------------------------------------
 
     def _write_meta(self, root: Path) -> None:
         meta = {"similarity": self.config.similarity,
                 "tokenizer": _tokenizer_spec(self.tokenizer)}
-        (root / _ALIGNER_META).write_text(json.dumps(meta))
+        fsio.write_text(root / _ALIGNER_META, json.dumps(meta),
+                        site="aligner.meta")
 
     def save(self, path) -> "Aligner":
         """Freeze (if still building) and write the versioned store: JSON
@@ -306,7 +324,8 @@ class Aligner:
             # the snapshot is flat: retire any stale generation pointer at
             # the target AFTER the manifest commit, so readers flip from a
             # complete old generation to the complete snapshot
-            (root / CURRENT_POINTER).unlink(missing_ok=True)
+            fsio.unlink(root / CURRENT_POINTER,
+                        site="aligner.retire_pointer", missing_ok=True)
             self._write_meta(root)
             return self
         if isinstance(self._index, ShardedAlignmentIndex):

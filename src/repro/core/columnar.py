@@ -242,7 +242,8 @@ class ColumnarBuilder:
         writer.finalize(num_texts=self.num_texts,
                         num_windows=self.num_windows,
                         text_lengths=self.text_lengths, doc_map=doc_map)
-        return load_index(path, mmap=mmap, scheme=self.scheme)
+        # just-written store: skip the load-time checksum verification
+        return load_index(path, mmap=mmap, scheme=self.scheme, verify=False)
 
 
 def _shard_build_payload(spec: dict, method: str, docs: list,

@@ -79,6 +79,9 @@ class LiveIndex:
     _sealed_docs: list[int] = field(default_factory=list, init=False,
                                     repr=False)
     _next_gid: int = field(default=0, init=False, repr=False)
+    # monotonic timestamp of the first add into the current delta (None
+    # while it is empty) — the supervisor's age-based compaction trigger
+    _delta_born: float | None = field(default=None, init=False, repr=False)
 
     def __post_init__(self):
         self._next_gid = max(self.doc_map, default=-1) + 1
@@ -89,10 +92,18 @@ class LiveIndex:
     def open(cls, root, *, mmap: bool = True, scheme=None) -> "LiveIndex":
         """Open a store directory for live serving: mmap-load the serving
         generation, start an empty delta, and adopt the manifest's
-        ``doc_map`` (identity when the store never recorded one)."""
+        ``doc_map`` (identity when the store never recorded one).
+
+        Resolution goes through :func:`~repro.core.store.resolve_verified`
+        — a serving generation that fails its checksum verification is
+        quarantined and the newest verifying generation is served instead
+        (recovery happens here, at open time; queries never re-verify).
+        """
         root = Path(root)
-        serve_dir = index_store.resolve_store(root)
-        frozen = index_store.load_index(serve_dir, mmap=mmap, scheme=scheme)
+        serve_dir = index_store.resolve_verified(root)
+        # resolve_verified already checksum-verified serve_dir
+        frozen = index_store.load_index(serve_dir, mmap=mmap, scheme=scheme,
+                                        verify=False)
         manifest = index_store.read_manifest(serve_dir)
         doc_map = manifest.get("doc_map") or list(range(frozen.num_texts))
         return cls(frozen=frozen,
@@ -149,6 +160,14 @@ class LiveIndex:
         folded = self.frozen.num_texts
         return (self.num_texts - folded) / max(1, self.num_texts)
 
+    @property
+    def delta_age_s(self) -> float:
+        """Seconds since the first add into the current delta (0.0 while
+        it is empty) — the supervisor's age-based compaction trigger."""
+        if self._delta_born is None or self.delta.num_texts == 0:
+            return 0.0
+        return time.monotonic() - self._delta_born
+
     def nbytes(self) -> int:
         return sum(lv.nbytes() for lv in self._levels())
 
@@ -162,6 +181,8 @@ class LiveIndex:
         assigns those); default is one past the largest id seen."""
         if gid is None:
             gid = self._next_gid
+        if self.delta.num_texts == 0:
+            self._delta_born = time.monotonic()
         base = self.frozen.num_texts + \
             (self.sealed.num_texts if self.sealed is not None else 0)
         lid = base + self.delta.add_text(np.asarray(tokens, np.int64))
@@ -302,11 +323,33 @@ class LiveIndex:
                 f"{self.num_texts} texts; refusing to seal a torn state")
         self.sealed = self.delta
         self.delta = IndexBuilder(scheme=self.scheme, method=self.method)
+        self._delta_born = None
         # snapshot the doc ids the merged generation will cover; adds keep
         # appending to doc_map but never touch this prefix
         self._sealed_docs = list(self.doc_map[:self.frozen.num_texts +
                                               self.sealed.num_texts])
         return self.sealed.num_texts
+
+    @engine_only
+    def unseal_delta(self) -> bool:
+        """Roll back an unfinished overlapped compaction: restore the
+        sealed level as the active delta, as if ``seal_delta`` never ran.
+
+        Only possible while the active delta is still empty (no add
+        landed since the seal).  Otherwise the sealed level stays — it is
+        still served correctly as a middle level — and returns ``False``
+        so the caller retries ``merge_sealed`` later instead.
+        """
+        if self.sealed is None:
+            return False
+        if self.delta.num_texts:
+            return False
+        self.delta = self.sealed
+        self.sealed = None
+        self._sealed_docs = []
+        self._delta_born = (time.monotonic() if self.delta.num_texts
+                            else None)
+        return True
 
     @engine_only(reads_immutable=True)
     def merge_sealed(self) -> tuple[int, SearchIndex]:
@@ -379,10 +422,7 @@ class LiveIndex:
                 # synchronous path: no add can have landed between seal and
                 # merge, so un-seal and restore the pre-call state (a crash
                 # mid-merge must leave the index exactly as it was)
-                if self.delta.num_texts == 0:
-                    self.delta = self.sealed
-                    self.sealed = None
-                    self._sealed_docs = []
+                self.unseal_delta()
                 raise
         else:
             gen, new_idx = self.merge_sealed()

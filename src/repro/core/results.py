@@ -109,11 +109,18 @@ class QueryResult:
 
     Iterates (and indexes, and bool-tests) as the list of matches, so the
     pre-typed ``for hit in aligner.find(q, theta)`` loop is unchanged.
+
+    ``degraded=True`` marks a *partial* result: one or more sharded
+    fan-out probes failed (after bounded retries) and were skipped, so
+    matches from the shards in ``failed_shards`` may be missing.  Healthy
+    results keep the defaults, so pre-degraded consumers are unaffected.
     """
 
     matches: list[Match]
     theta: float
     query_len: int | None = None
+    degraded: bool = False
+    failed_shards: tuple = ()
 
     def __iter__(self):
         return iter(self.matches)
@@ -129,14 +136,18 @@ class QueryResult:
 
     def to_dict(self) -> dict:
         return {"matches": [m.to_dict() for m in self.matches],
-                "theta": self.theta, "query_len": self.query_len}
+                "theta": self.theta, "query_len": self.query_len,
+                "degraded": self.degraded,
+                "failed_shards": list(self.failed_shards)}
 
     @classmethod
     def from_dict(cls, d: dict) -> "QueryResult":
         return cls(matches=[Match.from_dict(m) for m in d["matches"]],
                    theta=float(d["theta"]),
                    query_len=(None if d.get("query_len") is None
-                              else int(d["query_len"])))
+                              else int(d["query_len"])),
+                   degraded=bool(d.get("degraded", False)),
+                   failed_shards=tuple(d.get("failed_shards", ())))
 
     def to_json(self) -> str:
         return json.dumps(self.to_dict())

@@ -40,6 +40,8 @@ from pathlib import Path
 
 import numpy as np
 
+from ..fault import checkpoint as fault_checkpoint
+from ..fault import fsio
 from . import store as index_store
 from .builder import IndexBuilder
 from .query import Alignment, _sweep_gathered, batch_probe, query
@@ -202,8 +204,9 @@ class ShardedAlignmentIndex:
             for s, fut in enumerate(futures):
                 payload = fut.result()
                 if dirs[s] is not None:
+                    # just written by the worker: skip checksum verification
                     self.shards[s] = index_store.load_index(
-                        dirs[s], mmap=mmap, scheme=self.scheme)
+                        dirs[s], mmap=mmap, scheme=self.scheme, verify=False)
                 else:
                     self.shards[s] = SearchIndex.from_state(
                         self.scheme, payload)
@@ -222,7 +225,10 @@ class ShardedAlignmentIndex:
                     options: QueryOptions | None = None,
                     sketches=UNSET, backend=UNSET, probe_backend=UNSET,
                     fanout=UNSET,
-                    stage_times: dict | None = None) -> list[list[Alignment]]:
+                    stage_times: dict | None = None,
+                    failures: list | None = None,
+                    shard_retries: int = 1,
+                    retry_backoff_s: float = 0.005) -> list[list[Alignment]]:
         """Batched fan-out: sketch the batch once (shards share the hash
         family), probe every shard's tables with the same sketches, union
         per query in the global id space.
@@ -244,6 +250,14 @@ class ShardedAlignmentIndex:
         hash family, so they are computed once regardless).
         ``stage_times`` accumulates per-stage wall seconds under
         ``"sketch"``/``"probe"``/``"sweep"`` when given.
+
+        **Degraded mode**: with ``failures`` set to a caller-owned list,
+        a shard whose probe keeps raising after ``shard_retries`` bounded
+        exponential-backoff retries is *skipped* — its shard id is
+        appended to ``failures`` and the union simply misses its docs —
+        instead of failing the whole fan-out.  With ``failures=None``
+        (default) the first shard exception propagates, preserving the
+        strict all-or-nothing semantics oracles rely on.
         """
         opts = coerce_query_options(
             options, "ShardedAlignmentIndex.batch_query", sketches=sketches,
@@ -258,17 +272,34 @@ class ShardedAlignmentIndex:
         B = len(texts)
         m = max(1, math.ceil(self.scheme.k * theta))
 
-        def probe_shard(shard):
-            return batch_probe(shard, sk, probe_backend=opts.probe_backend)
+        def probe_shard(s_shard):
+            s, shard = s_shard
+            attempts = 1 + (shard_retries if failures is not None else 0)
+            delay = retry_backoff_s
+            for attempt in range(attempts):
+                try:
+                    fault_checkpoint(f"sharded.probe.s{s}")
+                    return batch_probe(shard, sk,
+                                       probe_backend=opts.probe_backend)
+                except Exception:
+                    if attempt + 1 >= attempts:
+                        if failures is None:
+                            raise
+                        failures.append(s)
+                        return None
+                    time.sleep(delay)
+                    delay *= 2
 
         t1 = time.perf_counter()
         if opts.fanout == "threaded" and self.n_shards > 1:
             gathered = list(self._fanout_pool().map(probe_shard,
-                                                    self.shards))
+                                                    enumerate(self.shards)))
         else:
-            gathered = [probe_shard(shard) for shard in self.shards]
+            gathered = [probe_shard(s) for s in enumerate(self.shards)]
         t2 = time.perf_counter()
+        # a failed (skipped) shard contributes an empty result per query
         shard_results = [_sweep_gathered(g, B, m, opts.sweep)
+                         if g is not None else [[] for _ in texts]
                          for g in gathered]
 
         per_q: list[list[Alignment]] = [[] for _ in texts]
@@ -391,7 +422,8 @@ class ShardedAlignmentIndex:
         meta = {"meta_version": META_VERSION, "n_shards": self.n_shards,
                 "method": self.method, "doc_map": self.doc_map,
                 "scheme": scheme_spec(self.scheme)}
-        (root / "meta.json").write_text(json.dumps(meta))
+        fsio.commit_text(root / "meta.json", json.dumps(meta),
+                         site="sharded.meta")
 
     def save(self, root: str | Path):
         root = Path(root)
@@ -414,17 +446,17 @@ class ShardedAlignmentIndex:
                 # the snapshot is the flat layout; retire any generation
                 # pointer AFTER its manifest commit so readers flip from a
                 # complete old generation to the complete new snapshot
-                (store_dir / index_store.CURRENT_POINTER).unlink(
-                    missing_ok=True)
-                pkl.unlink(missing_ok=True)       # drop stale checkpoint
+                fsio.unlink(store_dir / index_store.CURRENT_POINTER,
+                            site="sharded.retire_pointer", missing_ok=True)
+                fsio.unlink(pkl, site="sharded.retire_checkpoint",
+                            missing_ok=True)      # drop stale checkpoint
             else:
-                tmp = root / f"shard_{s}.pkl.tmp"
-                with open(tmp, "wb") as f:
-                    pickle.dump(shard.state_dict(), f)
-                tmp.rename(pkl)                   # atomic commit
+                # atomic commit (tmp + rename inside commit_bytes)
+                fsio.commit_bytes(pkl, pickle.dumps(shard.state_dict()),
+                                  site="sharded.checkpoint")
                 if store_dir.exists():
-                    import shutil
-                    shutil.rmtree(store_dir)      # drop stale frozen store
+                    fsio.rmtree(store_dir,
+                                site="sharded.reset")  # drop stale store
         self._write_meta(root)
 
     def restore(self, root: str | Path, *, missing_ok: bool = True,

@@ -55,21 +55,53 @@ Promotion is atomic and ordered — arrays, then the generation's manifest,
 then the pointer — so a crash at any point leaves ``CURRENT`` naming a
 complete older generation; rolling back is rewriting ``CURRENT`` to a
 retained version's name (or deleting it to serve the flat root).
+
+Integrity and recovery
+----------------------
+``IndexWriter`` records a CRC32 per array file in the manifest
+(``"checksums"``); :func:`verify_generation` / :func:`verify_store`
+re-hash the files against it (``python -m repro.fsck`` is the CLI).
+Loaders resolve through :func:`resolve_verified`: a serving generation
+that fails verification is *quarantined* — renamed into
+``quarantine/v{N:06d}``, never deleted — and the pointer falls back to
+the newest retained generation that verifies (or the flat root), so a
+corrupted promotion degrades to serving older data instead of crashing
+the reader.  ``quarantine/`` numbers stay reserved
+(:func:`next_generation` never renumbers over them) and
+:func:`prune_generations` reclaims superseded/aborted version dirs
+without ever touching quarantine by default.
+
+All durable mutations in this module route through
+:mod:`repro.fault.fsio` (enforced by RPR203), so the seeded
+fault-injection harness can crash, tear, or fail any write.
 """
 
 from __future__ import annotations
 
 import json
+from dataclasses import dataclass, field
 from pathlib import Path
+from zlib import crc32
 
 import numpy as np
 
+from ..fault import fsio
 from .frozen import FrozenTable, ProbeArena
 from .schemes import scheme_from_spec, scheme_spec
 
 FORMAT = "mono-index"
 FORMAT_VERSION = 1
 CURRENT_POINTER = "CURRENT"
+QUARANTINE_DIR = "quarantine"
+
+# recovery counters (per process; surfaced by serve /metrics and fsck)
+_COUNTERS = {"verify_failures": 0, "quarantined_generations": 0,
+             "recovered_fallbacks": 0}
+
+
+def store_counters() -> dict:
+    """Snapshot of this process's store-recovery counters."""
+    return dict(_COUNTERS)
 
 _ARRAYS = ("keys", "offsets", "windows")
 _DTYPES = {"keys": np.uint64, "offsets": np.int64, "windows": np.int32}
@@ -114,13 +146,19 @@ def next_generation(root) -> int:
     Promoted generations are immutable — after a rollback the next
     compaction must not renumber over a retained version directory (its
     arrays may be mmap'd by running readers).  An aborted, manifest-less
-    directory is not committed and is reused by the retry.
+    directory is not committed and is reused by the retry.  Quarantined
+    generations keep their numbers reserved too: a future promotion must
+    never reuse the number of an index that was once served.
     """
     root = Path(root)
     committed = [0]
     for p in root.glob("v[0-9][0-9][0-9][0-9][0-9][0-9]"):
         if (p / "manifest.json").exists():
             committed.append(int(p.name[1:]))
+    for p in (root / QUARANTINE_DIR).glob("v*"):
+        digits = p.name[1:7]
+        if digits.isdigit():
+            committed.append(int(digits))
     return max(max(committed), current_generation(root)) + 1
 
 
@@ -164,13 +202,21 @@ def promote_generation(root, gen: int) -> None:
     if not (gdir / "manifest.json").exists():
         raise ValueError(f"{gdir} has no manifest (aborted compaction?); "
                          "refusing to promote it to the serving generation")
-    tmp = root / (CURRENT_POINTER + ".tmp")
-    tmp.write_text(gdir.name)
-    tmp.rename(root / CURRENT_POINTER)      # atomic reader flip
+    # atomic reader flip (tmp + rename inside commit_text)
+    fsio.commit_text(root / CURRENT_POINTER, gdir.name, site="store.promote")
 
 
 def _arena_path(root: Path, name: str) -> Path:
     return root / f"arena.{name}.npy"
+
+
+def _checksum_record(arr) -> dict:
+    """CRC32 + shape/dtype fingerprint of one array (stdlib ``zlib`` —
+    cheap enough to hash every file at write and load-verify time)."""
+    a = np.ascontiguousarray(arr)
+    return {"algo": "crc32",
+            "crc": int(crc32(a.reshape(-1).view(np.uint8)) & 0xFFFFFFFF),
+            "dtype": str(a.dtype), "shape": list(a.shape)}
 
 
 class IndexWriter:
@@ -194,24 +240,32 @@ class IndexWriter:
         # invalidate any previous commit before touching its arrays: a
         # crash mid-rewrite must leave "no manifest" (aborted write),
         # never a stale manifest validating torn arrays
-        (self.root / "manifest.json").unlink(missing_ok=True)
+        fsio.unlink(self.root / "manifest.json", site="store.writer.reset",
+                    missing_ok=True)
         self._scheme = scheme
         self._method = method
         self._tables: list[dict] = []
         self._arena: dict | None = None
+        self._checksums: dict[str, dict] = {}
+
+    def _save_array(self, path: Path, arr, *, site: str) -> None:
+        fsio.np_save(path, arr, site=site)
+        self._checksums[path.name] = _checksum_record(arr)
 
     def add_table(self, i: int, table) -> None:
         if i != len(self._tables):
             raise ValueError(f"tables must be added in coordinate order: "
                              f"got table {i}, expected {len(self._tables)}")
         for name in _ARRAYS:
-            np.save(_table_path(self.root, i, name), getattr(table, name))
+            self._save_array(_table_path(self.root, i, name),
+                             getattr(table, name), site="store.writer.table")
         self._tables.append({"kind": table.kind,
                              "kint_min": int(table.kint_min)})
 
     def add_arena(self, arena) -> None:
         for name in _ARENA_ARRAYS:
-            np.save(_arena_path(self.root, name), getattr(arena, name))
+            self._save_array(_arena_path(self.root, name),
+                             getattr(arena, name), site="store.writer.arena")
         self._arena = {"mode": arena.mode, "max_run": int(arena.max_run)}
 
     def finalize(self, *, num_texts: int, num_windows: int,
@@ -229,11 +283,12 @@ class IndexWriter:
                         if doc_map is not None else None),
             "tables": self._tables,
             "arena": self._arena,
+            "checksums": self._checksums,
         }
         # last write in the RPR201 ordering: arrays, then this commit
-        tmp = self.root / "manifest.json.tmp"
-        tmp.write_text(json.dumps(manifest))
-        tmp.rename(self.root / "manifest.json")  # atomic commit marker
+        # (atomic tmp + rename inside commit_text)
+        fsio.commit_text(self.root / "manifest.json", json.dumps(manifest),
+                         site="store.writer.manifest")
 
 
 def save_index(index, path, *, doc_map=None,
@@ -281,7 +336,256 @@ def read_manifest(path) -> dict:
     return manifest
 
 
-def load_index(path, *, mmap: bool = True, scheme=None):
+# --------------------------------------------------------------------------
+# integrity verification + quarantine recovery (see module docstring;
+# ``python -m repro.fsck`` is the CLI over these)
+# --------------------------------------------------------------------------
+
+@dataclass
+class VerifyReport:
+    """Outcome of verifying one generation directory."""
+
+    path: str
+    committed: bool = False         # readable, valid manifest present
+    arrays: int = 0                 # array files structurally checked
+    checksummed: int = 0            # of those, verified against a CRC
+    problems: list = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return self.committed and not self.problems
+
+    def to_dict(self) -> dict:
+        return {"path": self.path, "ok": self.ok, "committed": self.committed,
+                "arrays": self.arrays, "checksummed": self.checksummed,
+                "problems": list(self.problems)}
+
+
+def verify_generation(path) -> VerifyReport:
+    """Verify one generation directory: manifest readable and valid, every
+    required array file present, loadable, dtype-correct, and matching its
+    recorded CRC32.  Stores written before checksums existed verify
+    structurally (noted in the report, not a failure)."""
+    root = Path(path)
+    rep = VerifyReport(path=str(root))
+    mpath = root / "manifest.json"
+    if not mpath.exists():
+        rep.problems.append("no manifest.json (aborted or foreign directory)")
+        return rep
+    try:
+        manifest = json.loads(mpath.read_text())
+    except (OSError, ValueError) as e:
+        rep.problems.append(f"manifest unreadable: {e}")
+        return rep
+    if manifest.get("format") != FORMAT:
+        rep.problems.append(f"not a {FORMAT} store "
+                            f"(format={manifest.get('format')!r})")
+        return rep
+    if manifest.get("format_version") != FORMAT_VERSION:
+        rep.problems.append(
+            "unsupported index format version "
+            f"{manifest.get('format_version')!r} (this build reads version "
+            f"{FORMAT_VERSION})")
+        return rep
+    rep.committed = True
+    # legacy (pre-checksum) manifests verify structurally only
+    checksums = manifest.get("checksums") or {}
+    expected_dtypes = {}
+    for i in range(len(manifest.get("tables", []))):
+        for name in _ARRAYS:
+            expected_dtypes[_table_path(root, i, name).name] = _DTYPES[name]
+    if manifest.get("arena"):
+        for name in _ARENA_ARRAYS:
+            expected_dtypes[_arena_path(root, name).name] = _ARENA_DTYPES[name]
+    # every table file is required by the loader; arena files are optional
+    # (lazy rebuild) unless a checksum was recorded for them
+    required = [f for f in expected_dtypes
+                if f.startswith("table_") or f in checksums]
+    for fname in required:
+        fpath = root / fname
+        if not fpath.exists():
+            rep.problems.append(f"{fname}: missing")
+            continue
+        try:
+            a = np.load(fpath, mmap_mode="r")
+        except (OSError, ValueError) as e:
+            rep.problems.append(f"{fname}: unreadable ({e})")
+            continue
+        rep.arrays += 1
+        want = expected_dtypes.get(fname)
+        if want is not None and a.dtype != want:
+            rep.problems.append(f"{fname}: dtype {a.dtype}, expected "
+                                f"{np.dtype(want)}")
+            continue
+        rec = checksums.get(fname)
+        if rec is None:
+            continue
+        got = _checksum_record(a)
+        if list(a.shape) != list(rec.get("shape", [])) or \
+                got["crc"] != rec.get("crc"):
+            rep.problems.append(
+                f"{fname}: checksum mismatch (crc {got['crc']} != "
+                f"recorded {rec.get('crc')})")
+        else:
+            rep.checksummed += 1
+    # a checksummed file the manifest knows but we didn't require above
+    # (e.g. stray entry) — verify it too so tampering can't hide there
+    for fname in checksums:
+        if fname not in required and not (root / fname).exists():
+            rep.problems.append(f"{fname}: checksummed file missing")
+    return rep
+
+
+def _generation_entries(root: Path) -> list:
+    """(gen, dir, committed) for the flat root and every version dir."""
+    out = []
+    if (root / "manifest.json").exists():
+        out.append((0, root, True))
+    for p in sorted(root.glob("v[0-9][0-9][0-9][0-9][0-9][0-9]")):
+        out.append((int(p.name[1:]), p, (p / "manifest.json").exists()))
+    return out
+
+
+def verify_store(root) -> dict:
+    """Verify a whole store tree: the serving chain, every committed
+    generation, aborted dirs, and quarantine.  Returns a JSON-ready dict;
+    ``ok`` means the serving chain and all committed, non-quarantined
+    generations verify."""
+    root = Path(root)
+    pointer = _read_pointer(root)
+    serving_gen = current_generation(root)
+    out = {"root": str(root), "pointer": pointer,
+           "serving_generation": serving_gen, "generations": [],
+           "quarantined": [], "ok": True}
+    seen_serving = False
+    for gen, gdir, committed in _generation_entries(root):
+        role = "serving" if gen == serving_gen else "retained"
+        if not committed:
+            out["generations"].append(
+                {"path": str(gdir), "generation": gen, "role": "aborted",
+                 "ok": False, "committed": False, "arrays": 0,
+                 "checksummed": 0, "problems": ["no manifest (aborted)"]})
+            continue
+        rep = verify_generation(gdir).to_dict()
+        rep.update(generation=gen, role=role)
+        out["generations"].append(rep)
+        if not rep["ok"]:
+            out["ok"] = False
+        if gen == serving_gen:
+            seen_serving = True
+    if not seen_serving:
+        out["ok"] = False
+        out["generations"].append(
+            {"path": str(root / (pointer or "")), "generation": serving_gen,
+             "role": "serving", "ok": False, "committed": False, "arrays": 0,
+             "checksummed": 0,
+             "problems": [f"{CURRENT_POINTER} names {pointer!r} but no such "
+                          "committed generation exists"]})
+    qdir = root / QUARANTINE_DIR
+    if qdir.is_dir():
+        for p in sorted(qdir.iterdir()):
+            rep = verify_generation(p).to_dict()
+            rep["role"] = "quarantined"
+            out["quarantined"].append(rep)
+    return out
+
+
+def quarantine_generation(root, name: str) -> Path:
+    """Move version dir ``name`` into ``quarantine/`` (rename, never
+    delete) and return its new path.  Name collisions get a ``.k`` suffix."""
+    root = Path(root)
+    qdir = root / QUARANTINE_DIR
+    qdir.mkdir(exist_ok=True)
+    dst = qdir / name
+    k = 0
+    while dst.exists():
+        k += 1
+        dst = qdir / f"{name}.{k}"
+    fsio.replace(root / name, dst, site="store.quarantine")
+    _COUNTERS["quarantined_generations"] += 1
+    return dst
+
+
+def resolve_verified(root) -> Path:
+    """:func:`resolve_store` plus integrity checking and recovery.
+
+    Verifies the directory the pointer names.  On failure the corrupt
+    generation is quarantined and the pointer falls back to the newest
+    retained generation that verifies (or deleted to serve a verifying
+    flat root).  Raises ``ValueError`` only when *nothing* verifies —
+    a corrupted promotion otherwise degrades to serving older data.
+    """
+    root = Path(root)
+    name = _read_pointer(root)
+    target = root if name is None else root / name
+    rep = verify_generation(target)
+    if rep.ok:
+        return target
+    _COUNTERS["verify_failures"] += 1
+    if name is None:
+        raise ValueError(f"{root}: store fails verification and no older "
+                         f"generation remains: {rep.problems}")
+    if target.exists():
+        quarantine_generation(root, name)
+    # fall back: newest committed generation that verifies, else flat root
+    for gen, gdir, committed in sorted(_generation_entries(root),
+                                       reverse=True):
+        if not committed or gdir == target:
+            continue
+        if gen == 0:
+            if verify_generation(root).ok:
+                fsio.unlink(root / CURRENT_POINTER,
+                            site="store.recover.pointer", missing_ok=True)
+                _COUNTERS["recovered_fallbacks"] += 1
+                return root
+            continue
+        if verify_generation(gdir).ok:
+            promote_generation(root, gen)
+            _COUNTERS["recovered_fallbacks"] += 1
+            return gdir
+    raise ValueError(
+        f"{root}: serving generation {name!r} failed verification "
+        f"({rep.problems}) and no retained generation verifies; the "
+        f"corrupt index was moved to {QUARANTINE_DIR}/")
+
+
+def prune_generations(root, keep: int = 2, *,
+                      keep_quarantined: bool = True) -> list:
+    """Reclaim superseded version directories; returns the removed paths.
+
+    Keeps the serving generation, the newest ``keep`` committed
+    generations (rollback targets), and the flat root (generation 0 is
+    never removed).  Aborted manifest-less dirs numbered at or below the
+    serving generation are stale retries and are removed too.  Removal is
+    crash-safe: the manifest is unlinked first (demoting the dir to
+    "aborted"), so a crash mid-``rmtree`` leaves debris a later prune
+    reclaims, never a half-valid generation.  Quarantined generations are
+    untouched unless ``keep_quarantined=False`` discards the whole
+    quarantine.  Callers must size ``keep`` so no running reader still
+    maps a pruned generation.
+    """
+    root = Path(root)
+    serving = current_generation(root)
+    committed = [g for g, _, c in _generation_entries(root) if c and g > 0]
+    keep_set = set(sorted(committed, reverse=True)[:max(0, keep)]) | {serving}
+    removed = []
+    for gen, gdir, is_committed in _generation_entries(root):
+        if gen == 0 or gen in keep_set:
+            continue
+        if not is_committed and gen > serving:
+            continue        # in-flight compaction target: leave it alone
+        if is_committed:
+            fsio.unlink(gdir / "manifest.json", site="store.prune.retire")
+        fsio.rmtree(gdir, site="store.prune")
+        removed.append(gdir)
+    qdir = root / QUARANTINE_DIR
+    if not keep_quarantined and qdir.is_dir():
+        fsio.rmtree(qdir, site="store.prune.quarantine")
+        removed.append(qdir)
+    return removed
+
+
+def load_index(path, *, mmap: bool = True, scheme=None, verify: bool = True):
     """Load a store directory back into a ``SearchIndex``.
 
     ``mmap=True`` maps every table array with ``np.load(mmap_mode="r")``
@@ -289,9 +593,13 @@ def load_index(path, *, mmap: bool = True, scheme=None):
     ``scheme`` overrides manifest reconstruction when the caller already
     holds the (identical) hash family — the sharded fan-out shares one
     scheme object across shards so sketches are computed once.
+    ``verify=True`` resolves through :func:`resolve_verified` (checksum
+    check + quarantine fallback — load-time only, the query hot path is
+    untouched); builders re-loading a store they just wrote pass
+    ``verify=False``.
     """
     from .search import SearchIndex
-    root = resolve_store(path)
+    root = resolve_verified(path) if verify else resolve_store(path)
     manifest = read_manifest(root)
     if scheme is None:
         if manifest["scheme"] is None:

@@ -1,0 +1,246 @@
+"""``repro.fault`` — deterministic, seeded fault injection for durable I/O.
+
+Every store/checkpoint filesystem mutation in this repo routes through
+:mod:`repro.fault.fsio` (enforced by static-analysis rule RPR203).  Each
+fsio helper names its call *site* (``"store.writer.manifest"``,
+``"ckpt.shards"``, ...) and calls :func:`checkpoint` before mutating
+anything.  A :class:`FaultPlan` armed via the ``REPRO_FAULT_PLAN``
+environment variable (JSON, read once at import — the same zero-overhead
+pattern as ``REPRO_THREAD_GUARD`` in :mod:`repro.core.guard`) or
+programmatically via :func:`arm` turns chosen checkpoints into:
+
+* ``error``        raise :class:`FaultInjected` (an ``OSError``) before the op
+* ``torn``         write roughly half the bytes, then raise (fsio ops only)
+* ``crash``        ``os._exit`` *before* the op — a hard ``kill -9``
+* ``crash_after``  ``os._exit`` after the op durably completed
+* ``slow``         sleep ``delay_s`` before the op (serve-path latency tests)
+
+Triggers select sites by ``fnmatch`` glob and fire on the ``hit``-th
+matching occurrence (1-based); ``sticky`` triggers keep firing from that
+occurrence on.  When nothing is armed, :func:`checkpoint` is two global
+``None`` checks — the serving hot path never pays for this module.
+
+:func:`record_sites` enumerates the (site, occurrence) stream of a
+workload so chaos harnesses can build exhaustive fault schedules, and
+:func:`stats` exposes injection counters for ``/metrics``.
+"""
+
+from __future__ import annotations
+
+import fnmatch
+import json
+import os
+import threading
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+ENV_VAR = "REPRO_FAULT_PLAN"
+
+#: exit code used by ``crash``/``crash_after`` triggers (distinct from
+#: common signal codes so harnesses can tell an injected crash from a
+#: genuine SIGKILL/SIGSEGV)
+FAULT_EXIT = 87
+
+
+class FaultInjected(OSError):
+    """An error injected by the armed :class:`FaultPlan`.
+
+    Subclasses ``OSError`` so injected faults exercise exactly the
+    ``except OSError`` paths a real disk failure would.
+    """
+
+    def __init__(self, site: str, hit: int, mode: str):
+        super().__init__(f"injected {mode} fault at {site!r} (occurrence {hit})")
+        self.site = site
+        self.hit = hit
+        self.mode = mode
+
+
+_MODES = ("error", "torn", "crash", "crash_after", "slow")
+
+
+@dataclass(frozen=True)
+class Trigger:
+    """One scheduled fault: fire ``mode`` on the ``hit``-th occurrence of
+    any site matching the ``site`` glob (every occurrence from ``hit`` on
+    when ``sticky``)."""
+
+    site: str
+    hit: int = 1
+    mode: str = "error"
+    sticky: bool = False
+    delay_s: float = 0.05
+    exit_code: int = FAULT_EXIT
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(f"unknown fault mode {self.mode!r}; expected one of {_MODES}")
+        if self.hit < 1:
+            raise ValueError("hit is 1-based and must be >= 1")
+
+    def to_dict(self) -> dict:
+        return {"site": self.site, "hit": self.hit, "mode": self.mode,
+                "sticky": self.sticky, "delay_s": self.delay_s,
+                "exit_code": self.exit_code}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Trigger":
+        return cls(**d)
+
+
+@dataclass
+class FaultPlan:
+    """A seeded, deterministic schedule of :class:`Trigger`s."""
+
+    triggers: list = field(default_factory=list)
+    seed: int = 0
+
+    def to_json(self) -> str:
+        return json.dumps({"seed": self.seed,
+                           "triggers": [t.to_dict() for t in self.triggers]})
+
+    @classmethod
+    def from_json(cls, text: str) -> "FaultPlan":
+        d = json.loads(text)
+        return cls(seed=int(d.get("seed", 0)),
+                   triggers=[Trigger.from_dict(t) for t in d.get("triggers", [])])
+
+
+# -- armed state --------------------------------------------------------------
+#
+# Module-level, guarded by _LOCK on the slow path only.  ``checkpoint``
+# early-returns on two plain global reads when nothing is armed.
+
+_LOCK = threading.Lock()
+_PLAN: FaultPlan | None = None
+_HITS: list[int] | None = None      # per-trigger occurrence counters
+_RECORDER: list | None = None       # (site, occurrence) stream when recording
+_REC_COUNTS: dict | None = None
+_STATS = {"checkpoints": 0, "injected": 0,
+          "by_mode": {m: 0 for m in _MODES}}
+
+
+def arm(plan: FaultPlan) -> None:
+    """Arm ``plan``: subsequent checkpoints consult it.  Resets hit counts."""
+    global _PLAN, _HITS
+    with _LOCK:
+        _PLAN = plan
+        _HITS = [0] * len(plan.triggers)
+
+
+def disarm() -> None:
+    global _PLAN, _HITS
+    with _LOCK:
+        _PLAN = None
+        _HITS = None
+
+
+def active_plan() -> FaultPlan | None:
+    return _PLAN
+
+
+@contextmanager
+def armed(plan: FaultPlan):
+    """``with fault.armed(plan): ...`` — arm for the block, always disarm."""
+    arm(plan)
+    try:
+        yield plan
+    finally:
+        disarm()
+
+
+@contextmanager
+def record_sites():
+    """Record every checkpoint as ``(site, occurrence)`` (1-based per site).
+
+    Yields the list being filled; used to enumerate a workload's fault
+    sites so a chaos schedule can cover all of them.
+    """
+    global _RECORDER, _REC_COUNTS
+    out: list = []
+    with _LOCK:
+        _RECORDER = out
+        _REC_COUNTS = {}
+    try:
+        yield out
+    finally:
+        with _LOCK:
+            _RECORDER = None
+            _REC_COUNTS = None
+
+
+def stats() -> dict:
+    """Injection counters (merged into the serve ``/metrics`` snapshot)."""
+    with _LOCK:
+        return {"armed": _PLAN is not None,
+                "checkpoints": _STATS["checkpoints"],
+                "injected": _STATS["injected"],
+                "by_mode": dict(_STATS["by_mode"])}
+
+
+def reset_stats() -> None:
+    with _LOCK:
+        _STATS["checkpoints"] = 0
+        _STATS["injected"] = 0
+        for m in _MODES:
+            _STATS["by_mode"][m] = 0
+
+
+def checkpoint(site: str) -> Trigger | None:
+    """The hot entry: called by every fsio helper (and the serve-path
+    injection hooks) with its site name.
+
+    Handles ``error`` (raises), ``crash`` (``os._exit``), and ``slow``
+    (sleeps) itself.  ``torn`` and ``crash_after`` need cooperation from
+    the mutation in progress, so the matched trigger is *returned* for
+    the fsio caller to execute mid-op; non-fsio callers may ignore it.
+    Returns ``None`` when nothing fires.
+    """
+    if _PLAN is None and _RECORDER is None:
+        return None
+    return _checkpoint_slow(site)
+
+
+def _checkpoint_slow(site: str) -> Trigger | None:
+    with _LOCK:
+        if _RECORDER is not None:
+            n = _REC_COUNTS.get(site, 0) + 1
+            _REC_COUNTS[site] = n
+            _RECORDER.append((site, n))
+        plan, hits = _PLAN, _HITS
+        if plan is None:
+            return None
+        _STATS["checkpoints"] += 1
+        fired = None
+        for i, trig in enumerate(plan.triggers):
+            if not fnmatch.fnmatchcase(site, trig.site):
+                continue
+            hits[i] += 1
+            if hits[i] == trig.hit or (trig.sticky and hits[i] > trig.hit):
+                fired = (trig, hits[i])
+                break
+        if fired is None:
+            return None
+        trig, occurrence = fired
+        _STATS["injected"] += 1
+        _STATS["by_mode"][trig.mode] += 1
+    if trig.mode == "error":
+        raise FaultInjected(site, occurrence, "error")
+    if trig.mode == "crash":
+        os._exit(trig.exit_code)
+    if trig.mode == "slow":
+        time.sleep(trig.delay_s)
+        return None
+    # torn / crash_after: the caller performs the partial write / the
+    # post-op exit
+    return trig
+
+
+def _arm_from_env() -> None:
+    spec = os.environ.get(ENV_VAR, "")
+    if spec:
+        arm(FaultPlan.from_json(spec))
+
+
+_arm_from_env()

@@ -1,0 +1,107 @@
+"""Site-tagged durable-mutation helpers — the only sanctioned way for
+store/checkpoint code to touch the filesystem (static-analysis rule
+RPR203 flags bypasses).
+
+Each helper names its fault *site* and runs :func:`repro.fault.checkpoint`
+first, so an armed :class:`~repro.fault.FaultPlan` can turn the mutation
+into an injected ``OSError``, a torn (half-length) write, or a hard
+``os._exit`` crash either side of the op.  ``commit_text``/``commit_bytes``
+are the atomic-publish primitives (write ``<name>.tmp``, then rename over
+the destination) and expose *two* checkpoints — ``<site>.tmp_write`` and
+``<site>.rename`` — so crash schedules can land between staging and
+publication.
+
+When no plan is armed every helper degrades to the plain
+``pathlib``/``numpy``/``shutil`` call it wraps.
+"""
+
+from __future__ import annotations
+
+import io
+import os
+import shutil
+from pathlib import Path
+
+import numpy as np
+
+from . import FaultInjected, Trigger, checkpoint
+
+
+def _post(trig: Trigger | None) -> None:
+    if trig is not None and trig.mode == "crash_after":
+        os._exit(trig.exit_code)
+
+
+def _torn(path: Path, data: bytes, trig: Trigger) -> None:
+    """Write roughly the first half of ``data`` and raise — a torn write."""
+    path.write_bytes(data[: max(1, len(data) // 2)])
+    raise FaultInjected(trig.site, trig.hit, "torn")
+
+
+def write_bytes(path, data: bytes, *, site: str) -> None:
+    path = Path(path)
+    trig = checkpoint(site)
+    if trig is not None and trig.mode == "torn":
+        _torn(path, data, trig)
+    path.write_bytes(data)
+    _post(trig)
+
+
+def write_text(path, text: str, *, site: str) -> None:
+    write_bytes(path, text.encode("utf-8"), site=site)
+
+
+def np_save(path, arr, *, site: str) -> None:
+    path = Path(path)
+    trig = checkpoint(site)
+    if trig is not None and trig.mode == "torn":
+        buf = io.BytesIO()
+        np.save(buf, arr)
+        _torn(path, buf.getvalue(), trig)
+    np.save(path, arr)
+    _post(trig)
+
+
+def np_savez(path, *, site: str, **arrays) -> None:
+    path = Path(path)
+    trig = checkpoint(site)
+    if trig is not None and trig.mode == "torn":
+        buf = io.BytesIO()
+        np.savez(buf, **arrays)
+        _torn(path, buf.getvalue(), trig)
+    np.savez(path, **arrays)
+    _post(trig)
+
+
+def replace(src, dst, *, site: str) -> None:
+    """Atomic rename ``src`` over ``dst`` (``os.replace`` semantics)."""
+    trig = checkpoint(site)
+    Path(src).replace(dst)
+    _post(trig)
+
+
+def commit_text(path, text: str, *, site: str) -> None:
+    """Atomically publish ``text`` at ``path`` via tmp-stage + rename."""
+    path = Path(path)
+    tmp = path.with_name(path.name + ".tmp")
+    write_text(tmp, text, site=site + ".tmp_write")
+    replace(tmp, path, site=site + ".rename")
+
+
+def commit_bytes(path, data: bytes, *, site: str) -> None:
+    path = Path(path)
+    tmp = path.with_name(path.name + ".tmp")
+    write_bytes(tmp, data, site=site + ".tmp_write")
+    replace(tmp, path, site=site + ".rename")
+
+
+def unlink(path, *, site: str, missing_ok: bool = False) -> None:
+    trig = checkpoint(site)
+    Path(path).unlink(missing_ok=missing_ok)
+    _post(trig)
+
+
+def rmtree(path, *, site: str, ignore_errors: bool = False) -> None:
+    trig = checkpoint(site)
+    shutil.rmtree(path, ignore_errors=ignore_errors)
+    _post(trig)

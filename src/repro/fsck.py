@@ -1,0 +1,131 @@
+"""Store integrity checker: ``python -m repro.fsck [store_dir ...]``.
+
+Walks each argument and verifies every index store it finds against the
+per-array CRC32 checksums recorded in the manifests
+(:func:`repro.core.store.verify_store`):
+
+* a plain store root (flat layout or versioned generations) is checked
+  directly — serving chain, retained generations, aborted dirs, and
+  anything already in ``quarantine/``;
+* a sharded save root (``meta.json`` + ``shard_{s}/`` dirs,
+  :meth:`ShardedAlignmentIndex.save`) is expanded into one check per
+  shard store;
+* any other directory is scanned one level deep for store roots, so
+  pointing fsck at a results/ or tmp tree checks everything inside.
+
+Exit status is 1 iff any *committed, non-quarantined* generation fails —
+aborted write dirs and already-quarantined generations are reported but
+are expected debris, not corruption.  ``--format json`` emits the full
+per-generation reports for CI artifacts.
+
+fsck only reads; it never quarantines or repairs.  Recovery happens on
+load (:func:`repro.core.store.resolve_verified`).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .core import store as index_store
+
+
+def _is_store_root(path: Path) -> bool:
+    if not path.is_dir():
+        return False
+    if (path / "manifest.json").exists():
+        return True
+    if (path / index_store.CURRENT_POINTER).exists():
+        return True
+    return any(path.glob("v[0-9][0-9][0-9][0-9][0-9][0-9]/manifest.json"))
+
+
+def _is_sharded_root(path: Path) -> bool:
+    return ((path / "meta.json").exists()
+            and any(p.is_dir() for p in path.glob("shard_*")))
+
+
+def discover_stores(path) -> list[Path]:
+    """Expand one CLI argument into the store roots to verify."""
+    path = Path(path)
+    if _is_sharded_root(path):
+        return sorted(p for p in path.glob("shard_*") if _is_store_root(p))
+    if _is_store_root(path):
+        return [path]
+    if path.is_dir():
+        found = []
+        for child in sorted(path.iterdir()):
+            if _is_sharded_root(child):
+                found.extend(sorted(p for p in child.glob("shard_*")
+                                    if _is_store_root(p)))
+            elif _is_store_root(child):
+                found.append(child)
+        return found
+    return []
+
+
+def check_store(root) -> dict:
+    """Verify one store root; returns the ``verify_store`` report."""
+    return index_store.verify_store(root)
+
+
+def check_paths(paths) -> dict:
+    """Verify every store found under ``paths``.  Returns
+    ``{"stores": [report...], "checked": n, "ok": bool}`` where ``ok``
+    follows the per-store ``ok`` (serving chain + committed gens)."""
+    reports = []
+    for arg in paths:
+        for root in discover_stores(arg):
+            reports.append(check_store(root))
+    return {"stores": reports, "checked": len(reports),
+            "ok": all(r["ok"] for r in reports)}
+
+
+def render_text(result: dict) -> str:
+    lines = []
+    for rep in result["stores"]:
+        status = "ok" if rep["ok"] else "FAILED"
+        lines.append(f"{rep['root']}: {status} "
+                     f"(serving generation {rep['serving_generation']})")
+        for g in rep["generations"]:
+            mark = "ok" if g["ok"] else (
+                "aborted" if g["role"] == "aborted" else "FAILED")
+            lines.append(f"  gen {g['generation']} [{g['role']}] {mark}  "
+                         f"{g['checksummed']}/{g['arrays']} arrays "
+                         "checksummed")
+            for p in g["problems"]:
+                lines.append(f"    - {p}")
+        for g in rep["quarantined"]:
+            lines.append(f"  quarantined {Path(g['path']).name}: "
+                         f"{len(g['problems'])} problem(s)")
+    lines.append(f"{result['checked']} store(s) checked: "
+                 + ("all ok" if result["ok"] else "FAILURES found"))
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.fsck",
+        description="verify index store checksums (manifest CRC32s vs the "
+                    "array files on disk)")
+    ap.add_argument("paths", nargs="+",
+                    help="store roots, sharded save roots, or directories "
+                         "to scan one level deep")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    args = ap.parse_args(argv)
+
+    result = check_paths(args.paths)
+    if args.format == "json":
+        print(json.dumps(result, indent=2))
+    else:
+        print(render_text(result))
+    if not result["checked"]:
+        print("no stores found", file=sys.stderr)
+        return 2
+    return 0 if result["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

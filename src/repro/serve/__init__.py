@@ -34,7 +34,8 @@ from .app import AlignServer
 from .batcher import DeadlineExceeded, DynamicBatcher, QueueFull
 from .client import AlignClient, AsyncAlignClient
 from .metrics import ServeMetrics
+from .supervisor import CompactionSupervisor
 
 __all__ = ["AlignServer", "DynamicBatcher", "ServeMetrics",
            "AlignClient", "AsyncAlignClient", "QueueFull",
-           "DeadlineExceeded"]
+           "DeadlineExceeded", "CompactionSupervisor"]

@@ -31,19 +31,40 @@ def main(argv=None) -> None:
                     help="max micro-batch linger in microseconds")
     ap.add_argument("--queue-cap", type=int, default=256,
                     help="in-flight request cap; beyond it requests get 503")
+    ap.add_argument("--auto-compact", action="store_true",
+                    help="run a CompactionSupervisor: background "
+                         "seal/merge/promote when the delta grows or ages "
+                         "past the thresholds below (live stores only)")
+    ap.add_argument("--compact-fraction", type=float, default=0.25,
+                    help="compact when delta docs exceed this fraction of "
+                         "the total (default 0.25)")
+    ap.add_argument("--compact-age-s", type=float, default=30.0,
+                    help="compact when the oldest delta doc is this old "
+                         "(default 30s)")
+    ap.add_argument("--prune-keep", type=int, default=2,
+                    help="superseded store generations to retain after each "
+                         "background compaction (default 2)")
     args = ap.parse_args(argv)
 
     from repro.api import Aligner
-    from repro.serve import AlignServer
+    from repro.serve import AlignServer, CompactionSupervisor
 
     aligner = Aligner.load(args.store, mmap=not args.no_mmap, live=args.live)
     print(f"serving {aligner!r}")
+
+    supervisor = None
+    if args.auto_compact:
+        supervisor = CompactionSupervisor(
+            max_delta_fraction=args.compact_fraction,
+            max_delta_age_s=args.compact_age_s,
+            prune_keep=args.prune_keep)
 
     async def run():
         server = AlignServer(aligner, host=args.host, port=args.port,
                              max_batch=args.max_batch,
                              max_linger_us=args.linger_us,
-                             queue_cap=args.queue_cap)
+                             queue_cap=args.queue_cap,
+                             supervisor=supervisor)
         await server.start()
         print(f"listening on http://{server.host}:{server.port} "
               f"(endpoints: /query /add /compact /metrics /healthz /ws)")

@@ -36,8 +36,10 @@ import hashlib
 import json
 import struct
 
+from .. import fault
 from ..core.live import LiveIndex
 from ..core.sharded_index import ShardedAlignmentIndex
+from ..core.store import store_counters
 from .batcher import DeadlineExceeded, DynamicBatcher, QueueFull
 from .metrics import ServeMetrics
 from .protocol import (ProtocolError, error_response, ok_response,
@@ -55,7 +57,8 @@ class AlignServer:
 
     def __init__(self, aligner, *, host: str = "127.0.0.1", port: int = 0,
                  max_batch: int = 32, max_linger_us: float = 2000.0,
-                 queue_cap: int = 256):
+                 queue_cap: int = 256, retry_after_s: float = 1.0,
+                 supervisor=None):
         self.aligner = aligner
         self.host = host
         self.port = port
@@ -64,8 +67,16 @@ class AlignServer:
                                       max_linger_us=max_linger_us,
                                       queue_cap=queue_cap,
                                       metrics=self.metrics)
+        # advisory Retry-After on admission-control 503s (seconds)
+        self.retry_after_s = retry_after_s
+        # optional CompactionSupervisor (serve.supervisor); started and
+        # stopped with the server's own lifecycle
+        self.supervisor = supervisor
         self._server: asyncio.AbstractServer | None = None
         self._compacting = False
+        # shard ids the most recent degraded fan-out skipped (empty while
+        # healthy); drives the /healthz healthy|degraded status
+        self._last_failed_shards: tuple = ()
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -74,9 +85,14 @@ class AlignServer:
         self._server = await asyncio.start_server(self._handle_conn,
                                                   self.host, self.port)
         self.port = self._server.sockets[0].getsockname()[1]
+        if self.supervisor is not None:
+            self.supervisor.bind(self)
+            self.supervisor.start()
         return self
 
     async def close(self) -> None:
+        if self.supervisor is not None:
+            await self.supervisor.close()
         if self._server is not None:
             self._server.close()
             await self._server.wait_closed()
@@ -126,6 +142,11 @@ class AlignServer:
             raise
         except Exception as e:                      # noqa: BLE001
             return err(f"{type(e).__name__}: {e}", 500)
+        if result.degraded:
+            self.metrics.inc("degraded_total")
+            self._last_failed_shards = tuple(result.failed_shards)
+        else:
+            self._last_failed_shards = ()
         payload = {"result": result.to_dict()}
         if req.id is not None:
             payload["id"] = req.id
@@ -201,10 +222,14 @@ class AlignServer:
     def _healthz(self) -> bytes:
         idx = self.aligner._index
         gen = getattr(idx, "generation", None)
-        return ok_response({"docs": self.aligner.num_docs,
+        degraded = bool(self._last_failed_shards) or \
+            (self.supervisor is not None and self.supervisor.failing)
+        return ok_response({"status": "degraded" if degraded else "healthy",
+                            "docs": self.aligner.num_docs,
                             "generation": gen,
                             "live": isinstance(idx, LiveIndex),
-                            "compacting": self._compacting})
+                            "compacting": self._compacting,
+                            "failed_shards": list(self._last_failed_shards)})
 
     # -- HTTP plumbing -------------------------------------------------------
 
@@ -222,7 +247,9 @@ class AlignServer:
                     break
                 status, payload = await self._route(method, path, body)
                 close = headers.get("connection", "").lower() == "close"
-                writer.write(_http_response(status, payload, close=close))
+                retry_after = self.retry_after_s if status == 503 else None
+                writer.write(_http_response(status, payload, close=close,
+                                            retry_after_s=retry_after))
                 await writer.drain()
                 if close:
                     break
@@ -245,7 +272,10 @@ class AlignServer:
         if path == "/compact" and method == "POST":
             return await self.handle_compact()
         if path == "/metrics" and method == "GET":
-            return 200, json.dumps(self.metrics.snapshot()).encode()
+            snap = self.metrics.snapshot()
+            snap["fault"] = fault.stats()
+            snap["store"] = store_counters()
+            return 200, json.dumps(snap).encode()
         if path == "/healthz" and method == "GET":
             return 200, self._healthz()
         if path in ("/query", "/add", "/compact", "/metrics", "/healthz"):
@@ -332,12 +362,16 @@ class AlignServer:
                 t.cancel()
 
 
-def _http_response(status: int, body: bytes, *, close: bool = False
-                   ) -> bytes:
+def _http_response(status: int, body: bytes, *, close: bool = False,
+                   retry_after_s: float | None = None) -> bytes:
     head = (f"HTTP/1.1 {status} {_REASONS.get(status, 'Unknown')}\r\n"
             "Content-Type: application/json\r\n"
-            f"Content-Length: {len(body)}\r\n"
-            f"Connection: {'close' if close else 'keep-alive'}\r\n\r\n")
+            f"Content-Length: {len(body)}\r\n")
+    if retry_after_s is not None:
+        # advisory backoff for admission-control 503s (RFC 9110 §10.2.3;
+        # delta-seconds form, fractional values are tolerated by our client)
+        head += f"Retry-After: {retry_after_s:g}\r\n"
+    head += f"Connection: {'close' if close else 'keep-alive'}\r\n\r\n"
     return head.encode("latin-1") + body
 
 

@@ -41,6 +41,7 @@ from concurrent.futures import ThreadPoolExecutor
 from ..core import guard
 from ..core.guard import engine_only
 from ..core.results import QueryOptions
+from ..fault import checkpoint as fault_checkpoint
 from .metrics import ServeMetrics
 
 
@@ -262,6 +263,10 @@ class DynamicBatcher:
     def _probe(self, live: list, stage: dict):
         """Engine-thread body: ONE ``find_batch`` over the coalesced
         queries (all share theta and an options batch key)."""
+        # serve-path injection hook: an armed FaultPlan can slow this
+        # batch (latency testing) or raise (exercising the 500 path); a
+        # no-op two-checks guard when nothing is armed
+        fault_checkpoint("serve.batcher.probe")
         return self.aligner.find_batch(
             [q.tokens for q in live], live[0].theta,
             options=live[0].options, stage_times=stage)

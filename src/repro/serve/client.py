@@ -19,7 +19,9 @@ import http.client
 import itertools
 import json
 import os
+import random
 import struct
+import time
 
 from .app import _WS_GUID, _ws_read_frame
 
@@ -50,11 +52,23 @@ def _query_body(text, theta, options=None, deadline_ms=None, id=None
 
 
 class AlignClient:
-    """Blocking client over one keep-alive HTTP connection."""
+    """Blocking client over one keep-alive HTTP connection.
+
+    ``retries`` (default 0 — off) arms bounded retry with exponential
+    backoff + jitter for **queries only**: a 503 (admission control
+    shedding load, honoring its ``Retry-After`` hint) or a dropped
+    connection (server restart) is retried up to ``retries`` times.
+    ``add``/``compact`` are never retried — they are not idempotent, and
+    a connection lost mid-request leaves their effect unknown.
+    """
 
     def __init__(self, host: str = "127.0.0.1", port: int = 0,
-                 timeout: float = 30.0):
+                 timeout: float = 30.0, retries: int = 0,
+                 backoff_s: float = 0.1, backoff_max_s: float = 2.0):
         self._conn = http.client.HTTPConnection(host, port, timeout=timeout)
+        self.retries = retries
+        self.backoff_s = backoff_s
+        self.backoff_max_s = backoff_max_s
 
     def close(self) -> None:
         self._conn.close()
@@ -65,24 +79,56 @@ class AlignClient:
     def __exit__(self, *exc) -> None:
         self.close()
 
-    def _request(self, method: str, path: str, body: dict | None = None
-                 ) -> tuple[int, dict]:
+    def _request_full(self, method: str, path: str,
+                      body: dict | None = None
+                      ) -> tuple[int, dict, dict]:
         payload = json.dumps(body).encode() if body is not None else b""
         self._conn.request(method, path, body=payload,
                            headers={"Content-Type": "application/json"})
         resp = self._conn.getresponse()
-        return resp.status, json.loads(resp.read())
+        headers = {k.lower(): v for k, v in resp.getheaders()}
+        return resp.status, json.loads(resp.read()), headers
+
+    def _request(self, method: str, path: str, body: dict | None = None
+                 ) -> tuple[int, dict]:
+        status, payload, _ = self._request_full(method, path, body)
+        return status, payload
 
     def query(self, text, theta: float, *, options=None, deadline_ms=None
               ) -> dict:
         """Returns the response's ``result`` dict
         (``QueryResult.to_dict()`` shape — rebuild with
         ``QueryResult.from_dict`` if you want the typed object)."""
-        status, payload = self._request(
-            "POST", "/query", _query_body(text, theta, options=options,
-                                          deadline_ms=deadline_ms))
-        _raise_for(status, payload)
-        return payload["result"]
+        body = _query_body(text, theta, options=options,
+                           deadline_ms=deadline_ms)
+        for attempt in range(self.retries + 1):
+            retry_after = None
+            try:
+                status, payload, headers = self._request_full(
+                    "POST", "/query", body)
+            except ConnectionError:
+                # reset/refused/broken-pipe, including http.client's
+                # RemoteDisconnected (a ConnectionResetError): reset the
+                # keep-alive connection so the retry reconnects clean
+                if attempt >= self.retries:
+                    raise
+                self._conn.close()
+            else:
+                if status != 503 or attempt >= self.retries:
+                    _raise_for(status, payload)
+                    return payload["result"]
+                ra = headers.get("retry-after")
+                if ra is not None:
+                    try:
+                        retry_after = float(ra)
+                    except ValueError:
+                        retry_after = None
+            delay = min(self.backoff_max_s, self.backoff_s * 2 ** attempt)
+            delay *= 0.5 + 0.5 * random.random()    # full-jitter half-band
+            if retry_after is not None:
+                delay = max(delay, min(retry_after, self.backoff_max_s))
+            time.sleep(delay)
+        raise AssertionError("unreachable")  # loop returns or raises
 
     def add(self, text) -> int:
         status, payload = self._request(

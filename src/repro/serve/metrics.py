@@ -77,6 +77,11 @@ class ServeMetrics:
             "adds_total": 0,
             "compactions_total": 0,
             "batches_total": 0,        # find_batch calls issued
+            "degraded_total": 0,       # partial (shard-skipping) responses
+            "supervisor_compactions_total": 0,
+            "supervisor_retries_total": 0,   # failed background attempts
+            "supervisor_failures_total": 0,  # gave up past max_retries
+            "pruned_generations_total": 0,   # store dirs reclaimed
         }
         self.latency = Histogram()         # enqueue -> response, seconds
         self.queue_wait = Histogram()      # enqueue -> batch dispatch

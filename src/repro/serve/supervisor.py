@@ -1,0 +1,150 @@
+"""Background compaction policy: the robustness half of "make compaction
+automatic" (ROADMAP item 3).
+
+A :class:`CompactionSupervisor` watches the served index's
+``delta_fraction`` / delta age and, when a threshold trips, runs the same
+graceful seal → off-band merge → promote sequence as ``POST /compact``
+(:meth:`AlignServer.compact`) — traffic never pauses.  After each
+successful compaction it prunes superseded store generations
+(:func:`repro.core.store.prune_generations`; quarantine is never touched).
+
+Failure is expected, not exceptional: a failed attempt (e.g. an injected
+or real ``OSError`` mid-merge) is retried with exponential backoff; after
+``max_retries`` consecutive failures the supervisor rolls the seal back
+(:meth:`LiveIndex.unseal_delta` — queries were never wrong either way,
+the sealed level keeps serving) and reports itself failing, which flips
+``/healthz`` to ``degraded`` until an attempt succeeds again.  Counters
+(``supervisor_compactions_total`` / ``supervisor_retries_total`` /
+``supervisor_failures_total`` / ``pruned_generations_total``) land in the
+``/metrics`` snapshot.
+"""
+
+from __future__ import annotations
+
+import asyncio
+
+from ..core.live import LiveIndex
+from ..core.sharded_index import ShardedAlignmentIndex
+from ..core.store import prune_generations
+
+
+class CompactionSupervisor:
+    """Threshold-driven background compaction with retry and rollback.
+
+    Construct it, pass it to ``AlignServer(supervisor=...)``, and the
+    server starts/stops it with its own lifecycle.  All index state is
+    read through the server's batcher dispatchers, so the engine-affinity
+    contract (RPR101 / ``REPRO_THREAD_GUARD``) holds.
+    """
+
+    def __init__(self, *, max_delta_fraction: float = 0.25,
+                 max_delta_age_s: float = 30.0, interval_s: float = 1.0,
+                 max_retries: int = 5, backoff_base_s: float = 0.5,
+                 backoff_max_s: float = 30.0, prune_keep: int = 2):
+        self.max_delta_fraction = max_delta_fraction
+        self.max_delta_age_s = max_delta_age_s
+        self.interval_s = interval_s
+        self.max_retries = max_retries
+        self.backoff_base_s = backoff_base_s
+        self.backoff_max_s = backoff_max_s
+        self.prune_keep = prune_keep
+        self.failing = False            # surfaces in /healthz as degraded
+        self.failures = 0               # consecutive failed attempts
+        self._server = None
+        self._task: asyncio.Task | None = None
+
+    # -- lifecycle (driven by AlignServer) -----------------------------------
+
+    def bind(self, server) -> None:
+        self._server = server
+
+    def start(self) -> None:
+        if self._server is None:
+            raise RuntimeError("bind(server) before start()")
+        self._task = asyncio.get_running_loop().create_task(
+            # engine work inside _run goes through AlignServer.compact,
+            # which routes every index touch via the batcher
+            self._run(), name="compaction-supervisor")  # repro: allow[RPR101]
+
+    async def close(self) -> None:
+        if self._task is not None:
+            self._task.cancel()
+            try:
+                await self._task
+            except asyncio.CancelledError:
+                pass
+            self._task = None
+
+    # -- policy --------------------------------------------------------------
+
+    def _live_shards(self) -> list:
+        idx = self._server.aligner._index
+        if isinstance(idx, LiveIndex):
+            return [idx]
+        if isinstance(idx, ShardedAlignmentIndex):
+            return [s for s in idx.shards if getattr(s, "is_live", False)]
+        return []
+
+    def _due(self) -> bool:
+        """Reads only counters/timestamps (no index mutation), safe off
+        the engine thread like the other monitoring reads."""
+        for live in self._live_shards():
+            if live.sealed is not None:
+                return True             # unfinished merge: retry it
+            if live.delta.num_texts == 0:
+                continue
+            if live.delta_fraction >= self.max_delta_fraction:
+                return True
+            if live.delta_age_s >= self.max_delta_age_s:
+                return True
+        return False
+
+    async def _run(self) -> None:
+        delay = self.interval_s
+        while True:
+            await asyncio.sleep(delay)
+            delay = self.interval_s
+            if self._server._compacting or not self._due():
+                continue
+            try:
+                # AlignServer.compact (not the engine-only index method):
+                # it seals/promotes via submit_control and merges off-band
+                await self._server.compact()  # repro: allow[RPR101]
+                await self._prune()
+            except asyncio.CancelledError:
+                raise
+            except Exception:                       # noqa: BLE001
+                self.failures += 1
+                self._server.metrics.inc("supervisor_retries_total")
+                if self.failures > self.max_retries:
+                    # give up on this delta for now: roll the seal back
+                    # (it keeps serving correctly either way) and report
+                    # unhealthy until an attempt succeeds
+                    if not self.failing:
+                        self.failing = True
+                        self._server.metrics.inc("supervisor_failures_total")
+                    await self._rollback()
+                delay = min(self.backoff_max_s,
+                            self.backoff_base_s * 2 ** (self.failures - 1))
+                continue
+            self.failures = 0
+            self.failing = False
+            self._server.metrics.inc("supervisor_compactions_total")
+
+    async def _rollback(self) -> None:
+        batcher = self._server.batcher
+        for live in self._live_shards():
+            if live.sealed is not None:
+                await batcher.submit_control(live.unseal_delta, "unseal")
+
+    async def _prune(self) -> None:
+        roots = [live.root for live in self._live_shards()
+                 if live.root is not None]
+        if not roots:
+            return
+        removed = await self._server.batcher.run_offband(
+            lambda: [p for r in roots
+                     for p in prune_generations(r, keep=self.prune_keep)])
+        if removed:
+            self._server.metrics.inc("pruned_generations_total",
+                                     by=len(removed))

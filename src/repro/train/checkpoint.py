@@ -15,12 +15,13 @@ marker) is skipped automatically (fault tolerance).
 from __future__ import annotations
 
 import json
-import shutil
 import threading
 from pathlib import Path
 
 import jax
 import numpy as np
+
+from ..fault import fsio
 
 
 def _flatten(tree, prefix=""):
@@ -84,13 +85,13 @@ def save_checkpoint(root: str | Path, step: int, tree, *,
 
     def _write():
         dest.mkdir(parents=True, exist_ok=True)
-        np.savez(dest / "shard_0.npz", **shards)
+        fsio.np_savez(dest / "shard_0.npz", site="ckpt.shards", **shards)
         # manifest lands via tmp + rename so a crash mid-write can never
         # leave a torn manifest next to a COMMITTED marker
-        tmp = dest / "manifest.json.tmp"
-        tmp.write_text(json.dumps(manifest))
-        tmp.replace(dest / "manifest.json")
-        (dest / "COMMITTED").write_text("ok")          # atomic marker
+        fsio.commit_text(dest / "manifest.json", json.dumps(manifest),
+                         site="ckpt.manifest")
+        fsio.write_text(dest / "COMMITTED", "ok",
+                        site="ckpt.committed")         # atomic marker
         _gc(root, keep)
 
     if async_:
@@ -104,7 +105,10 @@ def save_checkpoint(root: str | Path, step: int, tree, *,
 def _gc(root: Path, keep: int):
     steps = sorted(p for p in root.glob("step_*") if (p / "COMMITTED").exists())
     for p in steps[:-keep]:
-        shutil.rmtree(p, ignore_errors=True)
+        # retire the marker first so a crash mid-rmtree leaves an
+        # uncommitted (skipped) step, never a half-valid one
+        fsio.unlink(p / "COMMITTED", site="ckpt.gc.retire", missing_ok=True)
+        fsio.rmtree(p, site="ckpt.gc", ignore_errors=True)
 
 
 def latest_step(root: str | Path) -> int | None:

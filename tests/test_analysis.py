@@ -122,7 +122,8 @@ def good_pointer_write(root):
 
 def test_store_rules_flag_bad_order_and_raw_pointer_writes(tmp_path):
     _write(tmp_path, "pkg/writer.py", STORE_FIXTURE)
-    report = run_analysis(["pkg"], rules=["RPR2"], root=tmp_path)
+    report = run_analysis(["pkg"], rules=["RPR201", "RPR202"],
+                          root=tmp_path)
     msgs = {f.rule: [] for f in report.findings}
     for f in report.findings:
         msgs[f.rule].append(f.message)
@@ -138,6 +139,63 @@ def test_store_module_itself_is_exempt_from_rpr202(tmp_path):
     _write(tmp_path, "src/repro/core/store.py",
            '(root / "CURRENT").write_text("v1")\n')
     report = run_analysis(["src"], rules=["RPR202"], root=tmp_path)
+    assert report.findings == []
+
+
+FSIO_FIXTURE = '''
+import shutil
+import numpy as np
+from repro.fault import fsio
+
+def raw_manifest(root, payload):
+    np.save(root / "t_00.keys.npy", payload)         # RPR203: raw np.save
+    (root / "manifest.json").write_text("{}")        # RPR203 (+RPR202)
+
+def raw_cleanup(root):
+    (root / "shard_0.pkl").unlink()                  # RPR203: .pkl unlink
+    shutil.rmtree(root / "old", ignore_errors=True)  # no artifact: clean
+
+def routed(root, payload):
+    fsio.np_save(root / "t_00.keys.npy", payload, site="x.arr")
+    fsio.commit_text(root / "manifest.json", "{}", site="x.manifest")
+    fsio.unlink(root / "shard_0.pkl", site="x.retire")
+
+def not_a_rename(s):
+    return s.replace("old", "new")                   # str.replace: clean
+'''
+
+
+def test_fsio_rule_flags_bypasses_and_accepts_routed_calls(tmp_path):
+    _write(tmp_path, "pkg/mutators.py", FSIO_FIXTURE)
+    report = run_analysis(["pkg"], rules=["RPR203"], root=tmp_path)
+    lines = sorted(f.line for f in report.findings)
+    src = FSIO_FIXTURE.splitlines()
+    flagged = {src[ln - 1].strip() for ln in lines}
+    assert len(lines) == 3
+    assert any("np.save" in s for s in flagged)
+    assert any("manifest.json" in s and "write_text" in s for s in flagged)
+    assert any(".pkl" in s for s in flagged)
+    # fsio-routed calls, artifact-free rmtree, and str.replace are clean
+    assert all("fsio." not in s for s in flagged)
+    assert all("shutil.rmtree" not in s for s in flagged)
+    assert all("not_a_rename" not in s for s in flagged)
+
+
+def test_fsio_rule_enforces_every_mutation_in_durability_modules(tmp_path):
+    # inside an enforced module even artifact-free mutations must route
+    # through fsio
+    _write(tmp_path, "src/repro/train/checkpoint.py",
+           'import shutil\n'
+           'def gc(p):\n'
+           '    shutil.rmtree(p, ignore_errors=True)\n')
+    report = run_analysis(["src"], rules=["RPR203"], root=tmp_path)
+    assert [f.line for f in report.findings] == [3]
+    # the fsio module itself is exempt (it IS the indirection)
+    _write(tmp_path, "src/repro/fault/fsio.py",
+           'def write_bytes(path, data, *, site):\n'
+           '    path.write_bytes(data)\n')
+    report = run_analysis(["src/repro/fault"], rules=["RPR203"],
+                          root=tmp_path)
     assert report.findings == []
 
 

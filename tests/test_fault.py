@@ -1,0 +1,256 @@
+"""The seeded fault-injection harness (:mod:`repro.fault`): trigger
+matching and modes, the fsio indirection's failure semantics (torn
+writes, error ordering), env-var arming, and degraded-mode shard fan-out
+(the end of the blast radius: one failing shard must cost its docs, not
+the query)."""
+
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro import fault
+from repro.core import ShardedAlignmentIndex, make_scheme
+from repro.fault import FaultInjected, FaultPlan, Trigger, fsio
+
+# --------------------------------------------------------------------------
+# checkpoints, triggers, modes
+# --------------------------------------------------------------------------
+
+
+def test_checkpoint_is_a_noop_when_disarmed():
+    assert fault.active_plan() is None
+    assert fault.checkpoint("any.site") is None
+    assert fault.stats()["armed"] is False
+
+
+def test_trigger_fires_on_its_occurrence_only():
+    plan = FaultPlan(triggers=[Trigger(site="w.x", hit=2)])
+    with fault.armed(plan):
+        fault.checkpoint("w.x")                      # hit 1: passes
+        with pytest.raises(FaultInjected) as ei:
+            fault.checkpoint("w.x")                  # hit 2: fires
+        assert ei.value.site == "w.x" and ei.value.hit == 2
+        fault.checkpoint("w.x")                      # hit 3: passes again
+    assert fault.active_plan() is None               # context disarms
+
+
+def test_sticky_trigger_keeps_firing():
+    plan = FaultPlan(triggers=[Trigger(site="w.x", hit=2, sticky=True)])
+    with fault.armed(plan):
+        fault.checkpoint("w.x")
+        for _ in range(3):
+            with pytest.raises(FaultInjected):
+                fault.checkpoint("w.x")
+
+
+def test_glob_site_patterns_match():
+    plan = FaultPlan(triggers=[Trigger(site="store.writer.*")])
+    with fault.armed(plan):
+        fault.checkpoint("store.promote.rename")     # no match
+        with pytest.raises(FaultInjected):
+            fault.checkpoint("store.writer.manifest.tmp_write")
+
+
+def test_slow_mode_delays_but_succeeds():
+    fault.reset_stats()                  # counters are process-global
+    plan = FaultPlan(triggers=[Trigger(site="s", mode="slow",
+                                       delay_s=0.05)])
+    with fault.armed(plan):
+        t0 = time.perf_counter()
+        assert fault.checkpoint("s") is None
+        assert time.perf_counter() - t0 >= 0.04
+    st = fault.stats()
+    assert st["injected"] == 1 and st["by_mode"].get("slow") == 1
+
+
+def test_plan_json_roundtrip_and_validation():
+    plan = FaultPlan(triggers=[Trigger(site="a", hit=3, mode="torn",
+                                       sticky=True)], seed=7)
+    back = FaultPlan.from_json(plan.to_json())
+    assert back == plan
+    with pytest.raises(ValueError):
+        Trigger(site="a", mode="nope")
+    with pytest.raises(ValueError):
+        Trigger(site="a", hit=0)
+
+
+def test_record_sites_reports_ordered_occurrences():
+    with fault.record_sites() as sites:
+        fault.checkpoint("a")
+        fault.checkpoint("b")
+        fault.checkpoint("a")
+    assert sites == [("a", 1), ("b", 1), ("a", 2)]
+    assert fault.checkpoint("a") is None             # recorder detached
+
+
+def test_env_var_arms_a_child_process():
+    plan = FaultPlan(triggers=[Trigger(site="child.site")])
+    code = ("from repro import fault\n"
+            "assert fault.active_plan() is not None\n"
+            "try:\n"
+            "    fault.checkpoint('child.site')\n"
+            "except fault.FaultInjected:\n"
+            "    print('FIRED')\n")
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        env={**os.environ, "REPRO_FAULT_PLAN": plan.to_json(),
+             "PYTHONPATH": "src"},
+        capture_output=True, text=True, cwd=Path(__file__).parent.parent)
+    assert out.returncode == 0, out.stderr
+    assert "FIRED" in out.stdout
+
+
+# --------------------------------------------------------------------------
+# fsio failure semantics
+# --------------------------------------------------------------------------
+
+
+def test_fsio_error_fires_before_the_write(tmp_path):
+    p = tmp_path / "f.txt"
+    plan = FaultPlan(triggers=[Trigger(site="t.w")])
+    with fault.armed(plan):
+        with pytest.raises(FaultInjected):
+            fsio.write_text(p, "hello", site="t.w")
+    assert not p.exists()                            # nothing landed
+    fsio.write_text(p, "hello", site="t.w")          # disarmed: clean
+    assert p.read_text() == "hello"
+
+
+def test_fsio_torn_write_leaves_a_truncated_file(tmp_path):
+    p = tmp_path / "f.bin"
+    data = bytes(range(200))
+    plan = FaultPlan(triggers=[Trigger(site="t.w", mode="torn")])
+    with fault.armed(plan):
+        with pytest.raises(FaultInjected):
+            fsio.write_bytes(p, data, site="t.w")
+    assert p.exists()
+    assert 0 < p.stat().st_size < len(data)          # literally torn
+
+
+def test_fsio_torn_np_save_is_unloadable(tmp_path):
+    p = tmp_path / "a.npy"
+    arr = np.arange(4096, dtype=np.int64)
+    plan = FaultPlan(triggers=[Trigger(site="t.a", mode="torn")])
+    with fault.armed(plan):
+        with pytest.raises(FaultInjected):
+            fsio.np_save(p, arr, site="t.a")
+    with pytest.raises(Exception):
+        np.load(p)                                   # torn: fails loudly
+
+
+def test_fsio_commit_emits_tmp_then_rename_checkpoints(tmp_path):
+    p = tmp_path / "manifest.json"
+    with fault.record_sites() as sites:
+        fsio.commit_text(p, "{}", site="x.manifest")
+    assert sites == [("x.manifest.tmp_write", 1), ("x.manifest.rename", 1)]
+    assert p.read_text() == "{}"
+    assert not p.with_name("manifest.json.tmp").exists()
+    # failing the rename leaves the target absent but the tmp staged
+    plan = FaultPlan(triggers=[Trigger(site="x.m2.rename")])
+    with fault.armed(plan):
+        with pytest.raises(FaultInjected):
+            fsio.commit_text(tmp_path / "m2", "{}", site="x.m2")
+    assert not (tmp_path / "m2").exists()
+
+
+# --------------------------------------------------------------------------
+# degraded-mode shard fan-out
+# --------------------------------------------------------------------------
+
+
+def _sharded_with_dup():
+    scheme = make_scheme("multiset", seed=5, k=8)
+    rng = np.random.default_rng(7)
+    docs = [rng.integers(0, 400, 60).astype(np.int64) for _ in range(9)]
+    docs[4] = docs[1].copy()                         # dup across shards
+    idx = ShardedAlignmentIndex(scheme=scheme, n_shards=3).build(docs)
+    return idx, docs
+
+
+def test_failing_shard_is_skipped_and_reported():
+    idx, docs = _sharded_with_dup()
+    q = docs[1][5:50]
+    full = {a.text_id for a in idx.batch_query([q], 0.5)[0]}
+    assert {1, 4} <= full
+    bad = 4 % idx.n_shards                           # the shard holding doc 4
+    plan = FaultPlan(triggers=[Trigger(site=f"sharded.probe.s{bad}",
+                                       sticky=True)])
+    with fault.armed(plan):
+        failures: list[int] = []
+        res = idx.batch_query([q], 0.5, failures=failures)
+        assert failures == [bad]
+        got = {a.text_id for a in res[0]}
+        # partial: exactly the failed shard's docs are missing
+        assert got == {d for d in full if d % idx.n_shards != bad}
+
+
+def test_strict_mode_still_raises():
+    idx, docs = _sharded_with_dup()
+    plan = FaultPlan(triggers=[Trigger(site="sharded.probe.s1",
+                                       sticky=True)])
+    with fault.armed(plan):
+        with pytest.raises(FaultInjected):
+            idx.batch_query([docs[1][5:50]], 0.5)    # failures=None
+
+
+def test_transient_shard_failure_is_retried_away():
+    idx, docs = _sharded_with_dup()
+    q = docs[1][5:50]
+    full = idx.batch_query([q], 0.5)
+    plan = FaultPlan(triggers=[Trigger(site="sharded.probe.s1", hit=1)])
+    with fault.armed(plan):
+        failures: list[int] = []
+        res = idx.batch_query([q], 0.5, failures=failures,
+                              shard_retries=2)
+        assert failures == []                        # retry absorbed it
+    assert [{a.text_id for a in r} for r in res] == \
+        [{a.text_id for a in r} for r in full]
+
+
+def test_aligner_stamps_degraded_results():
+    from repro.api import Aligner
+    idx, docs = _sharded_with_dup()
+    al = Aligner(idx)
+    plan = FaultPlan(triggers=[Trigger(site="sharded.probe.s1",
+                                       sticky=True)])
+    with fault.armed(plan):
+        res = al.find_batch([docs[1][5:50]], 0.5)
+    assert all(r.degraded for r in res)
+    assert all(r.failed_shards == (1,) for r in res)
+    d = res[0].to_dict()
+    assert d["degraded"] is True and d["failed_shards"] == [1]
+    clean = al.find_batch([docs[1][5:50]], 0.5)
+    assert not clean[0].degraded and clean[0].failed_shards == ()
+
+
+# --------------------------------------------------------------------------
+# the kill-loop itself (a 3-iteration smoke of examples/churn.py --chaos;
+# CI's tier1-chaos job runs the full 100-iteration soak)
+# --------------------------------------------------------------------------
+
+
+def test_chaos_kill_loop_smoke(tmp_path):
+    repo = Path(__file__).resolve().parent.parent
+    out = tmp_path / "chaos.json"
+    env = {**os.environ}
+    env["PYTHONPATH"] = str(repo / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, str(repo / "examples" / "churn.py"),
+         "--chaos", "3", "--chaos-store", str(tmp_path / "store"),
+         "--chaos-out", str(out)],
+        env=env, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    rec = json.loads(out.read_text())
+    assert rec["ok"] and rec["killed"] + rec["survived"] == 3
+    assert rec["schedule"], "recorded kill schedule must not be empty"
+    # the soak's store survives for post-hoc fsck, like CI does it
+    from repro.fsck import check_store
+    rep = check_store(tmp_path / "store")
+    assert rep["ok"] and not rep["quarantined"]

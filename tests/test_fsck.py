@@ -1,0 +1,234 @@
+"""Self-verifying store: manifest checksums, quarantine-and-fallback
+recovery, generation pruning, and the ``python -m repro.fsck`` CLI."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro import fsck
+from repro.core import IndexBuilder, batch_query, make_scheme, save_index
+from repro.core import store as index_store
+from repro.core.live import LiveIndex
+from repro.core.store import (CURRENT_POINTER, current_generation,
+                              load_index, prune_generations,
+                              resolve_verified, verify_generation,
+                              verify_store)
+
+
+def _docs(rng, n=8):
+    return [rng.integers(0, 40, 60).astype(np.int64) for _ in range(n)]
+
+
+def _store(tmp_path, rng, name="idx"):
+    scheme = make_scheme("multiset", seed=3, k=4)
+    docs = _docs(rng)
+    save_index(IndexBuilder(scheme=scheme).build(docs).freeze(),
+               tmp_path / name)
+    return tmp_path / name, scheme, docs
+
+
+def _tamper(path):
+    """Flip one byte in the middle of an array payload."""
+    data = bytearray(path.read_bytes())
+    data[len(data) // 2] ^= 0xFF
+    path.write_bytes(bytes(data))  # repro: allow[RPR203] (corruption fixture)
+
+
+# --------------------------------------------------------------------------
+# verification
+# --------------------------------------------------------------------------
+
+
+def test_writer_records_checksums_and_verify_passes(tmp_path):
+    root, _, _ = _store(tmp_path, np.random.default_rng(0))
+    manifest = json.loads((root / "manifest.json").read_text())
+    sums = manifest["checksums"]
+    assert all(f.endswith(".npy") for f in sums)
+    assert all(set(rec) == {"algo", "crc", "dtype", "shape"}
+               for rec in sums.values())
+    rep = verify_generation(root)
+    assert rep.ok and rep.committed
+    assert rep.checksummed == rep.arrays == len(sums)
+
+
+def test_verify_catches_bitflip_truncation_and_missing_file(tmp_path):
+    rng = np.random.default_rng(1)
+    for breakage in ("bitflip", "truncate", "missing"):
+        root, _, _ = _store(tmp_path, rng, name=f"idx_{breakage}")
+        victim = root / "table_00.keys.npy"
+        if breakage == "bitflip":
+            _tamper(victim)
+        elif breakage == "truncate":
+            victim.write_bytes(victim.read_bytes()[:40])  # repro: allow[RPR203]
+        else:
+            victim.unlink()  # repro: allow[RPR203] (corruption fixture)
+        rep = verify_generation(root)
+        assert not rep.ok, breakage
+        assert any("table_00.keys.npy" in p for p in rep.problems), breakage
+
+
+def test_legacy_store_without_checksums_passes_structurally(tmp_path):
+    root, _, _ = _store(tmp_path, np.random.default_rng(2))
+    manifest = json.loads((root / "manifest.json").read_text())
+    del manifest["checksums"]
+    (root / "manifest.json").write_text(json.dumps(manifest))  # repro: allow[RPR202,RPR203]
+    rep = verify_generation(root)
+    assert rep.ok and rep.checksummed == 0 and rep.arrays > 0
+    # but structural damage is still caught
+    (root / "table_00.keys.npy").unlink()  # repro: allow[RPR203]
+    assert not verify_generation(root).ok
+
+
+# --------------------------------------------------------------------------
+# recovery: quarantine + fallback
+# --------------------------------------------------------------------------
+
+
+def _compacted(tmp_path, rng):
+    root, scheme, docs = _store(tmp_path, rng)
+    live = LiveIndex.open(root, scheme=scheme)
+    delta = _docs(rng, 3)
+    for t in delta:
+        live.add_text(t)
+    assert live.compact() == 1
+    return root, scheme, docs, delta
+
+
+def test_corrupt_serving_generation_is_quarantined_with_fallback(tmp_path):
+    rng = np.random.default_rng(3)
+    root, scheme, docs, _delta = _compacted(tmp_path, rng)
+    _tamper(root / "v000001" / "table_00.keys.npy")
+
+    resolved = resolve_verified(root)
+    assert resolved == root                       # fell back to gen 0
+    assert current_generation(root) == 0
+    assert (root / "quarantine" / "v000001" / "manifest.json").exists()
+    assert not (root / "v000001").exists()
+    # quarantined numbers stay reserved: the next compaction skips 1
+    live = LiveIndex.open(root, scheme=scheme)
+    live.add_text(_docs(rng, 1)[0])
+    assert live.compact() == 2
+
+    # the quarantined data is preserved for forensics (readable when
+    # verification is bypassed — only one byte of it is bad)
+    idx = load_index(root / "quarantine" / "v000001", verify=False)
+    assert idx.num_texts == len(docs) + 3
+
+
+def test_load_index_recovers_transparently(tmp_path):
+    rng = np.random.default_rng(4)
+    root, scheme, docs, _ = _compacted(tmp_path, rng)
+    _tamper(root / "v000001" / "arena.keys.npy")
+    idx = load_index(root, scheme=scheme)         # verify=True default
+    assert idx.num_texts == len(docs)             # serving gen 0 again
+    q = docs[2][5:50]
+    expected = batch_query(
+        IndexBuilder(scheme=make_scheme("multiset", seed=3, k=4)).build(docs),
+        [q], 0.5)
+    got = batch_query(idx, [q], 0.5)
+    assert [(a.text_id, a.blocks) for a in got[0]] == \
+        [(a.text_id, a.blocks) for a in expected[0]]
+
+
+def test_flat_store_that_fails_verification_raises(tmp_path):
+    root, _, _ = _store(tmp_path, np.random.default_rng(5))
+    _tamper(root / "table_01.keys.npy")
+    with pytest.raises(ValueError, match="fails verification"):
+        resolve_verified(root)
+    with pytest.raises(ValueError, match="fails verification"):
+        load_index(root)
+    # the data is still there for manual forensics — nothing deleted
+    assert (root / "manifest.json").exists()
+
+
+def test_verify_store_reports_the_whole_tree(tmp_path):
+    rng = np.random.default_rng(6)
+    root, scheme, _, _ = _compacted(tmp_path, rng)
+    (root / "v000007").mkdir()                    # an aborted write
+    rep = verify_store(root)
+    assert rep["ok"]
+    roles = {g["generation"]: g["role"] for g in rep["generations"]}
+    assert roles[0] == "retained" and roles[1] == "serving"
+    assert roles[7] == "aborted"
+    # aborted dirs don't fail the store; corrupt committed ones do
+    _tamper(root / "v000001" / "table_00.offsets.npy")
+    rep = verify_store(root)
+    assert not rep["ok"]
+
+
+# --------------------------------------------------------------------------
+# pruning
+# --------------------------------------------------------------------------
+
+
+def test_prune_keeps_serving_recent_and_quarantine(tmp_path):
+    rng = np.random.default_rng(7)
+    root, scheme, docs, delta = _compacted(tmp_path, rng)
+    live = LiveIndex.open(root, scheme=scheme)
+    for gen in (2, 3, 4):
+        live.add_text(_docs(rng, 1)[0])
+        assert live.compact() == gen
+    # quarantine one old generation by corrupting + resolving via a
+    # pointer rewind... simpler: move it through the store API
+    index_store.quarantine_generation(root, "v000001")
+
+    removed = prune_generations(root, keep=2)
+    names = {p.name for p in removed}
+    assert names == {"v000002"}                   # 3,4 kept; 1 quarantined
+    assert (root / "v000003").exists() and (root / "v000004").exists()
+    assert (root / "quarantine" / "v000001").exists()
+    assert current_generation(root) == 4
+    # gen 0 (the flat root) is never pruned
+    assert (root / "manifest.json").exists()
+
+    # keep_quarantined=False reclaims the quarantine tree too
+    removed = prune_generations(root, keep=2, keep_quarantined=False)
+    assert {p.name for p in removed} == {"quarantine"}
+    assert not (root / "quarantine").exists()
+
+
+def test_prune_spares_inflight_aborted_dirs(tmp_path):
+    rng = np.random.default_rng(8)
+    root, scheme, _, _ = _compacted(tmp_path, rng)
+    (root / "v000002").mkdir()                    # in-flight: gen > serving
+    (root / "v000000x").mkdir()                   # junk dir, not a version
+    removed = prune_generations(root, keep=0)
+    assert removed == []                          # serving=1, nothing old
+    assert (root / "v000002").exists()
+
+
+# --------------------------------------------------------------------------
+# the CLI
+# --------------------------------------------------------------------------
+
+
+def test_fsck_cli_text_json_and_exit_codes(tmp_path, capsys):
+    rng = np.random.default_rng(9)
+    root, _, _, _ = _compacted(tmp_path, rng)
+
+    assert fsck.main([str(root)]) == 0
+    out = capsys.readouterr().out
+    assert "all ok" in out and "serving generation 1" in out
+
+    assert fsck.main(["--format", "json", str(tmp_path)]) == 0
+    rep = json.loads(capsys.readouterr().out)
+    assert rep["ok"] and rep["checked"] == 1
+    assert rep["stores"][0]["serving_generation"] == 1
+
+    _tamper(root / "v000001" / "table_00.windows.npy")
+    assert fsck.main([str(root)]) == 1
+    assert "FAILED" in capsys.readouterr().out
+
+    assert fsck.main([str(tmp_path / "nothing_here")]) == 2
+
+
+def test_fsck_expands_sharded_roots(tmp_path):
+    from repro.api import Aligner
+    rng = np.random.default_rng(10)
+    docs = [rng.integers(0, 400, 60).astype(np.int64) for _ in range(6)]
+    Aligner.build(docs, similarity="multiset", k=4, seed=5,
+                  shards=2).save(tmp_path / "sh")
+    stores = fsck.discover_stores(tmp_path / "sh")
+    assert [p.name for p in stores] == ["shard_0", "shard_1"]
+    assert fsck.main([str(tmp_path / "sh")]) == 0

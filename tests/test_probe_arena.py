@@ -2,6 +2,8 @@
 schemes, Pallas-vs-NumPy backend equality, the grouped small-sweep
 dispatcher, threaded-vs-serial sharded fan-out, and arena persistence."""
 
+import json
+
 import numpy as np
 import pytest
 
@@ -250,8 +252,16 @@ def test_pre_arena_store_rebuilds_lazily(tmp_path):
     frozen = _frozen("multiset", docs)
     want = [_blocks(r) for r in batch_query(frozen, qs, 0.5)]
     frozen.save(tmp_path)
-    for p in tmp_path.glob("arena.*.npy"):    # simulate a pre-arena store
-        p.unlink()
+    # simulate a pre-arena store: no arena files, and a manifest that
+    # never knew about them (no arena entry, no arena checksums)
+    for p in tmp_path.glob("arena.*.npy"):
+        p.unlink()  # repro: allow[RPR203] (pre-arena fixture)
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    manifest.pop("arena", None)
+    manifest["checksums"] = {f: rec for f, rec in
+                             manifest.get("checksums", {}).items()
+                             if not f.startswith("arena.")}
+    (tmp_path / "manifest.json").write_text(json.dumps(manifest))  # repro: allow[RPR202,RPR203]
     loaded = SearchIndex.load(tmp_path, mmap=True)
     assert loaded._arena is None
     assert [_blocks(r) for r in batch_query(loaded, qs, 0.5)] == want

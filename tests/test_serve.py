@@ -373,3 +373,200 @@ def test_queue_full_on_closed_batcher():
             batcher.submit_query([1, 2, 3], 0.5)
 
     asyncio.run(main())
+
+
+# --------------------------------------------------------------------------
+# degraded mode, retries, and the compaction supervisor (fault harness)
+# --------------------------------------------------------------------------
+
+from repro import fault  # noqa: E402
+from repro.fault import FaultPlan, Trigger  # noqa: E402
+from repro.serve import CompactionSupervisor  # noqa: E402
+
+
+def _mk_sharded_aligner(n_docs: int = 12, doc_len: int = 120):
+    rng = np.random.default_rng(5)
+    docs = [rng.integers(0, 1 << 40, size=doc_len) for _ in range(n_docs)]
+    return Aligner.build(docs, similarity="multiset", seed=3, k=8,
+                         shards=2), docs
+
+
+def _wait_for(predicate, timeout_s: float = 15.0, interval_s: float = 0.05):
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        if predicate():
+            return True
+        time.sleep(interval_s)
+    return False
+
+
+def test_shard_failure_degrades_instead_of_500():
+    aligner, docs = _mk_sharded_aligner()
+    with _ThreadServer(aligner) as srv:
+        with AlignClient(port=srv.port) as client:
+            snippet = [int(t) for t in docs[6][10:90]]   # doc 6 -> shard 0
+            plan = FaultPlan(triggers=[Trigger(site="sharded.probe.s1",
+                                               sticky=True)])
+            try:
+                fault.arm(plan)
+                result = client.query(snippet, 0.5)      # 200, not 500
+                assert result["degraded"] is True
+                assert result["failed_shards"] == [1]
+                # the healthy shard's docs still come back
+                assert any(m["doc_id"] == 6 for m in result["matches"])
+                health = client.healthz()
+                assert health["status"] == "degraded"
+                assert health["failed_shards"] == [1]
+                snap = client.metrics()
+                assert snap["counters"]["degraded_total"] >= 1
+                assert snap["counters"]["errors_total"] == 0
+                assert snap["fault"]["armed"] is True
+                assert "store" in snap
+            finally:
+                fault.disarm()
+            # fault cleared: the next query restores full health
+            result = client.query(snippet, 0.5)
+            assert result["degraded"] is False
+            assert client.healthz()["status"] == "healthy"
+
+
+def test_batcher_probe_fault_hook_maps_to_500_then_recovers():
+    aligner, docs = _mk_sharded_aligner(n_docs=6)
+    with _ThreadServer(aligner) as srv:
+        with AlignClient(port=srv.port) as client:
+            q = [int(t) for t in docs[0][10:90]]
+            plan = FaultPlan(triggers=[Trigger(site="serve.batcher.probe",
+                                               sticky=True)])
+            try:
+                fault.arm(plan)
+                with pytest.raises(ServerError) as ei:
+                    client.query(q, 0.5)
+                assert ei.value.status == 500
+            finally:
+                fault.disarm()
+            assert client.metrics()["counters"]["errors_total"] >= 1
+            assert client.query(q, 0.5)["matches"]        # healthy again
+
+
+def test_503_carries_retry_after_and_client_retries_queries():
+    aligner, docs = _mk_aligner(n_docs=6)
+    with _ThreadServer(aligner, retry_after_s=0.25) as srv:
+        q = [int(t) for t in docs[0][10:90]]
+        orig = srv.batcher.submit_query
+        calls = {"n": 0, "fail_first": 0}
+
+        def flaky(*a, **kw):
+            calls["n"] += 1
+            if calls["n"] <= calls["fail_first"]:
+                raise QueueFull("induced shed")
+            return orig(*a, **kw)
+
+        srv.batcher.submit_query = flaky
+
+        # a bare client surfaces the 503, and the Retry-After hint rides it
+        with AlignClient(port=srv.port) as client:
+            calls.update(n=0, fail_first=1)
+            status, payload, headers = client._request_full(
+                "POST", "/query", {"text": q, "theta": 0.5})
+            assert status == 503
+            assert float(headers["retry-after"]) == 0.25
+            # non-idempotent endpoints never carry the retry hint
+            status, _, headers = client._request_full("POST", "/nope", {})
+            assert "retry-after" not in headers
+
+        # retries=2 absorbs the shed and answers the query
+        with AlignClient(port=srv.port, retries=2,
+                         backoff_s=0.01, backoff_max_s=0.05) as client:
+            calls.update(n=0, fail_first=1)
+            result = client.query(q, 0.5)
+            assert calls["n"] == 2
+            assert any(m["doc_id"] == 0 for m in result["matches"])
+            # more 503s than retries: the failure still surfaces
+            calls.update(n=0, fail_first=10)
+            with pytest.raises(ServerError) as ei:
+                client.query(q, 0.5)
+            assert ei.value.status == 503
+
+
+def test_client_retries_reconnect_after_dropped_connection():
+    import socket
+
+    aligner, docs = _mk_aligner(n_docs=6)
+    with _ThreadServer(aligner) as srv:
+        q = [int(t) for t in docs[0][10:90]]
+        with AlignClient(port=srv.port, retries=2, backoff_s=0.01) as client:
+            assert client.query(q, 0.5)["matches"]
+            # kill the keep-alive socket under the client: the retry
+            # must reconnect instead of surfacing the connection error
+            client._conn.sock.shutdown(socket.SHUT_RDWR)
+            assert client.query(q, 0.5)["matches"]
+        # without retries the same drop surfaces as a connection error
+        with AlignClient(port=srv.port) as client:
+            assert client.query(q, 0.5)["matches"]
+            client._conn.sock.shutdown(socket.SHUT_RDWR)
+            with pytest.raises(ConnectionError):
+                client.query(q, 0.5)
+
+
+def test_supervisor_auto_compacts_and_prunes(tmp_path):
+    aligner, docs = _mk_aligner(live=True, tmp_path=tmp_path)
+    sup = CompactionSupervisor(max_delta_fraction=0.01, interval_s=0.05,
+                               prune_keep=1)
+    rng = np.random.default_rng(11)
+    with _ThreadServer(aligner, supervisor=sup) as srv:
+        with AlignClient(port=srv.port) as client:
+            assert client.healthz()["generation"] == 0
+            new_doc = [int(t) for t in rng.integers(0, 1 << 40, 120)]
+            client.add(new_doc)
+            assert _wait_for(
+                lambda: client.healthz()["generation"] >= 1), \
+                "supervisor never compacted"
+            snap = client.metrics()
+            assert snap["counters"]["supervisor_compactions_total"] >= 1
+            assert snap["counters"]["supervisor_failures_total"] == 0
+            # the folded doc still serves from the new generation
+            result = client.query(new_doc[20:100], 0.5)
+            assert any(m["doc_id"] == len(docs)
+                       for m in result["matches"])
+    # generations beyond prune_keep were reclaimed on the way
+    assert (tmp_path / "idx" / "v000001").exists()
+
+
+def test_supervisor_rolls_back_after_exhausted_retries(tmp_path):
+    aligner, docs = _mk_aligner(live=True, tmp_path=tmp_path)
+    sup = CompactionSupervisor(max_delta_fraction=0.01, interval_s=0.05,
+                               max_retries=1, backoff_base_s=0.02,
+                               backoff_max_s=0.1)
+    rng = np.random.default_rng(12)
+    new_doc = [int(t) for t in rng.integers(0, 1 << 40, 120)]
+    plan = FaultPlan(triggers=[Trigger(site="store.writer.*",
+                                       sticky=True)])
+    with _ThreadServer(aligner, supervisor=sup) as srv:
+        with AlignClient(port=srv.port) as client:
+            try:
+                fault.arm(plan)
+                client.add(new_doc)
+                # attempts burn down: past max_retries the seal is rolled
+                # back and /healthz reports degraded
+                assert _wait_for(
+                    lambda: client.healthz()["status"] == "degraded"), \
+                    "supervisor never reported failure"
+                snap = client.metrics()
+                assert snap["counters"]["supervisor_retries_total"] >= 2
+                assert snap["counters"]["supervisor_failures_total"] >= 1
+                assert client.healthz()["generation"] == 0
+                # the delta (or sealed level) kept serving the new doc
+                result = client.query(new_doc[20:100], 0.5)
+                assert any(m["doc_id"] == len(docs)
+                           for m in result["matches"])
+            finally:
+                fault.disarm()
+            # faults cleared: the supervisor converges and health returns
+            assert _wait_for(
+                lambda: client.healthz()["generation"] >= 1), \
+                "supervisor never recovered"
+            assert _wait_for(
+                lambda: client.healthz()["status"] == "healthy")
+            result = client.query(new_doc[20:100], 0.5)
+            assert any(m["doc_id"] == len(docs)
+                       for m in result["matches"])

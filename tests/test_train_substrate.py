@@ -89,7 +89,7 @@ def test_checkpoint_skips_uncommitted(tmp_path):
     # simulate a crash mid-write of step 3: no COMMITTED marker
     d = tmp_path / "step_00000003"
     d.mkdir()
-    (d / "manifest.json").write_text("{}")  # repro: allow[RPR202] (deliberately torn)
+    (d / "manifest.json").write_text("{}")  # repro: allow[RPR202,RPR203] (deliberately torn)
     assert latest_step(tmp_path) == 2
 
 
@@ -192,7 +192,7 @@ def test_sharded_index_recovers_lost_shard(tmp_path):
     idx = ShardedAlignmentIndex(scheme=scheme, n_shards=3).build(docs)
     idx.save(tmp_path)
     # simulate losing shard 1 on disk
-    (tmp_path / "shard_1.pkl").unlink()
+    (tmp_path / "shard_1.pkl").unlink()  # repro: allow[RPR203] (simulated loss)
     idx2 = ShardedAlignmentIndex(scheme=scheme, n_shards=3)
     lost = idx2.restore(tmp_path)
     assert lost == [1]
