@@ -16,19 +16,31 @@ allowed zero drift, ever.  A second soak drives the sharded index
 Chaos kill-loop (``--chaos N``, the CI ``tier1-chaos`` job): the same
 churn workload, but each iteration runs in a child process armed with a
 seeded :mod:`repro.fault` plan that ``os._exit``\\ s it at one fsio
-checkpoint (every site in the seal → merge → promote → prune path, both
-just *before* and just *after* the durable write).  The parent then
+checkpoint — every site in the ingest (``wal.append`` / ``wal.fsync`` /
+``wal.rotate``) and seal → merge → promote → prune → WAL-truncate path,
+both just *before* and just *after* the durable write.  The parent then
 verifies in-process that the store still fscks clean with nothing
 quarantined, and the next child — which reopens the store through the
-recovery path — must serve results **bit-identical to a from-scratch
-oracle** of exactly the committed corpus.  The deterministic corpus
-(``chaos_doc``) makes "what should be on disk" a pure function of the
-committed doc count, so no state is carried between iterations.
+recovery path, replaying the WAL — must serve results **bit-identical
+to a from-scratch oracle** of exactly the recovered corpus.  The
+deterministic corpus (``chaos_doc``) makes "what should be on disk" a
+pure function of the recovered doc count, so no state is carried
+between iterations.
+
+The acknowledged-writes contract: children ingest through a write-ahead
+log and append each doc id to an ack file only once its WAL record is
+fsync-durable — exactly when a server would send the client its 200.
+After every kill the parent asserts each acknowledged doc survives into
+the next recovery (committed docs + durable WAL records), so "the
+server said yes, then the process died" can never lose a write.
+``--chaos-sites 'wal.*'`` narrows the kill schedule to the ingest path
+(the CI ingest-kill leg); unfiltered, the soak sweeps every site.
 """
 
 from __future__ import annotations
 
 import argparse
+import fnmatch
 import json
 import os
 import shutil
@@ -45,6 +57,7 @@ from repro.core import (IndexBuilder, ShardedAlignmentIndex, batch_query,
                         make_scheme, save_index)
 from repro.core.live import LiveIndex
 from repro.core.store import current_generation, prune_generations
+from repro.wal import WalConfig
 
 VOCAB, DOC_LEN, K, THETA = 40, 60, 8, 0.5
 
@@ -151,6 +164,12 @@ def churn_sharded(rounds: int, docs_per_round: int, root: Path) -> None:
 
 CHAOS_SEED_DOCS = 8
 CHAOS_MODES = ("crash", "crash_after")
+#: small segments + group commit so a short soak still crosses segment
+#: rotation AND compaction-time truncation of covered segments (~one
+#: 60-token record per segment), and leaves an fsync-vs-ack window
+#: (odd-numbered adds stay pending until the next fsync — a kill there
+#: must lose only UNacked docs)
+CHAOS_WAL = WalConfig(fsync_every_n=2, segment_bytes=600)
 
 
 def chaos_doc(i: int) -> np.ndarray:
@@ -173,21 +192,45 @@ def _chaos_queries(corpus):
             rng.integers(1000, 1040, 20).astype(np.int64)]
 
 
-def chaos_child(store: Path, add_n: int) -> None:
+def chaos_child(store: Path, add_n: int, ack_file: Path | None) -> None:
     """One chaos iteration, run in a subprocess with ``REPRO_FAULT_PLAN``
-    armed: recover the store, verify it serves exactly the committed
-    corpus, ingest, compact, prune, verify again.  A fault plan kills
-    this process (``os._exit``) at one durable-write checkpoint."""
+    armed: recover the store (replaying the WAL), verify it serves
+    exactly the recovered corpus, ingest through the WAL, compact,
+    prune, verify again.  A fault plan kills this process (``os._exit``)
+    at one durable-write checkpoint.
+
+    Each ingested doc id is appended to ``ack_file`` (flush + fsync)
+    only once its WAL record is fsync-durable — the moment a server
+    would acknowledge the write.  The parent holds every acked id
+    against the next recovery."""
     scheme = make_scheme("multiset", seed=11, k=K)
-    live = LiveIndex.open(store, mmap=True)       # the recovery path
-    n = live.frozen.num_texts
+    live = LiveIndex.open(store, mmap=True, wal=CHAOS_WAL)  # recovery path
+    n = live.num_texts              # committed + replayed-from-WAL
     corpus = [chaos_doc(i) for i in range(n)]
     qs = _chaos_queries(corpus)
     _check(live.batch_query(qs, THETA), scheme, corpus, qs,
-           f"chaos child: recovered store ({n} docs)")
+           f"chaos child: recovered store ({n} docs, "
+           f"{live.wal_replayed} replayed)")
 
+    acks = open(ack_file, "a") if ack_file is not None else None
+    acked_upto = n                  # doc ids below this are acked
+
+    def ack_durable():
+        nonlocal acked_upto
+        while acked_upto < n + (live.wal.durable_lsn - base_lsn):
+            if acks is not None:
+                acks.write(f"{acked_upto}\n")
+                acks.flush()
+                os.fsync(acks.fileno())
+            acked_upto += 1
+
+    base_lsn = live.wal.next_lsn
     for i in range(n, n + add_n):
-        live.add_text(chaos_doc(i))
+        live.add_text(chaos_doc(i), request_id=f"doc-{i}")
+        ack_durable()               # group commit: acks trail the fsync
+    live.wal_commit()               # the durability barrier: ack the rest
+    ack_durable()
+    assert acked_upto == n + add_n
     corpus = [chaos_doc(i) for i in range(n + add_n)]
     qs = _chaos_queries(corpus)
     _check(live.batch_query(qs, THETA), scheme, corpus, qs,
@@ -204,14 +247,31 @@ def chaos_child(store: Path, add_n: int) -> None:
         assert np.array_equal(ta.keys, tb.keys)
         assert np.array_equal(ta.offsets, tb.offsets)
         assert np.array_equal(ta.windows, tb.windows)
+    if acks is not None:
+        acks.close()
     print(f"chaos child OK: {n} -> {n + add_n} docs, gen {gen}")
+
+
+def _recovered_count(store: Path) -> int:
+    """What the next recovery must serve — committed docs plus durable
+    un-covered WAL records — computed READ-ONLY (no tail repair, no
+    replay), so the child's recovery path stays the one under test."""
+    from repro.core.store import read_manifest, resolve_store
+    from repro.wal import iter_records, wal_dir
+    manifest = read_manifest(resolve_store(store))
+    n = int(manifest["num_texts"])
+    known = set(manifest.get("doc_map") or range(n))
+    watermark = int(manifest.get("wal_watermark") or 0)
+    return n + sum(1 for rec in iter_records(wal_dir(store))
+                   if rec.lsn >= watermark and rec.gid not in known)
 
 
 def _record_chaos_schedule(add_n: int) -> list:
     """One clean in-process run of the child workload under
     ``fault.record_sites()``: the (site, occurrence) pairs it returns ARE
-    the kill schedule — every durable write the workload performs, with
-    no hand-maintained site list to go stale."""
+    the kill schedule — every durable write the workload performs (WAL
+    appends/fsyncs/rotations included), with no hand-maintained site
+    list to go stale."""
     from repro import fault
     tmp = Path(tempfile.mkdtemp())
     try:
@@ -219,10 +279,11 @@ def _record_chaos_schedule(add_n: int) -> list:
         scheme = make_scheme("multiset", seed=11, k=K)
         corpus = [chaos_doc(i) for i in range(CHAOS_SEED_DOCS)]
         save_index(IndexBuilder(scheme=scheme).build(corpus).freeze(), root)
-        live = LiveIndex.open(root, mmap=True)
+        live = LiveIndex.open(root, mmap=True, wal=CHAOS_WAL)
         with fault.record_sites() as sites:
             for i in range(CHAOS_SEED_DOCS, CHAOS_SEED_DOCS + add_n):
-                live.add_text(chaos_doc(i))
+                live.add_text(chaos_doc(i), request_id=f"doc-{i}")
+            live.wal_commit()
             live.compact()
             prune_generations(root, keep=2)
         return sorted(set(sites))
@@ -231,12 +292,15 @@ def _record_chaos_schedule(add_n: int) -> list:
 
 
 def chaos_soak(iters: int, seed: int, store: Path, add_n: int,
-               out_path: Path | None) -> None:
+               out_path: Path | None, sites_glob: str | None = None) -> None:
     """The headline robustness proof: ``iters`` child runs, each killed
-    at a seeded fault site in the seal → merge → promote → prune path;
-    after every kill the store must fsck clean with nothing quarantined,
-    and the next child must serve bit-identical to a from-scratch
-    oracle.  Ends with one clean run that must converge."""
+    at a seeded fault site in the ingest (``wal.*``) or seal → merge →
+    promote → prune → truncate path; after every kill the store must
+    fsck clean with nothing quarantined, EVERY acknowledged write must
+    survive into the next recovery, and the next child must serve
+    bit-identical to a from-scratch oracle.  Ends with one clean run
+    that must converge.  ``sites_glob`` (fnmatch) narrows the kill
+    schedule — ``'wal.*'`` is the CI ingest-kill leg."""
     from repro import fault
     from repro.fsck import check_store
 
@@ -246,14 +310,22 @@ def chaos_soak(iters: int, seed: int, store: Path, add_n: int,
     scheme = make_scheme("multiset", seed=11, k=K)
     corpus = [chaos_doc(i) for i in range(CHAOS_SEED_DOCS)]
     save_index(IndexBuilder(scheme=scheme).build(corpus).freeze(), store)
+    # the ack file lives OUTSIDE the store dir: it stands in for the
+    # clients' view of which writes were acknowledged
+    ack_file = store.parent / (store.name + ".acks")
 
     schedule = _record_chaos_schedule(add_n)
+    if sites_glob:
+        schedule = [(s, h) for (s, h) in schedule
+                    if fnmatch.fnmatch(s, sites_glob)]
+        assert schedule, f"no recorded fault sites match {sites_glob!r}"
     cases = [(site, hit, mode) for (site, hit) in schedule
              for mode in CHAOS_MODES]
     order = np.random.default_rng(seed).permutation(len(cases))
-    print(f"chaos soak: {len(schedule)} durable-write sites x "
-          f"{len(CHAOS_MODES)} kill modes = {len(cases)} cases, "
-          f"{iters} iterations (seed {seed})")
+    print(f"chaos soak: {len(schedule)} durable-write sites"
+          + (f" (filter {sites_glob!r})" if sites_glob else "")
+          + f" x {len(CHAOS_MODES)} kill modes = {len(cases)} cases, "
+            f"{iters} iterations (seed {seed})")
 
     src_root = Path(__file__).resolve().parent.parent / "src"
     env = {**os.environ}
@@ -262,18 +334,23 @@ def chaos_soak(iters: int, seed: int, store: Path, add_n: int,
     env.pop("REPRO_FAULT_PLAN", None)
 
     def run_child(extra_env):
+        if ack_file.exists():
+            ack_file.unlink()
         return subprocess.run(
             [sys.executable, str(Path(__file__).resolve()), "--chaos-child",
-             "--store", str(store), "--docs-per-round", str(add_n)],
+             "--store", str(store), "--docs-per-round", str(add_n),
+             "--ack-file", str(ack_file)],
             env={**env, **extra_env}, capture_output=True, text=True)
 
     outcomes = []
-    killed = survived = 0
+    killed = survived = acked_total = 0
+    recovered = CHAOS_SEED_DOCS
     for it in range(iters):
         site, hit, mode = cases[int(order[it % len(cases)])]
         plan = fault.FaultPlan(
             triggers=[fault.Trigger(site=site, hit=hit, mode=mode)],
             seed=seed)
+        n_before = recovered
         proc = run_child({"REPRO_FAULT_PLAN": plan.to_json()})
         if proc.returncode not in (0, fault.FAULT_EXIT):
             raise AssertionError(
@@ -287,17 +364,35 @@ def chaos_soak(iters: int, seed: int, store: Path, add_n: int,
         assert not rep["quarantined"], (
             f"chaos iteration {it}: a valid generation was quarantined "
             f"after {mode} at {site}@{hit}: {rep['quarantined']}")
+        # the acknowledged-writes contract: every doc id the child acked
+        # (= its WAL record was fsync-durable) must be served by the next
+        # recovery, kill or no kill
+        acked = ([int(x) for x in ack_file.read_text().split()]
+                 if ack_file.exists() else [])
+        recovered = _recovered_count(store)
+        assert n_before <= recovered <= n_before + add_n, (
+            f"chaos iteration {it}: recovery went backwards or invented "
+            f"docs ({n_before} -> {recovered}, {mode} at {site}@{hit})")
+        if acked:
+            assert acked == list(range(n_before, n_before + len(acked))), (
+                f"chaos iteration {it}: ack stream not contiguous: {acked}")
+            assert acked[-1] < recovered, (
+                f"chaos iteration {it}: ACKNOWLEDGED WRITE LOST — doc "
+                f"{acked[-1]} was acked but recovery serves only "
+                f"{recovered} docs ({mode} at {site}@{hit})")
+        acked_total += len(acked)
         if proc.returncode == fault.FAULT_EXIT:
             killed += 1
         else:
             survived += 1          # the plan's site wasn't reached this run
         outcomes.append({"iteration": it, "site": site, "hit": hit,
                          "mode": mode, "exit": proc.returncode,
+                         "acked": len(acked), "recovered": recovered,
                          "generation": current_generation(store)})
         if (it + 1) % 10 == 0 or it + 1 == iters:
             print(f"  {it + 1}/{iters}: {killed} killed, {survived} "
                   f"survived, serving gen {current_generation(store)}, "
-                  "fsck clean")
+                  f"{recovered} docs recovered, fsck clean")
 
     # convergence: one clean run must recover whatever the last kill left
     proc = run_child({})
@@ -310,8 +405,9 @@ def chaos_soak(iters: int, seed: int, store: Path, add_n: int,
     result = {"iterations": iters, "seed": seed,
               "docs_per_iteration": add_n,
               "schedule": [{"site": s, "hit": h} for s, h in schedule],
+              "sites_glob": sites_glob,
               "modes": list(CHAOS_MODES), "killed": killed,
-              "survived": survived,
+              "survived": survived, "acked_total": acked_total,
               "final_generation": current_generation(store),
               "outcomes": outcomes, "ok": True}
     if out_path is not None:
@@ -319,9 +415,9 @@ def chaos_soak(iters: int, seed: int, store: Path, add_n: int,
         out_path.write_text(json.dumps(result, indent=2))
         print(f"chaos schedule + outcomes written to {out_path}")
     print(f"chaos soak OK: {iters} fault-injected runs ({killed} killed, "
-          f"{survived} survived), store fsck-clean throughout, nothing "
-          f"quarantined, converged at generation "
-          f"{current_generation(store)}")
+          f"{survived} survived), {acked_total} acknowledged writes all "
+          f"recovered, store fsck-clean throughout, nothing quarantined, "
+          f"converged at generation {current_generation(store)}")
 
 
 def main() -> None:
@@ -343,26 +439,32 @@ def main() -> None:
     ap.add_argument("--chaos-out", type=Path, default=None, metavar="JSON",
                     help="write the kill schedule + per-iteration "
                          "outcomes here")
+    ap.add_argument("--chaos-sites", default=None, metavar="GLOB",
+                    help="fnmatch filter over the recorded kill schedule "
+                         "('wal.*' = ingest-kill leg; default: all sites)")
     # internal: one kill-loop iteration, run as a subprocess with
     # REPRO_FAULT_PLAN armed
     ap.add_argument("--chaos-child", action="store_true",
                     help=argparse.SUPPRESS)
     ap.add_argument("--store", type=Path, help=argparse.SUPPRESS)
+    ap.add_argument("--ack-file", type=Path, help=argparse.SUPPRESS)
     args = ap.parse_args()
 
     if args.chaos_child:
-        chaos_child(args.store, args.docs_per_round)
+        chaos_child(args.store, args.docs_per_round, args.ack_file)
         return
 
     t0 = time.time()
     if args.chaos:
         if args.chaos_store is not None:
             chaos_soak(args.chaos, args.chaos_seed, args.chaos_store,
-                       args.docs_per_round, args.chaos_out)
+                       args.docs_per_round, args.chaos_out,
+                       args.chaos_sites)
         else:
             with tempfile.TemporaryDirectory() as d:
                 chaos_soak(args.chaos, args.chaos_seed, Path(d) / "chaos",
-                           args.docs_per_round, args.chaos_out)
+                           args.docs_per_round, args.chaos_out,
+                           args.chaos_sites)
         print(f"chaos soak passed in {time.time() - t0:.1f}s")
         return
 

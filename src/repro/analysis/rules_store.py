@@ -1,4 +1,4 @@
-"""RPR201/RPR202/RPR203 — store crash-safety ordering and fault routing.
+"""RPR201-RPR204 — store crash-safety ordering and fault routing.
 
 The on-disk store's crash-safety contract (:mod:`repro.core.store`) is
 strictly ordered: array payloads land first, then the generation's
@@ -33,6 +33,13 @@ generation intact.
   ``CURRENT``, ``COMMITTED``, ``meta.json``, ``.npy``/``.npz``/``.pkl``).
   Deliberate-corruption fixtures waive it line-by-line with
   ``# repro: allow[RPR203]``.
+
+* **RPR204** — an ``fsio`` call inside the WAL module
+  (``src/repro/wal.py``) without a literal ``site="wal.*"`` keyword.
+  The ingest-kill chaos leg records the WAL's checkpoint names from one
+  clean run and replays process kills against each of them; a dynamic,
+  missing, or mis-prefixed site name is a mutation the acknowledged-
+  writes contract silently never exercises.
 """
 
 from __future__ import annotations
@@ -51,13 +58,18 @@ RPR202 = ("RPR202",
 RPR203 = ("RPR203",
           "store/checkpoint filesystem mutation bypasses repro.fault.fsio "
           "(fault injection cannot reach it)")
+RPR204 = ("RPR204",
+          "fsio call in the WAL module without a literal site=\"wal.*\" "
+          "name (the ingest-kill chaos schedule cannot target it)")
 
 STORE_FILE = "src/repro/core/store.py"
 FSIO_FILE = "src/repro/fault/fsio.py"
+WAL_FILE = "src/repro/wal.py"
 
 #: modules whose durable mutations must ALL route through fsio (they
 #: implement the store/checkpoint formats the chaos harness exercises)
-FSIO_ENFORCED = frozenset({STORE_FILE, "src/repro/core/sharded_index.py",
+FSIO_ENFORCED = frozenset({STORE_FILE, WAL_FILE,
+                           "src/repro/core/sharded_index.py",
                            "src/repro/train/checkpoint.py"})
 
 _ARRAY_METHODS = frozenset({"add_table", "add_arena"})
@@ -66,10 +78,10 @@ _FSIO_SAVE = frozenset({"np_save", "np_savez"})
 _FSIO_COMMIT = frozenset({"commit_text", "commit_bytes"})
 _WRITE_METHODS = frozenset({"write_text", "write_bytes"})
 _MUTATION_LEAVES = _WRITE_METHODS | frozenset(
-    {"rename", "replace", "rmtree", "unlink"})
+    {"rename", "replace", "rmtree", "unlink", "truncate"})
 #: substrings that mark a call as touching store/checkpoint artifacts
 _STORE_ARTIFACTS = ("manifest.json", "meta.json", "COMMITTED",
-                    ".npy", ".npz", ".pkl")
+                    ".npy", ".npz", ".pkl", ".wal")
 
 
 def _has_evidence(call: ast.Call) -> bool:
@@ -101,7 +113,7 @@ def _durable_write(call: ast.Call) -> bool:
         for arg in list(call.args[1:]) + [kw.value for kw in call.keywords
                                           if kw.arg == "mode"]:
             if isinstance(arg, ast.Constant) and isinstance(arg.value, str) \
-                    and "w" in arg.value:
+                    and ("w" in arg.value or "a" in arg.value):
                 return True
     return False
 
@@ -200,6 +212,33 @@ def check_fsio_routing(project: Project) -> list[Finding]:
                         "helpers so fault plans can crash/tear/fail it "
                         "(deliberate-corruption fixtures: "
                         "# repro: allow[RPR203])"))
+    return findings
+
+
+@checker(RPR204)
+def check_wal_sites(project: Project) -> list[Finding]:
+    """Every fsio call inside the WAL module must name its checkpoint
+    with a literal ``site="wal.*"`` keyword: the ingest-kill chaos leg
+    records those names from one clean run and replays process kills
+    against each, so a dynamic or mis-prefixed site is a durability
+    mutation the acknowledged-writes contract never exercises."""
+    findings: list[Finding] = []
+    for sf in project.files:
+        if sf.rel != WAL_FILE:
+            continue
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call) or not _is_fsio_call(node):
+                continue
+            site = next((kw.value for kw in node.keywords
+                         if kw.arg == "site"), None)
+            if not (isinstance(site, ast.Constant)
+                    and isinstance(site.value, str)
+                    and site.value.startswith("wal.")):
+                findings.append(Finding(
+                    rule="RPR204", path=sf.rel, line=node.lineno,
+                    message='fsio call needs a literal site="wal.*" name '
+                            "so the ingest-kill chaos schedule can record "
+                            "and target it"))
     return findings
 
 

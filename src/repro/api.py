@@ -176,15 +176,22 @@ class Aligner:
     def is_frozen(self) -> bool:
         return self._index.is_frozen
 
-    def add(self, text) -> int:
+    def add(self, text, *, request_id: str | None = None) -> int:
         """Index one more document; returns its (global) doc id.
 
         Valid in the build stage and on a live-loaded Aligner
         (``Aligner.load(path, live=True)``), where the write lands in the
         mutable delta and is served immediately alongside the frozen
-        store."""
+        store.
+
+        ``request_id`` (live indexes only) makes the call idempotent
+        within the un-compacted window: a replayed id returns the
+        original doc id without indexing a duplicate.  With a WAL open
+        (``Aligner.load(..., wal=...)``) the id is logged into the WAL
+        record so the window survives crash replay."""
         if isinstance(self._index, LiveIndex):
-            lid = self._index.add_text(self._tokens(text))
+            lid = self._index.add_text(self._tokens(text),
+                                       request_id=request_id)
             return self._index.doc_map[lid]
         if self.is_frozen:
             raise RuntimeError(
@@ -357,8 +364,8 @@ class Aligner:
                     "persist the delta there, or save to a new directory")
 
     @classmethod
-    def load(cls, path, *, mmap: bool = True, live: bool = False
-             ) -> "Aligner":
+    def load(cls, path, *, mmap: bool = True, live: bool = False,
+             wal=False) -> "Aligner":
         """Load a saved store and serve from it.  ``mmap=True`` (default)
         maps the table arrays read-only instead of materializing them —
         the serving mode for larger-than-RAM indexes.
@@ -368,12 +375,23 @@ class Aligner:
         in a small mutable delta, queried alongside the frozen arrays)
         and :meth:`compact` folds the delta into a new, atomically
         promoted store generation.  Sharded stores get one delta per
-        shard."""
+        shard.
+
+        ``wal`` (flat live stores only) opens a write-ahead log under
+        the store dir: every :meth:`add` is logged before it is indexed,
+        un-compacted writes are replayed on the next open, and
+        :meth:`compact` truncates the covered log suffix.  Pass ``True``
+        for the default per-record fsync policy or a
+        :class:`repro.wal.WalConfig` to choose group-commit batching."""
         root = Path(path)
         meta = {}
         if (root / _ALIGNER_META).exists():
             meta = json.loads((root / _ALIGNER_META).read_text())
         if (root / "meta.json").exists():               # sharded layout
+            if wal:
+                raise ValueError(
+                    "wal is supported for flat live stores only "
+                    "(per-shard WALs are future work)")
             smeta = json.loads((root / "meta.json").read_text())
             from .core import scheme_from_spec
             manifest_scheme = smeta["scheme"]
@@ -382,7 +400,9 @@ class Aligner:
                 n_shards=smeta["n_shards"], method=smeta["method"])
             index.restore(root, missing_ok=False, mmap=mmap, live=live)
         else:                                           # flat layout
-            index = (LiveIndex.open(root, mmap=mmap) if live
+            if wal and not live:
+                raise ValueError("wal requires live=True")
+            index = (LiveIndex.open(root, mmap=mmap, wal=wal) if live
                      else load_index(root, mmap=mmap))
             manifest_scheme = read_manifest(root)["scheme"]
         weight = manifest_scheme.get("weight") or {}

@@ -210,7 +210,7 @@ class ColumnarBuilder:
 
     def freeze_to_store(self, path, *, mmap: bool = True,
                         include_scheme: bool = True,
-                        doc_map=None) -> SearchIndex:
+                        doc_map=None, wal_watermark=None) -> SearchIndex:
         """Freeze straight into a versioned store directory, streaming.
 
         Each table's ``.npy`` files are written the moment its columns are
@@ -241,7 +241,8 @@ class ColumnarBuilder:
         del packed_cols, win_cols
         writer.finalize(num_texts=self.num_texts,
                         num_windows=self.num_windows,
-                        text_lengths=self.text_lengths, doc_map=doc_map)
+                        text_lengths=self.text_lengths, doc_map=doc_map,
+                        wal_watermark=wal_watermark)
         # just-written store: skip the load-time checksum verification
         return load_index(path, mmap=mmap, scheme=self.scheme, verify=False)
 

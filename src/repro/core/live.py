@@ -46,6 +46,7 @@ from pathlib import Path
 
 import numpy as np
 
+from ..wal import WalConfig, WriteAheadLog, wal_dir
 from . import store as index_store
 from .builder import IndexBuilder
 from .guard import engine_only
@@ -76,12 +77,28 @@ class LiveIndex:
     scheme_in_manifest: bool = True     # sharded shards omit the scheme spec
     sealed: IndexBuilder | None = None  # delta level an overlapped compaction
     #                                     is folding in (immutable once set)
+    wal: WriteAheadLog | None = None    # durable ingest log (opt-in)
     _sealed_docs: list[int] = field(default_factory=list, init=False,
                                     repr=False)
     _next_gid: int = field(default=0, init=False, repr=False)
     # monotonic timestamp of the first add into the current delta (None
     # while it is empty) — the supervisor's age-based compaction trigger
     _delta_born: float | None = field(default=None, init=False, repr=False)
+    # request-id -> local text id, for at-least-once clients: a retried
+    # /add with the same id returns the original doc instead of indexing
+    # a duplicate.  Entries live for the un-compacted window (dropped once
+    # their doc folds into a promoted generation) and are rebuilt from the
+    # WAL on replay, so the window survives a crash.
+    _requests: dict[str, int] = field(default_factory=dict, init=False,
+                                      repr=False)
+    _dedup_hits: int = field(default=0, init=False, repr=False)
+    wal_replayed: int = field(default=0, init=False, repr=False)
+    # WAL positions: _wal_covered is the serving generation's watermark
+    # (records below it are folded in); _sealed_watermark is the pending
+    # one an in-flight overlapped compaction will promote
+    _wal_covered: int = field(default=0, init=False, repr=False)
+    _sealed_watermark: int | None = field(default=None, init=False,
+                                          repr=False)
 
     def __post_init__(self):
         self._next_gid = max(self.doc_map, default=-1) + 1
@@ -89,7 +106,8 @@ class LiveIndex:
     # -- construction -------------------------------------------------------
 
     @classmethod
-    def open(cls, root, *, mmap: bool = True, scheme=None) -> "LiveIndex":
+    def open(cls, root, *, mmap: bool = True, scheme=None,
+             wal: "bool | WalConfig" = False) -> "LiveIndex":
         """Open a store directory for live serving: mmap-load the serving
         generation, start an empty delta, and adopt the manifest's
         ``doc_map`` (identity when the store never recorded one).
@@ -98,6 +116,13 @@ class LiveIndex:
         — a serving generation that fails its checksum verification is
         quarantined and the newest verifying generation is served instead
         (recovery happens here, at open time; queries never re-verify).
+
+        ``wal`` (``True`` or a :class:`~repro.wal.WalConfig`) makes ingest
+        durable: adds append to ``<root>/wal/`` before indexing, and this
+        open REPLAYS every un-compacted record into the fresh delta —
+        idempotent, because records below the manifest's ``wal_watermark``
+        or whose gid the ``doc_map`` already holds are skipped, so
+        replaying twice equals replaying once.
         """
         root = Path(root)
         serve_dir = index_store.resolve_verified(root)
@@ -106,13 +131,28 @@ class LiveIndex:
                                         verify=False)
         manifest = index_store.read_manifest(serve_dir)
         doc_map = manifest.get("doc_map") or list(range(frozen.num_texts))
-        return cls(frozen=frozen,
+        live = cls(frozen=frozen,
                    delta=IndexBuilder(scheme=frozen.scheme,
                                       method=frozen.method),
                    doc_map=[int(g) for g in doc_map], root=root,
                    generation=index_store.current_generation(root),
                    mmap=mmap,
                    scheme_in_manifest=manifest.get("scheme") is not None)
+        if wal:
+            watermark = int(manifest.get("wal_watermark") or 0)
+            live.wal = WriteAheadLog(
+                wal_dir(root),
+                config=wal if isinstance(wal, WalConfig) else None,
+                start_lsn=watermark)
+            live._wal_covered = watermark
+            known = set(live.doc_map)
+            for rec in live.wal.records():
+                if rec.lsn < watermark or rec.gid in known:
+                    continue            # already folded into the frozen gen
+                live._apply_add(rec.tokens, gid=rec.gid,
+                                request_id=rec.request_id)
+                live.wal_replayed += 1
+        return live
 
     # -- query-engine surface -----------------------------------------------
 
@@ -174,13 +214,40 @@ class LiveIndex:
     # -- writes -------------------------------------------------------------
 
     @engine_only
-    def add_text(self, tokens, *, gid: int | None = None) -> int:
+    def add_text(self, tokens, *, gid: int | None = None,
+                 request_id: str | None = None) -> int:
         """Index one more document into the delta; returns its LOCAL text
         id (frozen ids come first, delta ids after — stable across
         compactions).  ``gid`` pins the global doc id (the sharded index
-        assigns those); default is one past the largest id seen."""
+        assigns those); default is one past the largest id seen.
+
+        ``request_id`` makes the add idempotent within the un-compacted
+        window: a repeat of an id already indexed (including one replayed
+        from the WAL after a crash) returns the original local id without
+        indexing anything — the server-side half of safe client retries.
+
+        With a WAL attached the record is appended (and group-commit
+        policy applied) BEFORE the document becomes visible, so anything
+        a query can see is at worst one fsync away from durable; call
+        :meth:`wal_commit` for the hard acknowledgement barrier.
+        """
+        if request_id is not None:
+            lid = self._requests.get(request_id)
+            if lid is not None:
+                self._dedup_hits += 1
+                return lid
+        tokens = np.asarray(tokens, np.int64)
         if gid is None:
             gid = self._next_gid
+        if self.wal is not None:
+            self.wal.append(int(gid), request_id, tokens)
+            self.wal.maybe_sync()
+        return self._apply_add(tokens, gid=int(gid), request_id=request_id)
+
+    def _apply_add(self, tokens, *, gid: int,
+                   request_id: str | None = None) -> int:
+        """Index a document WITHOUT logging it — the shared tail of
+        ``add_text`` and WAL replay (whose records are already on disk)."""
         if self.delta.num_texts == 0:
             self._delta_born = time.monotonic()
         base = self.frozen.num_texts + \
@@ -188,7 +255,32 @@ class LiveIndex:
         lid = base + self.delta.add_text(np.asarray(tokens, np.int64))
         self.doc_map.append(int(gid))
         self._next_gid = max(self._next_gid, int(gid) + 1)
+        if request_id is not None:
+            self._requests[request_id] = lid
         return lid
+
+    @engine_only
+    def wal_commit(self) -> None:
+        """Durability barrier for acknowledgements: fsync the WAL so every
+        add so far survives power loss (no-op without a WAL, or when
+        nothing is pending).  The serve path calls this once per batcher
+        micro-batch — group commit with the batcher's linger window."""
+        if self.wal is not None:
+            self.wal.sync()
+
+    def wal_status(self) -> dict | None:
+        """Operator view of ingest durability (``None`` without a WAL):
+        the log's counters plus replay/lag/dedup — ``lag_records`` is how
+        many logged records the serving generation does not yet cover
+        (what a crash would replay)."""
+        if self.wal is None:
+            return None
+        st = self.wal.stats()
+        st["replayed"] = self.wal_replayed
+        st["dedup_hits"] = self._dedup_hits
+        st["lag_records"] = max(0, self.wal.next_lsn - self._wal_covered)
+        st["age_s"] = self.wal.age_s
+        return st
 
     # -- queries ------------------------------------------------------------
 
@@ -328,6 +420,11 @@ class LiveIndex:
         # appending to doc_map but never touch this prefix
         self._sealed_docs = list(self.doc_map[:self.frozen.num_texts +
                                               self.sealed.num_texts])
+        # every sealed doc's WAL record has an LSN below next_lsn (appends
+        # precede indexing), so this is the watermark the merged
+        # generation's manifest will carry
+        if self.wal is not None:
+            self._sealed_watermark = self.wal.next_lsn
         return self.sealed.num_texts
 
     @engine_only
@@ -347,6 +444,9 @@ class LiveIndex:
         self.delta = self.sealed
         self.sealed = None
         self._sealed_docs = []
+        # rollback keeps every WAL segment: the un-promoted records are
+        # live again and must replay after a crash
+        self._sealed_watermark = None
         self._delta_born = (time.monotonic() if self.delta.num_texts
                             else None)
         return True
@@ -369,7 +469,7 @@ class LiveIndex:
         new_idx = self._merged_builder(
             levels=(self.frozen, self.sealed)).freeze_to_store(
             gen_dir, mmap=self.mmap, include_scheme=self.scheme_in_manifest,
-            doc_map=self._sealed_docs)
+            doc_map=self._sealed_docs, wal_watermark=self._sealed_watermark)
         return gen, new_idx
 
     @engine_only
@@ -386,6 +486,16 @@ class LiveIndex:
         self.sealed = None
         self._sealed_docs = []
         self.generation = gen
+        if self.wal is not None and self._sealed_watermark is not None:
+            # the promoted manifest covers everything below the watermark:
+            # drop the covered segments and the dedup entries whose docs
+            # now live in the frozen generation (the retry window is the
+            # un-compacted suffix, by contract)
+            self._wal_covered = self._sealed_watermark
+            self.wal.truncate_upto(self._sealed_watermark)
+            self._requests = {rid: lid for rid, lid in self._requests.items()
+                              if lid >= new_idx.num_texts}
+        self._sealed_watermark = None
         return gen
 
     @engine_only

@@ -269,7 +269,7 @@ class IndexWriter:
         self._arena = {"mode": arena.mode, "max_run": int(arena.max_run)}
 
     def finalize(self, *, num_texts: int, num_windows: int,
-                 text_lengths, doc_map=None) -> None:
+                 text_lengths, doc_map=None, wal_watermark=None) -> None:
         manifest = {
             "format": FORMAT,
             "format_version": FORMAT_VERSION,
@@ -285,6 +285,10 @@ class IndexWriter:
             "arena": self._arena,
             "checksums": self._checksums,
         }
+        if wal_watermark is not None:
+            # every WAL record below this LSN is folded into these arrays;
+            # replay skips them and truncation may drop their segments
+            manifest["wal_watermark"] = int(wal_watermark)
         # last write in the RPR201 ordering: arrays, then this commit
         # (atomic tmp + rename inside commit_text)
         fsio.commit_text(self.root / "manifest.json", json.dumps(manifest),
@@ -487,6 +491,20 @@ def verify_store(root) -> dict:
             rep = verify_generation(p).to_dict()
             rep["role"] = "quarantined"
             out["quarantined"].append(rep)
+    # write-ahead log: segment CRCs/chain + watermark <-> serving-
+    # generation consistency (absent wal/ dir verifies vacuously)
+    from ..wal import verify_wal
+    watermark = None
+    sdir = generation_dir(root, serving_gen)
+    if (sdir / "manifest.json").exists():
+        try:
+            watermark = json.loads(
+                (sdir / "manifest.json").read_text()).get("wal_watermark")
+        except (OSError, ValueError):
+            pass                      # already reported by the gen check
+    out["wal"] = verify_wal(root, serving_watermark=watermark)
+    if not out["wal"]["ok"]:
+        out["ok"] = False
     return out
 
 

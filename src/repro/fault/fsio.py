@@ -95,6 +95,53 @@ def commit_bytes(path, data: bytes, *, site: str) -> None:
     replace(tmp, path, site=site + ".rename")
 
 
+def open_append(path, *, site: str):
+    """Open ``path`` in append-binary mode (creating it), as a named
+    checkpoint — the WAL's segment-creation / reopen primitive."""
+    trig = checkpoint(site)
+    f = open(Path(path), "ab")
+    _post(trig)
+    return f
+
+
+def append_bytes(f, data: bytes, *, site: str) -> None:
+    """Append ``data`` to an open binary file handle and flush it to the
+    OS (``os._exit`` crash modes must not lose userspace-buffered bytes —
+    the crash model is process death, where a completed ``write(2)``
+    survives in the page cache).  Torn mode leaves roughly half of
+    ``data`` on disk, the WAL's torn-frame case."""
+    trig = checkpoint(site)
+    if trig is not None and trig.mode == "torn":
+        f.write(data[: max(1, len(data) // 2)])
+        f.flush()
+        raise FaultInjected(trig.site, trig.hit, "torn")
+    f.write(data)
+    f.flush()
+    _post(trig)
+
+
+def fsync(f, *, site: str) -> None:
+    """Flush + ``os.fsync`` an open file handle — the durability barrier
+    group-commit acks wait on."""
+    trig = checkpoint(site)
+    f.flush()
+    os.fsync(f.fileno())
+    _post(trig)
+
+
+def truncate(target, size: int, *, site: str) -> None:
+    """Truncate an open handle or a path to ``size`` bytes (torn-tail
+    repair: everything past the last complete frame is discarded)."""
+    trig = checkpoint(site)
+    if hasattr(target, "truncate"):
+        target.flush()
+        target.truncate(size)
+    else:
+        with open(Path(target), "r+b") as f:
+            f.truncate(size)
+    _post(trig)
+
+
 def unlink(path, *, site: str, missing_ok: bool = False) -> None:
     trig = checkpoint(site)
     Path(path).unlink(missing_ok=missing_ok)

@@ -11,7 +11,12 @@ per-array CRC32 checksums recorded in the manifests
   :meth:`ShardedAlignmentIndex.save`) is expanded into one check per
   shard store;
 * any other directory is scanned one level deep for store roots, so
-  pointing fsck at a results/ or tmp tree checks everything inside.
+  pointing fsck at a results/ or tmp tree checks everything inside;
+* a store's write-ahead log (``wal/`` segments), when present, is
+  verified too (:func:`repro.wal.verify_wal`): frame CRCs, segment
+  chain continuity, and manifest ``wal_watermark`` consistency — a torn
+  tail on the last segment is reported but is expected crash debris
+  (repaired on the next open), not corruption.
 
 Exit status is 1 iff any *committed, non-quarantined* generation fails —
 aborted write dirs and already-quarantined generations are reported but
@@ -100,6 +105,16 @@ def render_text(result: dict) -> str:
         for g in rep["quarantined"]:
             lines.append(f"  quarantined {Path(g['path']).name}: "
                          f"{len(g['problems'])} problem(s)")
+        wal = rep.get("wal")
+        if wal and wal.get("present"):
+            mark = "ok" if wal["ok"] else "FAILED"
+            lines.append(
+                f"  wal {mark}  {wal['segments']} segment(s), "
+                f"{wal['records']} record(s), lsn [{wal['first_lsn']}, "
+                f"{wal['end_lsn']})"
+                + (", torn tail (repairable)" if wal["torn_tail"] else ""))
+            for p in wal["problems"]:
+                lines.append(f"    - {p}")
     lines.append(f"{result['checked']} store(s) checked: "
                  + ("all ok" if result["ok"] else "FAILURES found"))
     return "\n".join(lines)

@@ -5,6 +5,13 @@
 
 ``--live`` opens the store for incremental serving (POST /add and
 POST /compact work); without it the server is query-only.
+
+``--wal`` (requires ``--live``) makes ingest durable: every /add is
+logged to a write-ahead log before it is indexed and acknowledged only
+after its record is fsynced.  The default policy is group commit — the
+batcher runs one fsync per write micro-batch, so its linger window is
+the commit window; ``--wal-fsync-every-n 1`` forces an fsync per record
+instead.
 """
 
 from __future__ import annotations
@@ -44,12 +51,39 @@ def main(argv=None) -> None:
     ap.add_argument("--prune-keep", type=int, default=2,
                     help="superseded store generations to retain after each "
                          "background compaction (default 2)")
+    ap.add_argument("--wal", action="store_true",
+                    help="durable ingest (flat live stores only): log every "
+                         "/add to a write-ahead log and ack only after its "
+                         "record is fsynced; crash replay restores every "
+                         "acknowledged write")
+    ap.add_argument("--wal-fsync-every-n", type=int, default=0,
+                    help="WAL fsync policy: 0 (default) = group commit, one "
+                         "fsync per batcher write micro-batch; 1 = fsync "
+                         "every record; N>1 = fsync every N records")
+    ap.add_argument("--wal-segment-bytes", type=int, default=4 << 20,
+                    help="WAL segment rotation size (default 4 MiB)")
+    ap.add_argument("--wal-max-bytes", type=int, default=32_000_000,
+                    help="with --auto-compact: compact when un-truncated WAL "
+                         "segments exceed this many bytes (default 32e6)")
+    ap.add_argument("--wal-max-age-s", type=float, default=60.0,
+                    help="with --auto-compact: compact when the oldest "
+                         "un-compacted WAL record is this old (default 60s)")
     args = ap.parse_args(argv)
 
     from repro.api import Aligner
     from repro.serve import AlignServer, CompactionSupervisor
 
-    aligner = Aligner.load(args.store, mmap=not args.no_mmap, live=args.live)
+    wal = False
+    if args.wal:
+        if not args.live:
+            ap.error("--wal requires --live")
+        from repro.wal import WalConfig
+        wal = WalConfig(fsync_every_n=args.wal_fsync_every_n,
+                        segment_bytes=args.wal_segment_bytes)
+    # WAL replay inside load() indexes into the delta, but this runs at
+    # startup before the server (and its engine thread) exists
+    aligner = Aligner.load(args.store, mmap=not args.no_mmap,  # repro: allow[RPR101]
+                           live=args.live, wal=wal)
     print(f"serving {aligner!r}")
 
     supervisor = None
@@ -57,7 +91,9 @@ def main(argv=None) -> None:
         supervisor = CompactionSupervisor(
             max_delta_fraction=args.compact_fraction,
             max_delta_age_s=args.compact_age_s,
-            prune_keep=args.prune_keep)
+            prune_keep=args.prune_keep,
+            max_wal_bytes=args.wal_max_bytes,
+            max_wal_age_s=args.wal_max_age_s)
 
     async def run():
         server = AlignServer(aligner, host=args.host, port=args.port,

@@ -8,7 +8,9 @@ an alignment query server needs exactly six endpoints:
 POST   /query     one alignment query (dynamic-batched); body/response
                   per :mod:`repro.serve.protocol`
 POST   /add       index one document into the live delta (FIFO with
-                  queries: later queries see it)
+                  queries: later queries see it); with a WAL open the
+                  200 is sent only after the record is fsync-durable,
+                  and a client ``request_id`` makes retries idempotent
 POST   /compact   fold the delta into a new store generation without
                   pausing traffic (see :meth:`AlignServer.compact`)
 GET    /metrics   :class:`~repro.serve.metrics.ServeMetrics` snapshot
@@ -67,6 +69,12 @@ class AlignServer:
                                       max_linger_us=max_linger_us,
                                       queue_cap=queue_cap,
                                       metrics=self.metrics)
+        idx = aligner._index
+        if isinstance(idx, LiveIndex) and idx.wal is not None:
+            # durable-ack hook: adds coalesce into write groups and the
+            # batcher runs ONE wal fsync per group before resolving any
+            # of their futures — the linger window IS the commit window
+            self.batcher.write_flush = idx.wal_commit
         # advisory Retry-After on admission-control 503s (seconds)
         self.retry_after_s = retry_after_s
         # optional CompactionSupervisor (serve.supervisor); started and
@@ -154,20 +162,35 @@ class AlignServer:
 
     async def handle_add(self, body) -> tuple[int, bytes]:
         try:
-            text = parse_add_request(body)
+            text, request_id = parse_add_request(body)
             tokens = self.aligner._tokens(text)
         except (ProtocolError, ValueError) as e:
             return 400, error_response(str(e), 400)
+
+        def _do_add():
+            # the dedup window answers replayed request_ids without
+            # growing the corpus — detect that by the doc count
+            before = self.aligner.num_docs
+            gid = self.aligner.add(tokens, request_id=request_id)
+            return gid, self.aligner.num_docs == before
+
         try:
             # add mutates the delta, so it is @engine_only: calling
             # aligner.add() here directly would race the batch in flight
-            # (RPR101 flags it); submit_control serializes it FIFO
-            doc_id = await self.batcher.submit_control(
-                lambda: self.aligner.add(tokens), "add")
+            # (RPR101 flags it).  With a WAL wired, submit_write groups
+            # consecutive adds and acks only after the group's single
+            # wal fsync (write_flush); without one, submit_control keeps
+            # the plain FIFO path.
+            if self.batcher.write_flush is not None:
+                doc_id, deduped = await self.batcher.submit_write(_do_add)
+            else:
+                doc_id, deduped = await self.batcher.submit_control(
+                    _do_add, "add")
         except RuntimeError as e:       # frozen (non-live) index
             return 409, error_response(str(e), 409)
-        self.metrics.inc("adds_total")
-        return 200, ok_response({"doc_id": int(doc_id)})
+        self.metrics.inc("adds_deduped_total" if deduped else "adds_total")
+        return 200, ok_response({"doc_id": int(doc_id),
+                                 "deduped": bool(deduped)})
 
     async def handle_compact(self) -> tuple[int, bytes]:
         try:
@@ -224,12 +247,25 @@ class AlignServer:
         gen = getattr(idx, "generation", None)
         degraded = bool(self._last_failed_shards) or \
             (self.supervisor is not None and self.supervisor.failing)
-        return ok_response({"status": "degraded" if degraded else "healthy",
-                            "docs": self.aligner.num_docs,
-                            "generation": gen,
-                            "live": isinstance(idx, LiveIndex),
-                            "compacting": self._compacting,
-                            "failed_shards": list(self._last_failed_shards)})
+        payload = {"status": "degraded" if degraded else "healthy",
+                   "docs": self.aligner.num_docs,
+                   "generation": gen,
+                   "live": isinstance(idx, LiveIndex),
+                   "compacting": self._compacting,
+                   "failed_shards": list(self._last_failed_shards)}
+        if isinstance(idx, LiveIndex):
+            # compaction-pressure gauges plus the ingest-durability view:
+            # wal.lag_records is what a crash right now would replay
+            payload["delta_fraction"] = idx.delta_fraction
+            payload["delta_age_s"] = idx.delta_age_s
+            wal = idx.wal_status()
+            if wal is not None:
+                payload["wal"] = {"replayed": wal["replayed"],
+                                  "lag_records": wal["lag_records"],
+                                  "pending_records": wal["pending"],
+                                  "bytes": wal["bytes"],
+                                  "age_s": wal["age_s"]}
+        return ok_response(payload)
 
     # -- HTTP plumbing -------------------------------------------------------
 
@@ -275,6 +311,9 @@ class AlignServer:
             snap = self.metrics.snapshot()
             snap["fault"] = fault.stats()
             snap["store"] = store_counters()
+            idx = self.aligner._index
+            if isinstance(idx, LiveIndex):
+                snap["wal"] = idx.wal_status()
             return 200, json.dumps(snap).encode()
         if path == "/healthz" and method == "GET":
             return 200, self._healthz()

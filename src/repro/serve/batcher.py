@@ -22,8 +22,12 @@ The drain loop implements the batching policy:
   ``(theta, QueryOptions.batch_key())`` until ``max_batch`` is reached or
   ``max_linger_us`` expires — under load the linger never sleeps because
   the queue already holds a backlog;
-* a control job (add/seal/promote) or an incompatible query stops the
+* a control job (seal/promote) or an incompatible query stops the
   current batch (preserving FIFO order: it is stashed and handled next);
+* write jobs (``/add``) coalesce the same way queries do: consecutive
+  writes form a group that runs on the engine and is covered by ONE
+  ``write_flush`` durability barrier (the WAL fsync) before any ack —
+  group commit, with the linger window as the commit window;
 * requests whose deadline passed while queued are completed with
   :class:`DeadlineExceeded` *before* the probe runs — expired work never
   costs engine time;
@@ -78,6 +82,18 @@ class _ControlItem:
         self.label = label
 
 
+class _WriteItem:
+    """A durable write (an ``/add``): runs on the engine like a control
+    job, but consecutive writes coalesce into one group that shares a
+    single ``write_flush`` durability barrier before any ack."""
+
+    __slots__ = ("fn", "future")
+
+    def __init__(self, fn, future):
+        self.fn = fn
+        self.future = future
+
+
 class DynamicBatcher:
     """Coalescing queue + single-threaded engine around an ``Aligner``."""
 
@@ -93,6 +109,10 @@ class DynamicBatcher:
         self.metrics = metrics if metrics is not None else ServeMetrics()
         self._queue: asyncio.Queue = asyncio.Queue()
         self._stash = None              # item popped but not yet batchable
+        # durable-ack hook (set by the server when the index has a WAL):
+        # called ONCE per write group, on the engine thread, after every
+        # member ran — group commit with the batcher's linger window
+        self.write_flush = None
         self._inflight = 0
         self._engine = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix=guard.ENGINE_THREAD_PREFIX)
@@ -169,6 +189,21 @@ class DynamicBatcher:
         self.start()
         return fut
 
+    def submit_write(self, fn) -> asyncio.Future:
+        """Enqueue a durable write: ``fn()`` runs on the engine thread in
+        FIFO order, consecutive writes coalesce (up to ``max_batch`` /
+        the linger window) and the whole group is covered by ONE
+        ``write_flush`` before any of their futures resolve — the ack is
+        durable, the fsync amortized.  Always admitted, like control
+        jobs.  If the flush fails the whole group fails un-acked (the
+        documents may still be indexed; an at-least-once client retries
+        with the same ``request_id`` and dedups server-side)."""
+        loop = asyncio.get_running_loop()
+        fut = loop.create_future()
+        self._queue.put_nowait(_WriteItem(fn=fn, future=fut))
+        self.start()
+        return fut
+
     def run_offband(self, fn) -> asyncio.Future:
         """Run ``fn()`` on a throwaway thread OUTSIDE the engine — for
         work that must overlap serving and only reads immutable state
@@ -194,6 +229,25 @@ class DynamicBatcher:
                 item = await self._queue.get()
             if isinstance(item, _ControlItem):
                 await self._run_control(item)
+                continue
+            if isinstance(item, _WriteItem):
+                group = [item]
+                end = loop.time() + self.linger_s
+                while len(group) < self.max_batch:
+                    wait = end - loop.time()
+                    try:
+                        if wait > 0:
+                            nxt = await asyncio.wait_for(self._queue.get(),
+                                                         wait)
+                        else:
+                            nxt = self._queue.get_nowait()
+                    except (asyncio.TimeoutError, asyncio.QueueEmpty):
+                        break
+                    if not isinstance(nxt, _WriteItem):
+                        self._stash = nxt   # FIFO: handled right after us
+                        break
+                    group.append(nxt)
+                await self._commit_group(group)
                 continue
             batch = [item]
             key = item.batch_key()
@@ -225,6 +279,44 @@ class DynamicBatcher:
         else:
             if not item.future.done():
                 item.future.set_result(out)
+
+    async def _commit_group(self, group: list) -> None:
+        loop = asyncio.get_running_loop()
+        try:
+            results = await loop.run_in_executor(
+                self._engine, self._apply_writes, [w.fn for w in group])
+        except Exception as e:                      # noqa: BLE001
+            # the durable barrier (or the engine itself) failed: nothing
+            # in the group is acknowledged — at-least-once clients retry
+            # with their request_id and the index dedups the replay
+            self.metrics.inc("errors_total", by=len(group))
+            for w in group:
+                if not w.future.done():
+                    w.future.set_exception(e)
+            return
+        self.metrics.observe_group_commit(len(group))
+        for w, (ok, val) in zip(group, results):
+            if w.future.done():
+                continue
+            if ok:
+                w.future.set_result(val)
+            else:
+                w.future.set_exception(val)
+
+    @engine_only
+    def _apply_writes(self, fns: list):
+        """Engine-thread body of one write group: run every member
+        (collecting per-item success/failure), then ONE ``write_flush``
+        durability barrier covering them all."""
+        out = []
+        for fn in fns:
+            try:
+                out.append((True, fn()))
+            except Exception as e:                  # noqa: BLE001
+                out.append((False, e))
+        if self.write_flush is not None:
+            self.write_flush()
+        return out
 
     async def _dispatch(self, batch: list, loop) -> None:
         now = loop.time()

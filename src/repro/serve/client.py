@@ -22,6 +22,7 @@ import os
 import random
 import struct
 import time
+import uuid
 
 from .app import _WS_GUID, _ws_read_frame
 
@@ -55,11 +56,15 @@ class AlignClient:
     """Blocking client over one keep-alive HTTP connection.
 
     ``retries`` (default 0 — off) arms bounded retry with exponential
-    backoff + jitter for **queries only**: a 503 (admission control
-    shedding load, honoring its ``Retry-After`` hint) or a dropped
-    connection (server restart) is retried up to ``retries`` times.
-    ``add``/``compact`` are never retried — they are not idempotent, and
-    a connection lost mid-request leaves their effect unknown.
+    backoff + jitter: a 503 (admission control shedding load, honoring
+    its ``Retry-After`` hint) or a dropped connection (server restart)
+    is retried up to ``retries`` times.  Queries are always safe to
+    retry; ``add`` is retried only under a ``request_id`` (one is
+    auto-generated when retries are armed), which the server echoes into
+    the WAL record and dedups within the un-compacted window — a
+    connection lost mid-request no longer leaves the add's effect
+    unknown.  ``compact`` is never retried (a replay would fold the next
+    delta too).
     """
 
     def __init__(self, host: str = "127.0.0.1", port: int = 0,
@@ -94,29 +99,27 @@ class AlignClient:
         status, payload, _ = self._request_full(method, path, body)
         return status, payload
 
-    def query(self, text, theta: float, *, options=None, deadline_ms=None
-              ) -> dict:
-        """Returns the response's ``result`` dict
-        (``QueryResult.to_dict()`` shape — rebuild with
-        ``QueryResult.from_dict`` if you want the typed object)."""
-        body = _query_body(text, theta, options=options,
-                           deadline_ms=deadline_ms)
-        for attempt in range(self.retries + 1):
+    def _request_retrying(self, method: str, path: str, body: dict,
+                          *, can_retry: bool) -> tuple[int, dict]:
+        """Bounded-retry request: 503s back off (honoring Retry-After),
+        dropped connections reconnect clean.  ``can_retry=False``
+        degrades to a single attempt (non-idempotent request)."""
+        retries = self.retries if can_retry else 0
+        for attempt in range(retries + 1):
             retry_after = None
             try:
                 status, payload, headers = self._request_full(
-                    "POST", "/query", body)
+                    method, path, body)
             except ConnectionError:
                 # reset/refused/broken-pipe, including http.client's
                 # RemoteDisconnected (a ConnectionResetError): reset the
                 # keep-alive connection so the retry reconnects clean
-                if attempt >= self.retries:
+                if attempt >= retries:
                     raise
                 self._conn.close()
             else:
-                if status != 503 or attempt >= self.retries:
-                    _raise_for(status, payload)
-                    return payload["result"]
+                if status != 503 or attempt >= retries:
+                    return status, payload
                 ra = headers.get("retry-after")
                 if ra is not None:
                     try:
@@ -130,10 +133,32 @@ class AlignClient:
             time.sleep(delay)
         raise AssertionError("unreachable")  # loop returns or raises
 
-    def add(self, text) -> int:
-        status, payload = self._request(
-            "POST", "/add", {"text": text if isinstance(text, str) else
-                             [int(t) for t in text]})
+    def query(self, text, theta: float, *, options=None, deadline_ms=None
+              ) -> dict:
+        """Returns the response's ``result`` dict
+        (``QueryResult.to_dict()`` shape — rebuild with
+        ``QueryResult.from_dict`` if you want the typed object)."""
+        body = _query_body(text, theta, options=options,
+                           deadline_ms=deadline_ms)
+        status, payload = self._request_retrying("POST", "/query", body,
+                                                 can_retry=True)
+        _raise_for(status, payload)
+        return payload["result"]
+
+    def add(self, text, *, request_id: str | None = None) -> int:
+        """Index one document; returns its doc id.  A ``request_id``
+        makes the call idempotent server-side (replays within the
+        un-compacted window return the original id), so when retries are
+        armed and none was given one is auto-generated — without an id
+        the request falls back to a single attempt."""
+        if request_id is None and self.retries > 0:
+            request_id = uuid.uuid4().hex
+        body = {"text": text if isinstance(text, str) else
+                [int(t) for t in text]}
+        if request_id is not None:
+            body["request_id"] = request_id
+        status, payload = self._request_retrying(
+            "POST", "/add", body, can_retry=request_id is not None)
         _raise_for(status, payload)
         return payload["doc_id"]
 

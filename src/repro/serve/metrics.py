@@ -75,6 +75,9 @@ class ServeMetrics:
             "expired_total": 0,        # 504: deadline passed before probe
             "errors_total": 0,         # engine-side exceptions
             "adds_total": 0,
+            "adds_deduped_total": 0,   # retried request_ids answered from
+            #                            the dedup window, nothing indexed
+            "wal_group_commits_total": 0,   # durable-ack flush barriers
             "compactions_total": 0,
             "batches_total": 0,        # find_batch calls issued
             "degraded_total": 0,       # partial (shard-skipping) responses
@@ -86,6 +89,9 @@ class ServeMetrics:
         self.latency = Histogram()         # enqueue -> response, seconds
         self.queue_wait = Histogram()      # enqueue -> batch dispatch
         self.batch_size = Histogram(first_edge=1.0)
+        # adds acknowledged per durable flush — how well group commit is
+        # amortizing fsyncs (mean ~1 means per-record fsync cost)
+        self.wal_group_commit = Histogram(first_edge=1.0)
         self.stage_seconds = {"sketch": 0.0, "probe": 0.0, "sweep": 0.0,
                               "queue_wait": 0.0}
 
@@ -110,10 +116,17 @@ class ServeMetrics:
             self.counters["responses_total"] += 1
             self.latency.add(seconds)
 
+    def observe_group_commit(self, size: int) -> None:
+        """One write group made durable: ``size`` adds shared the flush."""
+        with self._lock:
+            self.counters["wal_group_commits_total"] += 1
+            self.wal_group_commit.add(float(size))
+
     def snapshot(self) -> dict:
         with self._lock:
             return {"counters": dict(self.counters),
                     "latency_s": self.latency.summary(),
                     "queue_wait_s": self.queue_wait.summary(),
                     "batch_size": self.batch_size.summary(),
+                    "wal_group_commit": self.wal_group_commit.summary(),
                     "stage_seconds": dict(self.stage_seconds)}

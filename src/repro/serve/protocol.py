@@ -22,7 +22,11 @@ Errors carry ``{"ok": false, "error": "...", "status": 503|504|400}`` —
 503 when admission control rejects at queue capacity, 504 when the
 deadline expired before the probe ran.
 
-``/add`` takes ``{"text": ...}`` and returns ``{"ok": true, "doc_id": n}``;
+``/add`` takes ``{"text": ..., "request_id": "client-token"}`` (the id is
+optional) and returns ``{"ok": true, "doc_id": n, "deduped": false}``.
+The ``request_id`` is logged into the WAL record and makes retries safe:
+a replayed id within the un-compacted window returns the original
+``doc_id`` with ``"deduped": true`` instead of indexing a duplicate.
 ``/compact`` takes ``{}`` and returns ``{"ok": true, "generation": g}``.
 """
 
@@ -82,12 +86,19 @@ def parse_query_request(body: bytes | str | dict) -> QueryRequest:
 
 
 def parse_add_request(body: bytes | str | dict):
+    """Returns ``(text, request_id)`` — the id ``None`` when the client
+    sent none (no retry-dedup window for this add)."""
     d = _as_dict(body)
     if "text" not in d:
         raise ProtocolError("add request needs a 'text' field")
+    rid = d.get("request_id")
+    if rid is not None and (not isinstance(rid, str) or not rid
+                            or len(rid) > 200):
+        raise ProtocolError("'request_id' must be a non-empty string "
+                            "(at most 200 chars)")
     text = d["text"]
     if isinstance(text, str):
-        return text
+        return text, rid
     try:
         arr = np.asarray(text, np.int64)
     except (TypeError, ValueError) as e:
@@ -95,7 +106,7 @@ def parse_add_request(body: bytes | str | dict):
             f"'text' must be a string or a list of ints: {e}") from None
     if arr.ndim != 1:
         raise ProtocolError("'text' token array must be 1-D")
-    return arr
+    return arr, rid
 
 
 def ok_response(payload: dict) -> bytes:

@@ -2,7 +2,10 @@
 automatic" (ROADMAP item 3).
 
 A :class:`CompactionSupervisor` watches the served index's
-``delta_fraction`` / delta age and, when a threshold trips, runs the same
+``delta_fraction`` / delta age — plus, with a WAL open, the log's size
+and the age of its oldest un-compacted record (compaction is what
+truncates the log, so these bound crash-replay time and WAL disk) — and,
+when a threshold trips, runs the same
 graceful seal → off-band merge → promote sequence as ``POST /compact``
 (:meth:`AlignServer.compact`) — traffic never pauses.  After each
 successful compaction it prunes superseded store generations
@@ -40,10 +43,14 @@ class CompactionSupervisor:
     def __init__(self, *, max_delta_fraction: float = 0.25,
                  max_delta_age_s: float = 30.0, interval_s: float = 1.0,
                  max_retries: int = 5, backoff_base_s: float = 0.5,
-                 backoff_max_s: float = 30.0, prune_keep: int = 2):
+                 backoff_max_s: float = 30.0, prune_keep: int = 2,
+                 max_wal_bytes: int = 32_000_000,
+                 max_wal_age_s: float = 60.0):
         self.max_delta_fraction = max_delta_fraction
         self.max_delta_age_s = max_delta_age_s
         self.interval_s = interval_s
+        self.max_wal_bytes = max_wal_bytes
+        self.max_wal_age_s = max_wal_age_s
         self.max_retries = max_retries
         self.backoff_base_s = backoff_base_s
         self.backoff_max_s = backoff_max_s
@@ -97,6 +104,18 @@ class CompactionSupervisor:
                 return True
             if live.delta_age_s >= self.max_delta_age_s:
                 return True
+            # WAL pressure: compacting truncates the covered log suffix,
+            # bounding both replay time after a crash and disk held by
+            # segments.  Gated on lag_records so covered tail debris
+            # (the one un-removable active segment) can't trip a busy
+            # no-op loop.
+            wal = (live.wal_status()
+                   if isinstance(live, LiveIndex) else None)
+            if wal is not None and wal["lag_records"] > 0:
+                if wal["bytes"] >= self.max_wal_bytes:
+                    return True
+                if wal["age_s"] >= self.max_wal_age_s:
+                    return True
         return False
 
     async def _run(self) -> None:

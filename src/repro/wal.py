@@ -1,0 +1,452 @@
+"""Segmented write-ahead log for live ingest durability.
+
+Every ``LiveIndex.add_text`` lands here *before* it is indexed: a crash
+between the acknowledged write and the next compaction no longer loses
+the document — reopening the store replays the un-compacted records into
+a fresh delta (idempotent: replay skips gids the serving manifest's
+``doc_map`` already covers, and whole-log replay twice equals once).
+
+Layout, under the store root::
+
+    store/
+      wal/
+        00000000000000000000.wal    segment named by its first record's LSN
+        00000000000000000137.wal    ...
+
+Each segment starts with an 8-byte magic header and then CRC32-framed
+records::
+
+    u32 payload_len | u32 crc32(payload) | payload
+    payload = i64 gid | i32 request_id_len (-1: none) | u32 ntokens
+              | request_id utf-8 | ntokens * i64 tokens
+
+LSNs are implicit: the segment name carries the base, frames count up
+from it — so the chain is self-describing and a missing middle segment
+is detectable as a base/frame-count mismatch.
+
+Durability policy (``WalConfig``):
+
+* ``fsync_every_n=1`` — per-record fsync (safest, slowest);
+* ``fsync_every_n=N`` — group commit: ``maybe_sync`` fsyncs once every N
+  appends (the serve path instead sets 0 and calls ``sync()`` once per
+  batcher micro-batch, so the batcher's linger window IS the group-commit
+  window and one fsync covers the whole group);
+* ``fsync_every_n=0`` — async: never auto-fsync; only explicit ``sync()``
+  barriers (seal/close) hit the disk.
+
+Crash model: the fault harness kills with ``os._exit``, which cannot lose
+OS page cache — a completed (flushed) ``write(2)`` survives.  "Durable"
+therefore means *the frame is complete on the OS side*; ``fsync`` is the
+extra barrier for power-loss-grade durability and for the acknowledged-
+writes contract the serve path exposes.  A kill mid-``write`` leaves a
+torn trailing frame, which replay truncates away (``wal.truncate.tail``)
+— only ever an un-acknowledged record.
+
+Truncation: after a compaction promotes a generation whose manifest
+records ``wal_watermark = W``, every segment wholly below ``W`` is
+removed (``truncate_upto``), ascending — a crash mid-truncate leaves a
+removed *prefix*, never a mid-chain gap.  Rollback (``unseal_delta``)
+touches no segments.
+
+Every durable mutation routes through :mod:`repro.fault.fsio` with a
+site literal under the ``wal.`` prefix (``wal.append``, ``wal.fsync``,
+``wal.rotate``, ``wal.truncate.tail``, ``wal.truncate.segment``) —
+machine-checked by static-analysis rule RPR204 — so ingest chaos
+schedules can kill either side of every WAL write.
+"""
+
+from __future__ import annotations
+
+import struct
+import time
+from dataclasses import dataclass
+from pathlib import Path
+from zlib import crc32
+
+import numpy as np
+
+from .fault import fsio
+
+WAL_DIR = "wal"
+SEGMENT_SUFFIX = ".wal"
+_HEADER = b"MWAL\x01\x00\x00\x00"
+_FRAME = struct.Struct("<II")       # payload length, crc32(payload)
+_RECORD = struct.Struct("<qiI")     # gid, request-id length (-1: none), ntokens
+_MAX_PAYLOAD = 1 << 28              # sanity bound: a longer length field is
+#                                     garbage (torn/overwritten), not a frame
+
+
+class WalError(RuntimeError):
+    """Structural WAL corruption that replay cannot repair (mid-chain
+    torn frames, segment gaps, foreign files) — torn *tails* are normal
+    crash debris and are repaired, never raised."""
+
+
+@dataclass(frozen=True)
+class WalConfig:
+    """Durability policy knobs (see the module docstring's table)."""
+
+    fsync_every_n: int = 1          # 0: async (explicit sync() only)
+    segment_bytes: int = 4 << 20    # rotate when the active segment exceeds
+
+
+@dataclass(frozen=True)
+class WalRecord:
+    lsn: int
+    gid: int
+    request_id: str | None
+    tokens: np.ndarray
+
+
+def wal_dir(store_root) -> Path:
+    return Path(store_root) / WAL_DIR
+
+
+def _segment_name(base_lsn: int) -> str:
+    return f"{base_lsn:020d}{SEGMENT_SUFFIX}"
+
+
+def segment_paths(waldir) -> list[Path]:
+    """The segment chain in LSN order (foreign files ignored)."""
+    d = Path(waldir)
+    if not d.is_dir():
+        return []
+    return sorted(p for p in d.iterdir()
+                  if p.suffix == SEGMENT_SUFFIX and p.stem.isdigit())
+
+
+def _encode(gid: int, request_id: str | None, tokens) -> bytes:
+    rid = b"" if request_id is None else request_id.encode("utf-8")
+    toks = np.ascontiguousarray(tokens, dtype=np.int64)
+    payload = (_RECORD.pack(int(gid),
+                            -1 if request_id is None else len(rid),
+                            len(toks))
+               + rid + toks.tobytes())
+    return _FRAME.pack(len(payload), crc32(payload) & 0xFFFFFFFF) + payload
+
+
+def _decode(payload: bytes, lsn: int) -> WalRecord:
+    gid, rid_len, ntok = _RECORD.unpack_from(payload, 0)
+    off = _RECORD.size
+    rid = None
+    if rid_len >= 0:
+        rid = payload[off:off + rid_len].decode("utf-8")
+        off += rid_len
+    tokens = np.frombuffer(payload, np.int64, count=ntok, offset=off).copy()
+    return WalRecord(lsn=lsn, gid=int(gid), request_id=rid, tokens=tokens)
+
+
+def _scan_segment(path) -> dict:
+    """Parse one segment: how many complete CRC-valid frames it holds,
+    where the valid prefix ends, and whether a torn tail follows."""
+    data = Path(path).read_bytes()
+    if len(data) < len(_HEADER):
+        return {"count": 0, "valid_size": 0, "torn": True, "error": None,
+                "size": len(data)}
+    if data[:len(_HEADER)] != _HEADER:
+        return {"count": 0, "valid_size": 0, "torn": False,
+                "error": "bad segment header", "size": len(data)}
+    off, n = len(_HEADER), 0
+    while off + _FRAME.size <= len(data):
+        length, crc = _FRAME.unpack_from(data, off)
+        end = off + _FRAME.size + length
+        if length > _MAX_PAYLOAD or end > len(data):
+            break
+        if crc32(data[off + _FRAME.size:end]) & 0xFFFFFFFF != crc:
+            break
+        n += 1
+        off = end
+    return {"count": n, "valid_size": off, "torn": off < len(data),
+            "error": None, "size": len(data)}
+
+
+def iter_records(waldir):
+    """Read-only scan of every complete frame in LSN order; torn tails
+    are tolerated (stopped at), never repaired — safe for an observer
+    process while a writer is live."""
+    for path in segment_paths(waldir):
+        base = int(path.stem)
+        data = path.read_bytes()
+        if len(data) < len(_HEADER) or data[:len(_HEADER)] != _HEADER:
+            continue
+        off, i = len(_HEADER), 0
+        while off + _FRAME.size <= len(data):
+            length, crc = _FRAME.unpack_from(data, off)
+            end = off + _FRAME.size + length
+            if length > _MAX_PAYLOAD or end > len(data):
+                break
+            payload = data[off + _FRAME.size:end]
+            if crc32(payload) & 0xFFFFFFFF != crc:
+                break
+            yield _decode(payload, base + i)
+            i += 1
+            off = end
+
+
+class WriteAheadLog:
+    """The writer side: open (repairing crash debris), append, group-
+    commit fsync, rotate, truncate.  One writer per store — the engine
+    thread owns it, like the ``LiveIndex`` it fronts."""
+
+    def __init__(self, waldir, *, config: WalConfig | None = None,
+                 start_lsn: int = 0):
+        """Open the log at ``waldir``, repairing any torn tail left by a
+        crash.  ``start_lsn`` seeds numbering for an empty log (the
+        serving manifest's watermark), so LSNs stay monotone across a
+        full truncation."""
+        self.dir = Path(waldir)
+        self.config = config or WalConfig()
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self._f = None                    # active segment handle (lazy)
+        self._size = 0                    # its current byte length
+        self._dirty = False               # bytes appended since last fsync
+        self._poisoned: str | None = None
+        self._born: float | None = None   # monotonic ts: oldest pending rec
+        self.counters = {"appends": 0, "fsyncs": 0, "rotations": 0,
+                         "truncated_segments": 0, "tail_repairs": 0}
+        self._catalog: list[tuple[int, Path]] = []   # (base_lsn, path) asc
+        next_lsn = int(start_lsn)
+        segs = segment_paths(self.dir)
+        expected = None
+        for i, path in enumerate(segs):
+            base = int(path.stem)
+            last = i == len(segs) - 1
+            if expected is not None and base != expected:
+                raise WalError(f"{path}: segment gap (expected base lsn "
+                               f"{expected}, got {base})")
+            scan = _scan_segment(path)
+            if scan["error"] or (scan["torn"] and not last):
+                raise WalError(f"{path}: "
+                               f"{scan['error'] or 'torn frame mid-chain'}")
+            if scan["torn"]:
+                # crash debris: an incomplete trailing frame (never
+                # acknowledged) — truncate it away; a file too short to
+                # even hold the header carries no records at all
+                if scan["valid_size"] < len(_HEADER):
+                    fsio.unlink(path, site="wal.truncate.tail")
+                    self.counters["tail_repairs"] += 1
+                    expected = base
+                    continue
+                fsio.truncate(path, scan["valid_size"],
+                              site="wal.truncate.tail")
+                self.counters["tail_repairs"] += 1
+            self._catalog.append((base, path))
+            expected = base + scan["count"]
+        if expected is not None:
+            next_lsn = max(next_lsn, expected)
+        self._next_lsn = next_lsn
+        self._durable_lsn = next_lsn      # what's on disk survived a crash
+        if self._catalog:
+            self._born = time.monotonic()
+
+    # -- positions ----------------------------------------------------------
+
+    @property
+    def next_lsn(self) -> int:
+        """LSN the next append will get (exclusive end of the log)."""
+        return self._next_lsn
+
+    @property
+    def durable_lsn(self) -> int:
+        """Exclusive upper bound of fsync-covered records."""
+        return self._durable_lsn
+
+    @property
+    def pending_records(self) -> int:
+        """Appended but not yet fsync-covered."""
+        return self._next_lsn - self._durable_lsn
+
+    @property
+    def age_s(self) -> float:
+        """Seconds since the oldest record not yet folded into a promoted
+        generation (0.0 when fully truncated) — the supervisor's WAL-age
+        compaction trigger."""
+        return 0.0 if self._born is None else time.monotonic() - self._born
+
+    def size_bytes(self) -> int:
+        total = 0
+        for _, p in list(self._catalog):
+            try:
+                total += p.stat().st_size
+            except OSError:
+                pass
+        return total
+
+    def stats(self) -> dict:
+        return {"segments": len(self._catalog), "bytes": self.size_bytes(),
+                "next_lsn": self._next_lsn, "durable_lsn": self._durable_lsn,
+                "pending": self.pending_records, **self.counters}
+
+    # -- the write path -----------------------------------------------------
+
+    def _start_segment(self) -> None:
+        path = self.dir / _segment_name(self._next_lsn)
+        self._f = fsio.open_append(path, site="wal.rotate")
+        if self._f.tell() < len(_HEADER):
+            fsio.append_bytes(self._f, _HEADER, site="wal.rotate")
+        self._size = self._f.tell()
+        self._catalog.append((self._next_lsn, path))
+        self.counters["rotations"] += 1
+
+    def _open_tail(self) -> None:
+        if not self._catalog:
+            self._start_segment()
+            return
+        _, path = self._catalog[-1]
+        self._f = fsio.open_append(path, site="wal.rotate")
+        self._size = self._f.tell()
+
+    def append(self, gid: int, request_id: str | None, tokens) -> int:
+        """Frame and append one record; returns its LSN.  NOT yet durable
+        — pair with :meth:`maybe_sync`/:meth:`sync` before acknowledging.
+        A torn/failed append truncates the partial frame back off; if even
+        that repair fails the log poisons itself (appends raise) until a
+        reopen replays and repairs it."""
+        if self._poisoned is not None:
+            raise WalError("write-ahead log poisoned after a failed tail "
+                           f"repair ({self._poisoned}); reopen the store "
+                           "to replay and repair")
+        frame = _encode(gid, request_id, tokens)
+        if self._f is None:
+            self._open_tail()
+        if self._size + len(frame) > self.config.segment_bytes \
+                and self._size > len(_HEADER):
+            self._roll()
+        pos = self._size
+        try:
+            fsio.append_bytes(self._f, frame, site="wal.append")
+        except BaseException as exc:
+            self._repair_tail(pos, exc)
+            raise
+        self._size = pos + len(frame)
+        lsn = self._next_lsn
+        self._next_lsn = lsn + 1
+        self._dirty = True
+        self.counters["appends"] += 1
+        if self._born is None:
+            self._born = time.monotonic()
+        return lsn
+
+    def _roll(self) -> None:
+        """Finish the active segment (fsync'd so the chain never loses a
+        closed segment's tail) and start the next one at the current LSN."""
+        self.sync()
+        self._f.close()
+        self._f = None
+        self._start_segment()
+
+    def _repair_tail(self, pos: int, cause: BaseException) -> None:
+        try:
+            fsio.truncate(self._f, pos, site="wal.truncate.tail")
+            self._size = pos
+            self.counters["tail_repairs"] += 1
+        except BaseException as exc:
+            self._poisoned = f"{type(cause).__name__} then {type(exc).__name__}"
+
+    def sync(self) -> int:
+        """The durability barrier: fsync the active segment (no-op when
+        nothing was appended since the last one).  Returns the new
+        ``durable_lsn`` — every record below it survives power loss."""
+        if self._f is not None and self._dirty:
+            fsio.fsync(self._f, site="wal.fsync")
+            self.counters["fsyncs"] += 1
+            self._dirty = False
+        self._durable_lsn = self._next_lsn
+        return self._durable_lsn
+
+    def maybe_sync(self) -> int:
+        """Group-commit policy point: sync iff ``fsync_every_n`` appends
+        accumulated (0 = async, never)."""
+        n = self.config.fsync_every_n
+        if n > 0 and self.pending_records >= n:
+            self.sync()
+        return self._durable_lsn
+
+    # -- replay + truncation ------------------------------------------------
+
+    def records(self):
+        """Every durable record on disk in LSN order (the replay input;
+        call before the first append)."""
+        return iter_records(self.dir)
+
+    def truncate_upto(self, watermark: int) -> int:
+        """Drop whole segments wholly below ``watermark`` (their records
+        are covered by a promoted generation's manifest).  The active tail
+        segment is never removed — at most one segment of covered debris
+        survives, and it keeps LSN numbering continuous.  Removal is
+        ascending, so a crash mid-way leaves a removed prefix, never a
+        mid-chain gap."""
+        removed = 0
+        while len(self._catalog) > 1 and self._catalog[1][0] <= watermark:
+            _, path = self._catalog.pop(0)
+            fsio.unlink(path, site="wal.truncate.segment", missing_ok=True)
+            removed += 1
+        self.counters["truncated_segments"] += removed
+        self._born = None if watermark >= self._next_lsn else time.monotonic()
+        return removed
+
+    def close(self) -> None:
+        if self._f is not None:
+            self.sync()
+            self._f.close()
+            self._f = None
+
+
+# --------------------------------------------------------------------------
+# fsck integration
+# --------------------------------------------------------------------------
+
+def verify_wal(store_root, *, serving_watermark: int | None = None) -> dict:
+    """Integrity-check the WAL chain under ``store_root`` (absent = ok).
+
+    Problems: bad headers, torn/CRC-failing frames anywhere but the final
+    tail, base-LSN gaps between segments, and watermark inconsistency —
+    the chain starting *after* the serving manifest's ``wal_watermark``
+    (an un-replayable gap: acknowledged writes lost), or the watermark
+    pointing past the end of the chain (the manifest covers records that
+    never became durable).  A torn tail on the LAST segment is expected
+    crash debris (replay repairs it) and is reported but not a failure.
+    """
+    waldir = wal_dir(store_root)
+    out = {"present": waldir.is_dir(), "segments": 0, "records": 0,
+           "bytes": 0, "torn_tail": False, "first_lsn": None,
+           "end_lsn": None, "problems": [], "ok": True}
+    if not out["present"]:
+        return out
+    segs = segment_paths(waldir)
+    expected = None
+    for i, path in enumerate(segs):
+        base = int(path.stem)
+        last = i == len(segs) - 1
+        scan = _scan_segment(path)
+        out["segments"] += 1
+        out["records"] += scan["count"]
+        out["bytes"] += scan["size"]
+        if out["first_lsn"] is None:
+            out["first_lsn"] = base
+        if expected is not None and base != expected:
+            out["problems"].append(
+                f"{path.name}: segment gap (expected base lsn {expected})")
+        if scan["error"]:
+            out["problems"].append(f"{path.name}: {scan['error']}")
+        elif scan["torn"]:
+            if last:
+                out["torn_tail"] = True
+            else:
+                out["problems"].append(
+                    f"{path.name}: torn/CRC-failing frame mid-chain")
+        expected = base + scan["count"]
+        out["end_lsn"] = expected
+    if serving_watermark is not None and segs:
+        if out["first_lsn"] > serving_watermark:
+            out["problems"].append(
+                f"chain starts at lsn {out['first_lsn']} but the serving "
+                f"manifest's wal_watermark is {serving_watermark}: records "
+                "in the replay window are gone")
+        if serving_watermark > out["end_lsn"]:
+            out["problems"].append(
+                f"serving manifest's wal_watermark {serving_watermark} is "
+                f"past the end of the chain ({out['end_lsn']}): the "
+                "manifest covers records that were never durable")
+    out["ok"] = not out["problems"]
+    return out
