@@ -152,17 +152,21 @@ def run(quick: bool = True) -> dict:
         qs = _passage_queries(rng2, passages, bs)
         sk = scheme2.sketch_batch(qs)   # shared: isolate the probe + sweep
         pr2_res, t_pr2 = timed(
-            lambda: batch_query(arena_idx, qs, theta2, sketches=sk,
-                                probe_backend="percoord", sweep="loop"),
+            lambda: batch_query(arena_idx, qs, theta2,
+                                options=QueryOptions(
+                                    sketches=sk, probe_backend="percoord",
+                                    sweep="loop")),
             repeat=3)
         new_res, t_new = timed(
-            lambda: batch_query(arena_idx, qs, theta2, sketches=sk),
+            lambda: batch_query(arena_idx, qs, theta2,
+                                options=QueryOptions(sketches=sk)),
             repeat=3)
         equal = [_blocks(r) for r in pr2_res] == \
             [_blocks(r) for r in new_res]
         if bs == 16:   # device-probe parity datapoint (interpret mode)
-            pal_res = batch_query(arena_idx, qs, theta2, sketches=sk,
-                                  probe_backend="pallas")
+            pal_res = batch_query(arena_idx, qs, theta2,
+                                  options=QueryOptions(
+                                      sketches=sk, probe_backend="pallas"))
             equal = equal and \
                 [_blocks(r) for r in pal_res] == [_blocks(r) for r in new_res]
         arena_equal = arena_equal and equal
@@ -170,6 +174,33 @@ def run(quick: bool = True) -> dict:
         rows_arena.append({"batch": bs, "percoord_s": t_pr2,
                            "arena_s": t_new, "speedup": t_pr2 / t_new,
                            "arena_qps": bs / t_new, "equal": equal})
+
+    # ---- execution plans: cpu pipeline vs fused device pipeline ----------
+    # plan="device" keeps the arena resident, probes + sweeps on-device
+    # (interpret mode off-TPU) and must stay block-for-block identical to
+    # plan="cpu"; the sweep also records the residency soak (arena uploads
+    # across batches must not grow)
+    from repro.core.device_plan import reset_transfer_stats, transfer_stats
+    rows_plan, plan_equal = [], True
+    reset_transfer_stats()
+    for bs in (16, 64):
+        qs = _passage_queries(rng2, passages, bs)
+        sk = scheme2.sketch_batch(qs)
+        cpu_res, t_cpu = timed(
+            lambda: batch_query(arena_idx, qs, theta2,
+                                options=QueryOptions(plan="cpu",
+                                                     sketches=sk)),
+            repeat=3)
+        dev_res, t_dev = timed(
+            lambda: batch_query(arena_idx, qs, theta2,
+                                options=QueryOptions(plan="device",
+                                                     sketches=sk)),
+            repeat=3)
+        equal = [_blocks(r) for r in cpu_res] == [_blocks(r) for r in dev_res]
+        plan_equal = plan_equal and equal
+        rows_plan.append({"batch": bs, "cpu_s": t_cpu, "device_s": t_dev,
+                          "device_qps": bs / t_dev, "equal": equal})
+    plan_soak = transfer_stats()
 
     # ---- sharded fan-out: serial loop vs thread-pool overlap --------------
     # sketches are computed once and shared by both paths (and by every
@@ -214,9 +245,11 @@ def run(quick: bool = True) -> dict:
     zsk = scheme2.sketch_batch(zipf_qs)
     usk = scheme2.sketch_batch(uni_qs)
     _, t_zipf = timed(lambda: batch_query(arena_idx, zipf_qs, theta2,
-                                          sketches=zsk), repeat=3)
+                                          options=QueryOptions(sketches=zsk)),
+                      repeat=3)
     _, t_uni = timed(lambda: batch_query(arena_idx, uni_qs, theta2,
-                                         sketches=usk), repeat=3)
+                                         options=QueryOptions(sketches=usk)),
+                     repeat=3)
     rows_zipf = [{"workload": "zipf(1.2)", "batch": zipf_B,
                   "distinct_queries": int(len(np.unique(ranks))),
                   "batch_s": t_zipf, "qps": zipf_B / t_zipf},
@@ -232,6 +265,8 @@ def run(quick: bool = True) -> dict:
                 rows_batch)
     print_table("probe arena vs PR-2 per-coordinate probes (theta=0.5)",
                 rows_arena)
+    print_table("execution plans: cpu vs fused device (theta=0.5)",
+                rows_plan)
     print_table(f"sharded fan-out: serial vs threaded (B={fanout_B})",
                 rows_fanout)
     print_table("Zipf vs uniform query traffic (probe arena)", rows_zipf)
@@ -247,6 +282,12 @@ def run(quick: bool = True) -> dict:
         and bool(rows_mmap[0]["mmap_backed"]),
         "probe_arena_equals_percoord_and_pallas": bool(arena_equal),
         "probe_arena_speedup_ge_2x_at_64": arena_speedup_at[64] >= 2.0,
+        # device pipeline parity is bit-exact by construction (host f64
+        # sketch + integer-exact kernels); residency means the arena
+        # crossed the bus at most once across the whole multi-batch sweep
+        "device_plan_equals_cpu": bool(plan_equal),
+        "device_arena_uploaded_once": plan_soak["arena_uploads"] <= 1
+        and plan_soak["batches"] >= 2,
         # parity on small 2-core CI runners; the overlap win needs real
         # cores / cold mmap pages.  The gate exists to catch pathological
         # contention (a GIL-convoyed sweep measured 2.2x serial), so the
@@ -258,6 +299,7 @@ def run(quick: bool = True) -> dict:
            "layouts": rows_frozen, "mmap_store": rows_mmap,
            "batched": rows_batch, "probe_arena": rows_arena,
            "probe_arena_speedup": arena_speedup_at,
+           "execution_plans": rows_plan, "device_plan_soak": plan_soak,
            "sharded_fanout": rows_fanout, "zipf_traffic": rows_zipf,
            "claims": claims}
     save_result("query", rec)

@@ -1,4 +1,4 @@
-"""RPR401/RPR402/RPR403 — deprecated API surfaces.
+"""RPR401/RPR402/RPR403/RPR404 — deprecated API surfaces.
 
 The PR 4 API redesign consolidated query configuration into
 :class:`repro.core.results.QueryOptions` and split the legacy
@@ -16,6 +16,15 @@ so the shims can eventually be deleted:
 * **RPR403** — any mention of ``AlignmentIndex`` outside its shim module
   (``src/repro/core/index.py``); use ``IndexBuilder`` (mutable) or
   ``SearchIndex`` (frozen).
+* **RPR404** — per-stage backend kwargs (``sketch_backend=``,
+  ``probe_backend=``, ``sweep=``, ``sketches=``) on *any* call to
+  ``query``/``batch_query``/``find``/``find_batch``, bare functions
+  included.  The PR 10 execution-plan redesign folded these into
+  ``QueryOptions``; pass ``options=QueryOptions(plan=..., ...)``.
+  RPR401 predates the plan API and only sees method receivers — RPR404
+  closes the gap for the core ``batch_query(...)`` function (the spelling
+  benchmarks use), so on method calls it reports only the kwargs RPR401
+  does not already cover.
 
 Deprecation *tests* exercise these surfaces on purpose — they carry
 line-scoped ``# repro: allow[...]`` waivers.
@@ -36,33 +45,55 @@ RPR402 = ("RPR402",
 RPR403 = ("RPR403",
           "AlignmentIndex is deprecated outside its shim; use "
           "IndexBuilder/SearchIndex")
+RPR404 = ("RPR404",
+          "per-stage backend kwarg on a query call; use "
+          "options=QueryOptions(plan=..., ...)")
 
 SHIM_FILE = "src/repro/core/index.py"
 
 _QUERY_METHODS = frozenset({"find", "find_batch", "batch_query"})
 _LEGACY_KWARGS = frozenset({"backend", "probe_backend", "sweep", "fanout",
                             "sketches"})
+_QUERY_CALLS = frozenset({"query", "batch_query", "find", "find_batch"})
+_STAGE_KWARGS = frozenset({"sketch_backend", "probe_backend", "sweep",
+                           "sketches"})
 
 
-@checker(RPR401, RPR402, RPR403)
+@checker(RPR401, RPR402, RPR403, RPR404)
 def check_api_deprecations(project: Project) -> list[Finding]:
     findings: list[Finding] = []
     for sf in project.files:
         for node in ast.walk(sf.tree):
             if isinstance(node, ast.Call):
                 kwargs = {kw.arg for kw in node.keywords if kw.arg}
+                is_method = isinstance(node.func, ast.Attribute)
+                callee = (node.func.attr if is_method else
+                          node.func.id if isinstance(node.func, ast.Name)
+                          else None)
                 # method calls only: the core `query`/`batch_query`
                 # *functions* take these as real parameters
-                if isinstance(node.func, ast.Attribute) \
-                        and node.func.attr in _QUERY_METHODS:
+                if is_method and callee in _QUERY_METHODS:
                     legacy = sorted(kwargs & _LEGACY_KWARGS)
                     if legacy:
                         findings.append(Finding(
                             rule="RPR401", path=sf.rel, line=node.lineno,
-                            message=f".{node.func.attr}(..., "
+                            message=f".{callee}(..., "
                                     f"{'=, '.join(legacy)}=) uses legacy "
                                     "query kwargs; pass options="
                                     "QueryOptions(...)"))
+                if callee in _QUERY_CALLS:
+                    stage = kwargs & _STAGE_KWARGS
+                    if is_method:
+                        # RPR401 already reports these on methods
+                        stage -= _LEGACY_KWARGS
+                    if stage:
+                        shown = sorted(stage)
+                        findings.append(Finding(
+                            rule="RPR404", path=sf.rel, line=node.lineno,
+                            message=f"{callee}(..., {'=, '.join(shown)}=) "
+                                    "passes deprecated per-stage kwargs; "
+                                    "pass options=QueryOptions(plan=..., "
+                                    "...)"))
                 if "legacy_tuples" in kwargs:
                     findings.append(Finding(
                         rule="RPR402", path=sf.rel, line=node.lineno,

@@ -244,28 +244,37 @@ class Aligner:
 
     def find_batch(self, texts, theta: float, *,
                    options: QueryOptions | None = None,
-                   backend=UNSET, probe_backend=UNSET,
+                   backend=UNSET, sketch_backend=UNSET, probe_backend=UNSET,
+                   sweep=UNSET,
                    legacy_tuples: bool = False,
                    stage_times: dict | None = None) -> list[QueryResult]:
         """Batched :meth:`find` (the serving path — one fused arena probe
         for the whole batch); one :class:`QueryResult` per input text.
 
-        Execution knobs come in as ``options=QueryOptions(...)``:
-        ``sketch_backend="pallas"`` sketches weighted queries on-device in
-        one fused launch; ``probe_backend`` picks the frozen-index probe
-        stage — ``"numpy"`` (default, one host ``searchsorted`` over the
-        arena), ``"pallas"`` (device-side binary search), or
-        ``"percoord"`` (legacy per-coordinate loop).  Sharded indexes fan
-        the probes out across a thread pool (``QueryOptions.fanout``).
-        The pre-redesign ``backend``/``probe_backend`` keywords still work
-        behind a ``DeprecationWarning``, as does ``legacy_tuples=True``
-        for the old ``list[list[Alignment]]`` return shape.
-        ``stage_times`` accumulates per-stage wall seconds under
-        ``"sketch"``/``"probe"``/``"sweep"`` (the serve-path metrics
+        Execution comes in as ``options=QueryOptions(...)``, whose
+        ``plan`` names the pipeline: ``"cpu"`` (NumPy reference path, the
+        default), ``"device"`` (the arena stays resident on the
+        accelerator; probe and sweep run as Pallas kernels, block-identical
+        to cpu), or ``"auto"`` (device when a real accelerator backs jax,
+        else silently cpu).  Stage fields on the options object pin
+        individual stages for debugging — e.g.
+        ``QueryOptions(sketch_backend="pallas")`` moves weighted-scheme
+        sketching into the fused device kernel, and
+        ``probe_backend="percoord"`` forces the legacy k-probe loop.
+        Sharded indexes fan the probes out across a thread pool
+        (``QueryOptions.fanout``).
+
+        The pre-redesign ``backend``/``sketch_backend``/``probe_backend``/
+        ``sweep`` keywords still work for one release behind a
+        ``DeprecationWarning`` (they coerce to pins on the cpu plan), as
+        does ``legacy_tuples=True`` for the old ``list[list[Alignment]]``
+        return shape.  ``stage_times`` accumulates per-stage wall seconds
+        under ``"sketch"``/``"probe"``/``"sweep"`` (the serve-path metrics
         hook)."""
         opts = coerce_query_options(options, "Aligner.find_batch",
                                     backend=backend,
-                                    probe_backend=probe_backend)
+                                    sketch_backend=sketch_backend,
+                                    probe_backend=probe_backend, sweep=sweep)
         tokens = [self._tokens(t) for t in texts]
         failed: list[int] = []
         if isinstance(self._index, ShardedAlignmentIndex):
@@ -279,11 +288,8 @@ class Aligner:
             res = self._index.batch_query(tokens, theta, options=opts,
                                           stage_times=stage_times)
         else:
-            res = _batch_query(self._index, tokens, theta,
-                               sketches=opts.sketches,
-                               sketch_backend=opts.sketch_backend,
-                               probe_backend=opts.probe_backend,
-                               sweep=opts.sweep, stage_times=stage_times)
+            res = _batch_query(self._index, tokens, theta, options=opts,
+                               stage_times=stage_times)
         if legacy_tuples:
             warnings.warn(
                 "legacy_tuples=True is deprecated; Aligner.find/find_batch "

@@ -20,6 +20,7 @@ from .oracle import (jaccard_multiset, jaccard_weighted,
                      validate_partition)
 from .partition import (Partition, mono_active_icws, mono_active_multiset,
                         mono_all_icws, mono_all_multiset, monotonic_partition)
+from .plan import ExecutionPlan, plan_names, resolve_plan
 from .query import Alignment, batch_query, estimate_similarity, query
 from .results import Match, QueryOptions, QueryResult
 from .schemes import (MultisetScheme, WeightedScheme, make_scheme,
@@ -35,6 +36,7 @@ __all__ = [
     "LiveIndex", "MultisetScheme",
     "WeightedScheme", "make_scheme", "scheme_spec", "scheme_from_spec",
     "Alignment", "Match", "QueryResult", "QueryOptions",
+    "ExecutionPlan", "resolve_plan", "plan_names",
     "generate_keys_multiset", "generate_keys_icws", "occurrence_lists",
     "count_active_hashes", "monotonic_partition", "mono_all_multiset",
     "mono_active_multiset", "mono_all_icws", "mono_active_icws",

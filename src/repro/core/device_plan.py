@@ -1,0 +1,330 @@
+"""The device-resident query pipeline behind ``plan="device"``.
+
+The cpu plan's batch flow round-trips the host between every stage: the
+arena binary search (even with ``probe_backend="pallas"``) re-uploads the
+key arena each launch, the collided window rows are gathered on the host,
+and the grouped sweep is NumPy.  This module keeps the heavy state — the
+fused :class:`~repro.core.frozen.ProbeArena` key/offset/window arrays —
+*resident* on the accelerator and runs the probe binary search and the
+grouped small-group sweep as Pallas kernels, so per batch only
+
+* up:   the packed probe keys (B*k few-byte words) and the small-group
+  gather index grids,
+* down: the CSR probe extents and the compressed coverage grids + stripe
+  boundaries the final blocks are read from
+
+cross the bus — never the arena, never the window rows.
+
+Residency
+---------
+:func:`device_arena` caches a :class:`DeviceArena` on the index instance,
+keyed by the *identity* of its host ``ProbeArena``: a ``SearchIndex`` is
+immutable, and every path that changes the store generation
+(``LiveIndex.compact``/``promote_sealed``) swaps in a NEW ``SearchIndex``,
+so the upload happens at most once per store generation and invalidation
+is automatic.  The mutable live delta level never comes through here — it
+keeps the host dict probe (``repro.core.query.batch_probe`` routes
+non-frozen levels to the per-coordinate loop), which is what keeps live
+serving correct between compactions.
+
+Bit parity
+----------
+Every device stage has exact integer semantics (the binary search and hit
+detect are u32 lexicographic compares, the sweep kernel is integer-exact
+by construction — see :mod:`repro.kernels.sweep_grid`), and the plan's
+default sketch stage is the exact host path, so ``plan="device"`` is
+bit-identical to ``plan="cpu"`` — gated in ``tests/test_device_plan.py``.
+
+``transfer_stats()`` exposes logical host<->device byte counters (what
+crosses the bus on a real accelerator; in interpret mode the same arrays
+flow, uncounted copies aside) for the residency tests and the roofline
+benchmark's fused-pipeline row.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from .frozen import MODE_PACKED, PACK_SHIFT, _concat_ranges
+
+__all__ = ["DeviceArena", "device_arena", "resident_probe",
+           "fused_batch_query", "transfer_stats", "reset_transfer_stats"]
+
+_I32_MAX = np.iinfo(np.int32).max
+
+# logical host<->device transfer accounting (bytes that cross the bus on
+# a real accelerator).  arena_* count the once-per-generation residency
+# upload; h2d/d2h count the per-batch steady-state traffic.
+_STATS = {"arena_uploads": 0, "arena_bytes": 0,
+          "h2d_bytes": 0, "d2h_bytes": 0, "batches": 0}
+
+
+def transfer_stats() -> dict:
+    """A snapshot of the module's transfer counters."""
+    return dict(_STATS)
+
+
+def reset_transfer_stats() -> None:
+    for key in _STATS:
+        _STATS[key] = 0
+
+
+def _interpret() -> bool:
+    import jax
+    return jax.default_backend() != "tpu"
+
+
+@dataclass
+class DeviceArena:
+    """One store generation's ProbeArena, resident on the accelerator.
+
+    Keys are split into u32 (hi, lo) halves plus the coordinate tag word
+    (the probe kernel's comparison format); offsets are narrowed to int32
+    (guarded at build — an arena too large falls back to the host probe);
+    ``win_rect`` holds only the (a, b, c, d) rectangle columns, because
+    the text-id column is read host-side (an mmap column read) for
+    grouping and never needs the bus.
+    """
+
+    mode: str
+    n: int                    # arena slots
+    khi: object               # jnp u32 (n,)
+    klo: object               # jnp u32 (n,)
+    ktag: object              # jnp u32 (n,)
+    offsets: object           # jnp i32 (n + 1,)
+    win_rect: object          # jnp i32 (nwin, 4)
+    nbytes: int
+
+
+def _build_device_arena(arena) -> DeviceArena | None:
+    """Upload one ProbeArena; ``None`` when it cannot go resident (empty,
+    or its CSR extent overflows the kernel's int32 offsets)."""
+    n = len(arena.keys)
+    if n == 0 or int(arena.offsets[-1]) > _I32_MAX:
+        return None
+    import jax.numpy as jnp
+
+    from ..kernels.probe_arena import _split_u64
+    khi, klo = _split_u64(np.asarray(arena.keys))
+    if arena.mode == MODE_PACKED:
+        ktag = np.zeros(n, np.uint32)
+    else:
+        ktag = np.ascontiguousarray(arena.coords, np.uint32)
+    offsets = np.asarray(arena.offsets, np.int32)
+    rect = np.ascontiguousarray(np.asarray(arena.windows)[:, 1:5], np.int32)
+    dev = DeviceArena(
+        mode=arena.mode, n=n,
+        khi=jnp.asarray(khi), klo=jnp.asarray(klo), ktag=jnp.asarray(ktag),
+        offsets=jnp.asarray(offsets), win_rect=jnp.asarray(rect),
+        nbytes=(khi.nbytes + klo.nbytes + ktag.nbytes + offsets.nbytes +
+                rect.nbytes))
+    _STATS["arena_uploads"] += 1
+    _STATS["arena_bytes"] += dev.nbytes
+    return dev
+
+
+def device_arena(index) -> DeviceArena | None:
+    """The index's resident arena, uploading on first use and caching on
+    the index instance (``SearchIndex._device_arena``).  The cache is
+    keyed by the host ``ProbeArena``'s identity, so a promotion/compaction
+    (which swaps in a new ``SearchIndex`` and so a new arena) re-uploads
+    exactly once and stale residency can never serve a new generation."""
+    arena = index.arena()
+    cached = getattr(index, "_device_arena", None)
+    if cached is not None and cached[0] is arena:
+        return cached[1]
+    dev = _build_device_arena(arena)
+    try:
+        index._device_arena = (arena, dev)   # also caches the None fallback
+    except (AttributeError, TypeError):
+        pass                                 # slotted/frozen duck: no cache
+    return dev
+
+
+# --------------------------------------------------------------------------
+# resident probe (the probe stage of both the pinned and the fused paths)
+# --------------------------------------------------------------------------
+
+
+def _probe_jit_factory():
+    """Build the jitted device probe lazily so importing this module never
+    pays a jax import."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels.probe_arena import _arena_search
+
+    @functools.partial(jax.jit, static_argnames=("interpret",))
+    def probe(khi, klo, ktag, offsets, qhi, qlo, qtag, valid, *, interpret):
+        n = khi.shape[0]
+        pos = _arena_search(khi, klo, ktag, qhi, qlo, qtag,
+                            interpret=interpret)
+        safe = jnp.minimum(pos, n - 1)
+        # generic (hi, lo, tag) equality covers both arena modes: packed
+        # arenas carry all-zero tags (and all-zero probe tags), coord
+        # arenas compare the coordinate word — exactly the host hit detect
+        hit = valid & (pos < n) & \
+            (jnp.take(khi, safe) == qhi) & (jnp.take(klo, safe) == qlo) & \
+            (jnp.take(ktag, safe) == qtag)
+        starts = jnp.where(hit, jnp.take(offsets, safe), 0)
+        ends = jnp.where(hit, jnp.take(offsets, safe + 1), 0)
+        return starts, ends
+
+    return probe
+
+
+_PROBE_JIT = None
+
+
+def _encode_queries(mode: str, pkeys: np.ndarray, coords: np.ndarray,
+                    valid: np.ndarray
+                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side probe re-keying, identical to ``ProbeArena.probe``: packed
+    arenas fold the coordinate into the key's top bits, coord arenas carry
+    it as the tag word."""
+    from ..kernels.probe_arena import _split_u64
+    if mode == MODE_PACKED:
+        q = (coords.astype(np.uint64) << np.uint64(PACK_SHIFT)) | \
+            np.where(valid, pkeys, 0)
+        qhi, qlo = _split_u64(q)
+        qtag = np.zeros(len(q), np.uint32)
+    else:
+        qhi, qlo = _split_u64(pkeys)
+        qtag = coords.astype(np.uint32)
+    return qhi, qlo, qtag
+
+
+def _device_probe(da: DeviceArena, pkeys, coords, valid
+                  ) -> tuple[np.ndarray, np.ndarray]:
+    global _PROBE_JIT
+    if _PROBE_JIT is None:
+        _PROBE_JIT = _probe_jit_factory()
+    import jax.numpy as jnp
+    if len(pkeys) == 0:
+        z = np.zeros(0, np.int64)
+        return z, z
+    qhi, qlo, qtag = _encode_queries(da.mode, pkeys, coords, valid)
+    valid = np.ascontiguousarray(valid, bool)
+    starts, ends = _PROBE_JIT(
+        da.khi, da.klo, da.ktag, da.offsets,
+        jnp.asarray(qhi), jnp.asarray(qlo), jnp.asarray(qtag),
+        jnp.asarray(valid), interpret=_interpret())
+    _STATS["h2d_bytes"] += (qhi.nbytes + qlo.nbytes + qtag.nbytes +
+                            valid.nbytes)
+    starts = np.asarray(starts, np.int64)
+    ends = np.asarray(ends, np.int64)
+    _STATS["d2h_bytes"] += 2 * len(pkeys) * 4        # i32 starts + ends
+    return starts, ends
+
+
+def resident_probe(index, pkeys, coords, valid
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """``ProbeArena.probe``-identical (starts, ends), probing the resident
+    device arena.  Falls back to the host searchsorted when the arena
+    cannot go resident."""
+    da = device_arena(index)
+    if da is None:
+        return index.arena().probe(pkeys, coords, valid, backend="numpy")
+    return _device_probe(da, pkeys, coords, valid)
+
+
+# --------------------------------------------------------------------------
+# fused pipeline (probe="device" AND sweep="device": no host window gather)
+# --------------------------------------------------------------------------
+
+
+def fused_batch_query(index, sketches, B: int, m: int, *,
+                      stage_times: dict | None = None) -> list:
+    """The fused frozen-index batch path: device probe over the resident
+    arena, host grouping on the windows' text-id column alone (an mmap
+    column read — no transfer), device gather of the rectangle rows from
+    the resident ``win_rect``, device sweep, and block extraction from
+    the compressed coverage grids.  Block-identical to the cpu plan.
+    """
+    from .query import (_SIZE_BUCKETS, _SMALL_GROUP_MAX, Alignment,
+                        _extract_runs, _group_bounds, _sweep_text)
+    t1 = time.perf_counter()
+    arena = index.arena()
+    k = arena.k
+    pkeys, coords, valid = arena.encode_batch(sketches)
+    da = device_arena(index)
+    _STATS["batches"] += 1
+    if da is None:
+        # arena too large for the kernel's i32 offsets: whole batch on host
+        from .query import _gather_arena, _sweep_gathered
+        return _sweep_gathered(_gather_arena(index, sketches, "numpy"),
+                               B, m, "grouped")
+    starts, ends = _device_probe(da, pkeys, coords, valid)
+    counts = ends - starts
+    row_ids = _concat_ranges(starts, counts)
+    probe_ids = np.repeat(np.arange(len(pkeys), dtype=np.int64), counts)
+    qid_all, cid_all = probe_ids // k, probe_ids % k
+    # the ONE window column the host touches: text ids, for grouping and
+    # result labelling (mmap page-ins, not bus traffic)
+    tid_all = np.asarray(arena.windows[row_ids, 0], np.int64)
+    t2 = time.perf_counter()
+
+    results: list[list[Alignment]] = [[] for _ in range(B)]
+    if len(qid_all):
+        import jax.numpy as jnp
+
+        from ..kernels.sweep_grid import sweep_grid
+        order, g_starts, g_ends, distinct = _group_bounds(
+            qid_all, tid_all, cid_all)
+        qid_s, tid_s, row_s = qid_all[order], tid_all[order], row_ids[order]
+        keep = distinct >= m
+        sizes = g_ends - g_starts
+        interpret = _interpret()
+
+        small_results: dict[int, list] = {}
+        sm_ids = np.flatnonzero(keep & (sizes <= _SMALL_GROUP_MAX))
+        for b_lo, b_hi in _SIZE_BUCKETS:
+            ids = sm_ids[(sizes[sm_ids] > b_lo) & (sizes[sm_ids] <= b_hi)]
+            if not len(ids):
+                continue
+            s_starts, s_sizes = g_starts[ids], sizes[ids]
+            G, S = len(ids), int(s_sizes.max())
+            idx = np.zeros((G, S), np.int32)
+            rows = row_s[_concat_ranges(s_starts, s_sizes)]
+            slot = np.arange(len(rows)) - np.repeat(
+                np.cumsum(s_sizes) - s_sizes, s_sizes)
+            idx[np.repeat(np.arange(G), s_sizes), slot] = rows
+            sz32 = s_sizes.astype(np.int32)
+            # device-side row gather from the resident rectangle columns:
+            # only the (G, S) index grid goes up, never the window rows
+            rects = jnp.take(da.win_rect, jnp.asarray(idx), axis=0)
+            hot, xs, ys = sweep_grid(rects, jnp.asarray(sz32), m=m,
+                                     interpret=interpret)
+            _STATS["h2d_bytes"] += idx.nbytes + sz32.nbytes
+            NX = int(xs.shape[1])
+            # bool-cast on device: the grid crosses at 1 byte per cell
+            hot_np = np.asarray(hot[:, :NX - 1, :NX - 1].astype(jnp.bool_))
+            xs_np = np.asarray(xs, np.int64)
+            ys_np = np.asarray(ys, np.int64)
+            _STATS["d2h_bytes"] += hot_np.size + 2 * xs_np.size * 4  # b8/i32
+            for g, blocks in zip(ids, _extract_runs(hot_np, xs_np, ys_np)):
+                small_results[int(g)] = blocks
+
+        for g in np.flatnonzero(keep):
+            g = int(g)
+            lo = g_starts[g]
+            if g in small_results:
+                blocks = small_results[g]
+            else:
+                # rare large group: host sweep straight off the mmap rows
+                blocks = _sweep_text(
+                    np.asarray(arena.windows[row_s[lo:g_ends[g]], 1:5],
+                               np.int64), m)
+            if blocks:
+                results[int(qid_s[lo])].append(
+                    Alignment(text_id=int(tid_s[lo]), blocks=blocks,
+                              ncoords=int(distinct[g])))
+    if stage_times is not None:
+        t3 = time.perf_counter()
+        stage_times["probe"] = stage_times.get("probe", 0.0) + (t2 - t1)
+        stage_times["sweep"] = stage_times.get("sweep", 0.0) + (t3 - t2)
+    return results

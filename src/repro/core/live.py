@@ -50,6 +50,7 @@ from ..wal import WalConfig, WriteAheadLog, wal_dir
 from . import store as index_store
 from .builder import IndexBuilder
 from .guard import engine_only
+from .plan import resolve_plan
 from .query import (Alignment, _sweep_gathered, batch_probe as _batch_probe,
                     query as _query)
 from .results import UNSET, QueryOptions, coerce_query_options
@@ -342,31 +343,37 @@ class LiveIndex:
         """Batched :meth:`query` (the serving path): sketch once, merge the
         frozen and delta probes, sweep the union, remap to global ids.
 
-        Execution knobs come in as ``options=QueryOptions(...)``; the
-        pre-redesign ``sketches``/``backend``/``probe_backend``/``sweep``
-        keywords still work behind a ``DeprecationWarning``.
-        ``stage_times`` accumulates per-stage wall seconds under
+        Execution comes in as ``options=QueryOptions(...)``; the ``plan``
+        field is resolved once per batch (:func:`repro.core.plan.
+        resolve_plan`).  Under ``plan="device"`` the frozen level probes
+        the device-resident arena while the mutable delta level keeps the
+        host dict probe (live writes stay served without re-upload churn),
+        and the merged union sweeps on-device.  The pre-redesign
+        ``sketches``/``backend``/``probe_backend``/``sweep`` keywords
+        still work behind a ``DeprecationWarning``.  ``stage_times``
+        accumulates per-stage wall seconds under
         ``"sketch"``/``"probe"``/``"sweep"`` when given.
         """
         opts = coerce_query_options(options, "LiveIndex.batch_query",
                                     sketches=sketches, backend=backend,
                                     probe_backend=probe_backend, sweep=sweep)
+        xp = resolve_plan(opts)
         if not len(texts):
             return []
         t0 = time.perf_counter()
         sk = opts.sketches
         if sk is None:
-            sk = self.scheme.sketch_batch(texts, backend=opts.sketch_backend)
+            sk = self.scheme.sketch_batch(texts, backend=xp.sketch_backend)
         m = max(1, math.ceil(self.scheme.k * theta))
         t1 = time.perf_counter()
-        gathered = self.batch_probe(sk, probe_backend=opts.probe_backend)
+        gathered = self.batch_probe(sk, probe_backend=xp.probe_backend)
         t2 = time.perf_counter()
         out = [sorted((Alignment(text_id=self.doc_map[al.text_id],
                                  blocks=al.blocks, ncoords=al.ncoords)
                        for al in res),
                       key=lambda a: a.text_id)
                for res in _sweep_gathered(gathered, len(texts), m,
-                                          opts.sweep)]
+                                          xp.sweep)]
         if stage_times is not None:
             t3 = time.perf_counter()
             stage_times["sketch"] = stage_times.get("sketch", 0.) + (t1 - t0)

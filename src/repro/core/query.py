@@ -30,6 +30,8 @@ from dataclasses import dataclass
 import numpy as np
 
 from .frozen import _concat_ranges
+from .plan import resolve_plan
+from .results import UNSET, QueryOptions, coerce_query_options
 
 
 @dataclass
@@ -176,6 +178,9 @@ def _sweep_small_batch(arr: np.ndarray, sizes: np.ndarray, m: int
     NX = 2 * S
     xs = np.sort(np.concatenate([a, b + 1], axis=1), axis=1)  # (G, NX)
     ys = np.sort(np.concatenate([c, d + 1], axis=1), axis=1)
+    # (the device sweep kernel, repro.kernels.sweep_grid, reproduces
+    # everything from here to the hot mask on-device; _extract_runs is the
+    # shared tail both paths finish through)
     # row-wise searchsorted in one call: bias each group's (small, < 2**31)
     # coordinates into a disjoint int64 band
     bias = np.arange(G, dtype=np.int64)[:, None] << 33
@@ -204,6 +209,21 @@ def _sweep_small_batch(arr: np.ndarray, sizes: np.ndarray, m: int
     count = np.cumsum(np.cumsum(diff, axis=1), axis=2)
     hot = count[:, :NX - 1, :NX - 1] >= m
     hot &= (xs[:, 1:] > xs[:, :-1])[:, :, None]              # zero-width
+    return _extract_runs(hot, xs, ys)
+
+
+def _extract_runs(hot: np.ndarray, xs: np.ndarray, ys: np.ndarray
+                  ) -> list[list[tuple[int, int, int, int]]]:
+    """Maximal horizontal runs of the hot stripe mask, as per-group block
+    lists — the shared tail of the host (``_sweep_small_batch``) and
+    device (``repro.kernels.sweep_grid``) grouped sweeps.
+
+    hot bool (G, NX-1, NX-1); xs/ys int (G, NX) sorted stripe boundaries
+    (stripe i spans ``xs[i]..xs[i+1]-1``).  Vectorized: +1/-1 edges of the
+    zero-padded hot mask mark run starts / one-past-run ends.
+    """
+    G, _, ny = hot.shape
+    NX = ny + 1
     out: list[list[tuple[int, int, int, int]]] = [[] for _ in range(G)]
     if not hot.any():
         return out
@@ -218,7 +238,7 @@ def _sweep_small_batch(arr: np.ndarray, sizes: np.ndarray, m: int
     for g in range(G):
         lo, hi = grp[g], grp[g + 1]
         if hi > lo:
-            out[g] = [tuple(r) for r in flat_blocks[lo:hi]]
+            out[g] = [tuple(int(x) for x in r) for r in flat_blocks[lo:hi]]
     return out
 
 
@@ -252,9 +272,13 @@ def _gather_arena(index, sketches, probe_backend: str
     arena = index.arena()
     k = arena.k
     pkeys, coords, valid = arena.encode_batch(sketches)
-    starts, ends = arena.probe(
-        pkeys, coords, valid,
-        backend="pallas" if probe_backend == "pallas" else "numpy")
+    if probe_backend == "device":
+        from .device_plan import resident_probe
+        starts, ends = resident_probe(index, pkeys, coords, valid)
+    else:
+        starts, ends = arena.probe(
+            pkeys, coords, valid,
+            backend="pallas" if probe_backend == "pallas" else "numpy")
     counts = ends - starts
     rows = arena.windows[_concat_ranges(starts, counts)]
     probe_ids = np.repeat(np.arange(len(pkeys), dtype=np.int64), counts)
@@ -262,42 +286,59 @@ def _gather_arena(index, sketches, probe_backend: str
 
 
 def batch_query(index, queries, theta: float, *,
-                sketches: list[list] | None = None,
-                sketch_backend: str = "exact",
-                probe_backend: str = "numpy",
-                sweep: str = "grouped",
+                options: QueryOptions | None = None,
+                sketches=UNSET,
+                sketch_backend=UNSET,
+                probe_backend=UNSET,
+                sweep=UNSET,
                 stage_times: dict | None = None) -> list[list[Alignment]]:
     """Definition-1 alignment for a batch of queries (the serving path).
 
-    ``sketches`` short-circuits sketching when the caller already holds the
-    batch's sketch coordinates (the sharded fan-out computes them once and
-    reuses them on every shard).  ``sketch_backend="pallas"`` routes a
-    weighted scheme's sketching through the fused device kernel in one
-    launch (f32; see ``WeightedScheme.sketch_batch``).
+    Execution comes in as ``options=QueryOptions(...)``: the ``plan``
+    field picks the pipeline (``"cpu"`` — exact host sketch, one host
+    ``searchsorted`` over the fused arena, vectorized grouped sweep;
+    ``"device"`` — arena resident on the accelerator, probe binary search
+    and small-group sweep as Pallas kernels, fused so only probe inputs go
+    up and final block extents come down; ``"auto"`` — device when a real
+    accelerator backs jax, else cpu), resolved ONCE per batch by
+    :func:`repro.core.plan.resolve_plan`.  Stage fields on the options
+    object pin individual stages for debugging.  All plans and pins are
+    block-identical.
 
-    ``probe_backend`` picks the frozen-index probe stage: ``"numpy"``
-    (default) probes the fused arena with one host ``searchsorted`` per
-    batch, ``"pallas"`` runs the arena binary search on device, and
-    ``"percoord"`` keeps the legacy k-probe loop (mutable dict indexes
-    always take that path).  ``sweep="grouped"`` batches small (query,
-    text) groups through the vectorized small-group sweep; ``"loop"``
-    sweeps every group individually.  All combinations are block-identical.
+    ``QueryOptions.sketches`` short-circuits sketching when the caller
+    already holds the batch's sketch coordinates (the sharded fan-out
+    computes them once and reuses them on every shard).
+
+    The bare ``sketches=``/``sketch_backend=``/``probe_backend=``/
+    ``sweep=`` keywords are deprecated (one release behind a
+    ``DeprecationWarning``); they coerce to pins on the cpu plan.
 
     ``stage_times``, when given, accumulates per-stage wall seconds under
     the keys ``"sketch"``, ``"probe"`` and ``"sweep"`` (the serve-path
     metrics hook; += so one dict can span many batches).
     """
+    opts = coerce_query_options(options, "batch_query", sketches=sketches,
+                                sketch_backend=sketch_backend,
+                                probe_backend=probe_backend, sweep=sweep)
+    xp = resolve_plan(opts)
     B = len(queries)
     if B == 0:
         return []
     m = max(1, math.ceil(index.scheme.k * theta))
     t0 = time.perf_counter()
-    if sketches is None:
-        sketches = index.scheme.sketch_batch(queries, backend=sketch_backend)
+    sk = opts.sketches
+    if sk is None:
+        sk = index.scheme.sketch_batch(queries, backend=xp.sketch_backend)
     t1 = time.perf_counter()
-    gathered = batch_probe(index, sketches, probe_backend=probe_backend)
+    if xp.fused and getattr(index, "is_frozen", False):
+        from .device_plan import fused_batch_query
+        out = fused_batch_query(index, sk, B, m, stage_times=stage_times)
+        if stage_times is not None:
+            stage_times["sketch"] = stage_times.get("sketch", 0.0) + (t1 - t0)
+        return out
+    gathered = batch_probe(index, sk, probe_backend=xp.probe_backend)
     t2 = time.perf_counter()
-    out = _sweep_gathered(gathered, B, m, sweep)
+    out = _sweep_gathered(gathered, B, m, xp.sweep)
     if stage_times is not None:
         t3 = time.perf_counter()
         stage_times["sketch"] = stage_times.get("sketch", 0.0) + (t1 - t0)
@@ -339,6 +380,40 @@ def batch_probe(index, sketches, *, probe_backend: str = "numpy"
             np.concatenate(cid_chunks))
 
 
+def _group_bounds(qid_all: np.ndarray, tid_all: np.ndarray,
+                  cid_all: np.ndarray
+                  ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """(query, text) grouping of a gathered probe.
+
+    Returns ``(order, starts, ends, distinct)``: ``order`` stably sorts the
+    gathered rows by (query id, text id) — both gather orders
+    (coordinate-major and query-major) are coordinate-ascending within a
+    (query, text) group, which the stable sort preserves — ``starts``/
+    ``ends`` bound each group in the sorted order, and ``distinct`` counts
+    each group's distinct colliding sketch coordinates (the >= m
+    prefilter, one reduceat).  Shared by the host dispatcher and the fused
+    device pipeline (:mod:`repro.core.device_plan`).
+    """
+    order = np.lexsort((tid_all, qid_all))
+    qid_s, tid_s, cid_s = qid_all[order], tid_all[order], cid_all[order]
+    n = len(qid_s)
+    change = (qid_s[1:] != qid_s[:-1]) | (tid_s[1:] != tid_s[:-1])
+    bounds = np.flatnonzero(change) + 1
+    starts = np.concatenate([[0], bounds])
+    ends = np.concatenate([bounds, [n]])
+    cid_step = np.empty(n, bool)
+    cid_step[0] = True
+    cid_step[1:] = cid_s[1:] != cid_s[:-1]
+    cid_step[starts] = True
+    distinct = np.add.reduceat(cid_step, starts)
+    return order, starts, ends, distinct
+
+
+#: small-group size buckets: padded width S stays tight for the (dominant)
+#: tiny groups instead of paying the largest small group everywhere
+_SIZE_BUCKETS = ((0, 8), (8, 16), (16, _SMALL_GROUP_MAX))
+
+
 def _sweep_gathered(gathered, B: int, m: int, sweep: str
                     ) -> list[list[Alignment]]:
     """Group the gathered windows by (query, text) and plane-sweep each
@@ -348,34 +423,16 @@ def _sweep_gathered(gathered, B: int, m: int, sweep: str
     if not len(qid_all):
         return results
 
-    # one lexsort groups the collided windows by (query, text); each group
-    # is a contiguous slice handed to the plane sweep.  Both gather orders
-    # (coordinate-major and query-major) are coordinate-ascending within a
-    # (query, text) group, which the stable sort preserves.
-    order = np.lexsort((win_all[:, 0], qid_all))
-    qid_all, win_all, cid_all = qid_all[order], win_all[order], cid_all[order]
-    n = len(qid_all)
-    change = (qid_all[1:] != qid_all[:-1]) | \
-        (win_all[1:, 0] != win_all[:-1, 0])
-    bounds = np.flatnonzero(change) + 1
-    starts = np.concatenate([[0], bounds])
-    ends = np.concatenate([bounds, [n]])
-    # vectorized distinct-coordinate prefilter (same as ``query``): count
-    # coordinate changes per group with one reduceat
-    cid_step = np.empty(n, bool)
-    cid_step[0] = True
-    cid_step[1:] = cid_all[1:] != cid_all[:-1]
-    cid_step[starts] = True
-    distinct = np.add.reduceat(cid_step, starts)
+    order, starts, ends, distinct = _group_bounds(
+        qid_all, win_all[:, 0], cid_all)
+    qid_all, win_all = qid_all[order], win_all[order]
     keep = distinct >= m
     sizes = ends - starts
 
     small_results: dict[int, list] = {}
-    if sweep == "grouped":
+    if sweep in ("grouped", "device"):
         sm_ids = np.flatnonzero(keep & (sizes <= _SMALL_GROUP_MAX))
-        # size buckets keep the padded width S tight for the (dominant)
-        # tiny groups instead of paying the largest small group everywhere
-        for b_lo, b_hi in ((0, 8), (8, 16), (16, _SMALL_GROUP_MAX)):
+        for b_lo, b_hi in _SIZE_BUCKETS:
             ids = sm_ids[(sizes[sm_ids] > b_lo) & (sizes[sm_ids] <= b_hi)]
             if not len(ids):
                 continue
@@ -386,7 +443,13 @@ def _sweep_gathered(gathered, B: int, m: int, sweep: str
             slot = np.arange(len(rows)) - np.repeat(
                 np.cumsum(s_sizes) - s_sizes, s_sizes)
             arr[np.repeat(np.arange(G), s_sizes), slot] = rows
-            for g, blocks in zip(ids, _sweep_small_batch(arr, s_sizes, m)):
+            if sweep == "device":
+                from ..kernels.sweep_grid import sweep_small_batch_device
+                batched = _extract_runs(
+                    *sweep_small_batch_device(arr, s_sizes, m))
+            else:
+                batched = _sweep_small_batch(arr, s_sizes, m)
+            for g, blocks in zip(ids, batched):
                 small_results[int(g)] = blocks
 
     for g in np.flatnonzero(keep):

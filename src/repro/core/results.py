@@ -168,12 +168,25 @@ class QueryResult:
 # sentinel distinguishing "kwarg not passed" from an explicit None
 UNSET = object()
 
-# legacy kwarg name -> QueryOptions field
-_LEGACY_NAMES = {"backend": "sketch_backend",
-                 "probe_backend": "probe_backend",
-                 "sweep": "sweep",
-                 "fanout": "fanout",
-                 "sketches": "sketches"}
+#: release in which the deprecated per-stage kwargs are removed — named in
+#: every DeprecationWarning so callers know how long the shim lives
+_REMOVAL_RELEASE = "0.3"
+
+# Legacy kwargs that RENAME to a QueryOptions field.  Kwargs whose spelling
+# already matches the field (probe_backend=, sweep=, ...) live only in
+# _LEGACY_PASSTHROUGH — a name is either current or legacy, never both
+# (the old table mapped probe_backend to itself, double-listing it).
+_LEGACY_RENAMES = {"backend": "sketch_backend"}
+
+# legacy kwargs whose QueryOptions field keeps the same name
+_LEGACY_PASSTHROUGH = ("sketch_backend", "probe_backend", "sweep", "fanout",
+                      "sketches")
+
+#: the stage fields a plan resolves (mirrors repro.core.plan.STAGE_FIELDS,
+#: duplicated here so the wire/result layer stays import-light)
+_STAGE_FIELDS = ("sketch_backend", "probe_backend", "sweep", "fanout")
+
+_WIRE_FIELDS = ("plan",) + _STAGE_FIELDS
 
 
 @dataclass(frozen=True)
@@ -181,45 +194,53 @@ class QueryOptions:
     """Execution knobs for the batched query path (content-neutral: every
     combination returns block-identical results).
 
-    sketch_backend: "exact" (vectorized host sketching) or "pallas"
-        (fused device kernel for weighted schemes).
-    probe_backend: "numpy" (one host searchsorted over the fused arena),
-        "pallas" (device binary search), or "percoord" (legacy k-probe
-        loop; what mutable dict tables always use).
-    sweep: "grouped" (batched small-group plane sweep) or "loop".
-    fanout: shard-probe parallelism for sharded indexes, "threaded" or
-        "serial" (ignored by flat indexes).
+    plan: which :class:`repro.core.plan.ExecutionPlan` runs the batch —
+        ``"cpu"`` (NumPy reference path), ``"device"`` (arena resident on
+        the accelerator, probe + sweep as Pallas kernels) or ``"auto"``
+        (device when a real accelerator backs jax, else silently cpu).
+        Resolved once per batch by ``repro.core.plan.resolve_plan``.
+    sketch_backend / probe_backend / sweep / fanout: per-stage *pins*.
+        ``None`` (the default) lets the plan pick; a concrete value pins
+        that one stage for debugging (``probe_backend="percoord"`` forces
+        the legacy k-probe loop regardless of plan).  Pinning a value the
+        plan cannot execute raises ``TypeError`` at resolution.
     sketches: precomputed batch sketch coordinates, short-circuiting the
         sketch stage (the caller guarantees they match the queries).
         Excluded from the wire form.
     """
 
-    sketch_backend: str = "exact"
-    probe_backend: str = "numpy"
-    sweep: str = "grouped"
-    fanout: str = "threaded"
+    plan: str = "cpu"
+    sketch_backend: str | None = None
+    probe_backend: str | None = None
+    sweep: str | None = None
+    fanout: str | None = None
     sketches: object = None
 
     def batch_key(self) -> tuple:
         """Coalescing key: requests whose options agree on these knobs may
-        be served by one fused probe."""
-        return (self.sketch_backend, self.probe_backend, self.sweep,
-                self.fanout)
+        be served by one fused probe.  The plan name is part of the key,
+        so mixed-plan traffic (cpu and device requests interleaved on one
+        server) never coalesces into a single dispatch; unresolved pins
+        (``None``) key differently from their resolved values — a
+        conservative split that can only under-coalesce, never mix."""
+        return (self.plan, self.sketch_backend, self.probe_backend,
+                self.sweep, self.fanout)
 
     def to_dict(self) -> dict:
-        return {"sketch_backend": self.sketch_backend,
-                "probe_backend": self.probe_backend,
-                "sweep": self.sweep, "fanout": self.fanout}
+        d = {"plan": self.plan}
+        d.update({f: getattr(self, f) for f in _STAGE_FIELDS
+                  if getattr(self, f) is not None})
+        return d
 
     @classmethod
     def from_dict(cls, d: dict | None) -> "QueryOptions":
         d = d or {}
-        unknown = set(d) - set(_LEGACY_NAMES.values())
+        unknown = set(d) - set(_WIRE_FIELDS)
         if unknown:
+            if "sketches" in d:
+                raise ValueError("sketches are an in-process short-circuit "
+                                 "and cannot travel over the wire")
             raise ValueError(f"unknown query options: {sorted(unknown)}")
-        if "sketches" in d:
-            raise ValueError("sketches are an in-process short-circuit and "
-                             "cannot travel over the wire")
         return cls(**{k: d[k] for k in d})
 
 
@@ -230,8 +251,11 @@ def coerce_query_options(options: QueryOptions | None, where: str,
 
     ``legacy`` maps old kwarg names to the values the caller received
     (``UNSET`` when not passed).  Passing any old kwarg emits a
-    ``DeprecationWarning`` naming the replacement; mixing both surfaces
-    in one call is an error (silently preferring one would hide a bug).
+    ``DeprecationWarning`` naming the replacement and the release the
+    kwarg dies in; mixing both surfaces in one call is an error (silently
+    preferring one would hide a bug).  Coerced stage kwargs become *pins*
+    on the default ``"cpu"`` plan, which reproduces their pre-plan
+    behavior exactly.
     """
     given = {k: v for k, v in legacy.items() if v is not UNSET}
     if not given:
@@ -240,9 +264,17 @@ def coerce_query_options(options: QueryOptions | None, where: str,
         raise TypeError(
             f"{where}: pass options=QueryOptions(...) or the legacy "
             f"keyword arguments {sorted(given)}, not both")
-    renames = {k: _LEGACY_NAMES[k] for k in given}
+    renames = {}
+    for k in given:
+        if k in _LEGACY_RENAMES:
+            renames[k] = _LEGACY_RENAMES[k]
+        elif k in _LEGACY_PASSTHROUGH:
+            renames[k] = k
+        else:
+            raise TypeError(f"{where}: unknown legacy keyword argument {k!r}")
     warnings.warn(
-        f"{where}: keyword arguments {sorted(given)} are deprecated; pass "
+        f"{where}: keyword arguments {sorted(given)} are deprecated and "
+        f"will be removed in release {_REMOVAL_RELEASE}; pass "
         "options=QueryOptions(" +
         ", ".join(f"{renames[k]}=..." for k in sorted(given)) + ") instead",
         DeprecationWarning, stacklevel=3)

@@ -32,6 +32,11 @@ class SearchIndex:
     num_windows: int = 0
     text_lengths: list[int] = field(default_factory=list)
     _arena: ProbeArena | None = field(default=None, repr=False, compare=False)
+    # (host ProbeArena, DeviceArena | None) pair cached by
+    # repro.core.device_plan.device_arena — keyed on the arena's identity,
+    # so residency lives and dies with this (immutable) index instance
+    _device_arena: tuple | None = field(default=None, repr=False,
+                                        compare=False)
 
     # -- query-engine surface (duck-typed with IndexBuilder) ----------------
 

@@ -44,6 +44,7 @@ from ..fault import checkpoint as fault_checkpoint
 from ..fault import fsio
 from . import store as index_store
 from .builder import IndexBuilder
+from .plan import resolve_plan
 from .query import Alignment, _sweep_gathered, batch_probe, query
 from .results import UNSET, QueryOptions, coerce_query_options
 from .search import SearchIndex
@@ -233,9 +234,12 @@ class ShardedAlignmentIndex:
         family), probe every shard's tables with the same sketches, union
         per query in the global id space.
 
-        Execution knobs come in as ``options=QueryOptions(...)``; the
-        pre-redesign ``sketches``/``backend``/``probe_backend``/``fanout``
-        keywords still work behind a ``DeprecationWarning``.
+        Execution comes in as ``options=QueryOptions(...)`` whose ``plan``
+        is resolved once for the whole fan-out (every shard runs the same
+        resolved stages; ``plan="device"`` probes each frozen shard's
+        resident arena).  The pre-redesign ``sketches``/``backend``/
+        ``probe_backend``/``fanout`` keywords still work behind a
+        ``DeprecationWarning``.
 
         ``QueryOptions.fanout="threaded"`` (default) overlaps the
         per-shard *probe* stage (:func:`repro.core.query.batch_probe`)
@@ -262,12 +266,13 @@ class ShardedAlignmentIndex:
         opts = coerce_query_options(
             options, "ShardedAlignmentIndex.batch_query", sketches=sketches,
             backend=backend, probe_backend=probe_backend, fanout=fanout)
+        xp = resolve_plan(opts)
         if not texts:
             return []
         t0 = time.perf_counter()
         sk = opts.sketches
         if sk is None:
-            sk = self.scheme.sketch_batch(texts, backend=opts.sketch_backend)
+            sk = self.scheme.sketch_batch(texts, backend=xp.sketch_backend)
         inverse = self._inverse_doc_map()
         B = len(texts)
         m = max(1, math.ceil(self.scheme.k * theta))
@@ -280,7 +285,7 @@ class ShardedAlignmentIndex:
                 try:
                     fault_checkpoint(f"sharded.probe.s{s}")
                     return batch_probe(shard, sk,
-                                       probe_backend=opts.probe_backend)
+                                       probe_backend=xp.probe_backend)
                 except Exception:
                     if attempt + 1 >= attempts:
                         if failures is None:
@@ -291,14 +296,14 @@ class ShardedAlignmentIndex:
                     delay *= 2
 
         t1 = time.perf_counter()
-        if opts.fanout == "threaded" and self.n_shards > 1:
+        if xp.fanout == "threaded" and self.n_shards > 1:
             gathered = list(self._fanout_pool().map(probe_shard,
                                                     enumerate(self.shards)))
         else:
             gathered = [probe_shard(s) for s in enumerate(self.shards)]
         t2 = time.perf_counter()
         # a failed (skipped) shard contributes an empty result per query
-        shard_results = [_sweep_gathered(g, B, m, opts.sweep)
+        shard_results = [_sweep_gathered(g, B, m, xp.sweep)
                          if g is not None else [[] for _ in texts]
                          for g in gathered]
 

@@ -5,7 +5,7 @@ Query request::
 
     {"text": "a string" | [int tokens],
      "theta": 0.8,
-     "options": {"probe_backend": "numpy", ...},   # QueryOptions.to_dict()
+     "options": {"plan": "device", ...},           # QueryOptions.to_dict()
      "deadline_ms": 50,                            # optional, relative
      "id": "any-client-token"}                     # optional, echoed back
 

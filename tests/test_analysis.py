@@ -254,18 +254,40 @@ def old_style(aligner, qs):
 def new_style(aligner, qs, opts):
     return aligner.find_batch(qs, 0.5, options=opts)
 
-def core_function_ok(index, qs):
+def core_function_old(index, qs):
     from repro.core import batch_query
-    return batch_query(index, qs, 0.5, sketch_backend="exact")
+    return batch_query(index, qs, 0.5, sketch_backend="exact")  # RPR404
+
+def core_function_ok(index, qs, opts):
+    from repro.core import batch_query
+    return batch_query(index, qs, 0.5, options=opts)
 '''
 
 
 def test_api_rules_flag_each_deprecated_surface(tmp_path):
     _write(tmp_path, "pkg/old.py", API_FIXTURE)
     report = run_analysis(["pkg"], root=tmp_path)
-    assert _rules(report) == ["RPR401", "RPR402", "RPR403"]
+    assert _rules(report) == ["RPR401", "RPR402", "RPR403", "RPR404"]
     assert sum(f.rule == "RPR403" for f in report.findings) == 2
     assert all("new_style" not in f.message for f in report.findings)
+
+
+def test_rpr404_method_calls_defer_overlap_to_rpr401(tmp_path):
+    # on a *method* call RPR401 owns probe_backend/sweep/sketches; RPR404
+    # adds only the spellings RPR401 cannot see (sketch_backend, and any
+    # stage kwarg on a bare-function call) so one call site never earns
+    # two findings for the same kwarg
+    _write(tmp_path, "pkg/mixed.py", '''
+def f(aligner, idx, qs, sk):
+    from repro.core import batch_query
+    aligner.find_batch(qs, 0.5, sweep="loop")              # RPR401 only
+    aligner.find_batch(qs, 0.5, sketch_backend="exact")    # RPR404 only
+    batch_query(idx, qs, 0.5, probe_backend="numpy", sweep="loop")  # RPR404
+''')
+    report = run_analysis(["pkg"], rules=["RPR4"], root=tmp_path)
+    assert _rules(report) == ["RPR401", "RPR404"]
+    by_line = {f.line: f.rule for f in report.findings}
+    assert by_line == {4: "RPR401", 5: "RPR404", 6: "RPR404"}
 
 
 # -- suppressions, parse errors, CLI ----------------------------------------

@@ -1,0 +1,283 @@
+"""Execution plans + the device-resident query pipeline (PR 10).
+
+The contract under test: ``plan="device"`` is *block-for-block identical*
+to ``plan="cpu"`` on every scheme (the kernels run in interpret mode on
+CPU CI), the ProbeArena goes device-resident at most once per store
+generation (and re-uploads exactly once when compaction/promotion swaps
+the generation), the mutable live delta level transparently keeps the
+host probe, ``plan="auto"`` downgrades silently when no accelerator backs
+jax, and the legacy per-stage kwargs still work one release behind a
+``DeprecationWarning`` that names the removal release.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import Aligner
+from repro.core import (IndexBuilder, LiveIndex, MultisetScheme,
+                        QueryOptions, WeightedScheme, WeightFn, batch_query,
+                        make_scheme, resolve_plan, save_index)
+from repro.core import device_plan as dp
+from repro.core.device_plan import (device_arena, reset_transfer_stats,
+                                    resident_probe, transfer_stats)
+
+SCHEMES = {
+    "multiset": lambda docs: MultisetScheme(seed=13, k=8),
+    "weighted": lambda docs: WeightedScheme(weight=WeightFn(tf="raw"),
+                                            seed=21, k=8),
+    "tfidf": lambda docs: make_scheme("tfidf", seed=5, k=8, corpus=docs),
+}
+
+
+def _corpus(rng, n_docs=6, vocab=30, n=50):
+    docs = [rng.integers(0, vocab, size=n).astype(np.int64)
+            for _ in range(n_docs)]
+    docs[-1] = docs[1].copy()                     # planted duplicate
+    return docs
+
+
+def _queries(rng, docs, n=5):
+    qs = [docs[i % len(docs)][5:30].copy() for i in range(n)]
+    qs.append(rng.integers(1000, 1030, size=12).astype(np.int64))  # miss
+    return qs
+
+
+def _blocks(results):
+    return [(a.text_id, a.blocks) for a in results]
+
+
+def _batch_blocks(res):
+    return [_blocks(r) for r in res]
+
+
+def _frozen(kind, docs):
+    return IndexBuilder(scheme=SCHEMES[kind](docs)).build(docs).freeze()
+
+
+# --------------------------------------------------------------------------
+# bit parity: plan="device" == plan="cpu", block for block
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", list(SCHEMES))
+@pytest.mark.parametrize("theta", [0.3, 0.6, 1.0])
+def test_device_plan_matches_cpu_plan(kind, theta):
+    rng = np.random.default_rng(0)
+    docs = _corpus(rng)
+    frozen = _frozen(kind, docs)
+    qs = _queries(rng, docs)
+    cpu = batch_query(frozen, qs, theta, options=QueryOptions(plan="cpu"))
+    dev = batch_query(frozen, qs, theta, options=QueryOptions(plan="device"))
+    assert _batch_blocks(dev) == _batch_blocks(cpu)
+    # ncoords (the similarity numerator) survives the fused path too
+    assert [[a.ncoords for a in r] for r in dev] == \
+        [[a.ncoords for a in r] for r in cpu]
+
+
+@pytest.mark.parametrize("kind", ["multiset", "weighted"])
+def test_resident_probe_matches_host_probe(kind):
+    # both arena key layouts: weighted packs (coord << 56) | key, multiset's
+    # wide hashes carry the coordinate as a separate tag word
+    rng = np.random.default_rng(1)
+    docs = _corpus(rng)
+    frozen = _frozen(kind, docs)
+    arena = frozen.arena()
+    sketches = frozen.scheme.sketch_batch(_queries(rng, docs))
+    pk, co, va = arena.encode_batch(sketches)
+    host_s, host_e = arena.probe(pk, co, va, backend="numpy")
+    dev_s, dev_e = resident_probe(frozen, pk, co, va)
+    assert np.array_equal(dev_s, host_s)
+    assert np.array_equal(dev_e, host_e)
+
+
+def test_device_plan_on_mutable_builder_falls_back_to_host_probe():
+    # fused pipeline needs a frozen index; a dict-table builder under
+    # plan="device" still answers (host per-coordinate probe, device sweep)
+    rng = np.random.default_rng(2)
+    docs = _corpus(rng)
+    builder = IndexBuilder(scheme=MultisetScheme(seed=13, k=8)).build(docs)
+    qs = _queries(rng, docs)
+    cpu = batch_query(builder, qs, 0.5, options=QueryOptions(plan="cpu"))
+    dev = batch_query(builder, qs, 0.5, options=QueryOptions(plan="device"))
+    assert _batch_blocks(dev) == _batch_blocks(cpu)
+
+
+# --------------------------------------------------------------------------
+# residency: one upload per store generation
+# --------------------------------------------------------------------------
+
+def test_arena_uploads_once_across_batches():
+    rng = np.random.default_rng(3)
+    docs = _corpus(rng)
+    frozen = _frozen("multiset", docs)
+    qs = _queries(rng, docs)
+    opts = QueryOptions(plan="device")
+    reset_transfer_stats()
+    for _ in range(3):
+        batch_query(frozen, qs, 0.5, options=opts)
+    st = transfer_stats()
+    assert st["batches"] == 3
+    assert st["arena_uploads"] == 1               # resident, not re-sent
+    assert st["arena_bytes"] > 0
+    # steady-state per-batch traffic excludes the arena: strictly smaller
+    # than re-uploading it every batch would be
+    assert st["h2d_bytes"] < 3 * st["arena_bytes"] + st["arena_bytes"]
+    # the cache is keyed by arena identity on the index instance
+    assert frozen._device_arena[0] is frozen.arena()
+    assert device_arena(frozen) is frozen._device_arena[1]
+
+
+def test_residency_invalidated_by_compaction(tmp_path):
+    rng = np.random.default_rng(4)
+    base = _corpus(rng, n_docs=8)
+    scheme = MultisetScheme(seed=13, k=8)
+    save_index(IndexBuilder(scheme=scheme).build(base).freeze(),
+               tmp_path / "idx")
+    live = LiveIndex.open(tmp_path / "idx")
+    qs = _queries(rng, base)
+    opts = QueryOptions(plan="device")
+
+    reset_transfer_stats()
+    first = live.batch_query(qs, 0.5, options=opts)
+    live.batch_query(qs, 0.5, options=opts)
+    assert transfer_stats()["arena_uploads"] == 1
+
+    # promotion swaps in a new SearchIndex generation: exactly one more
+    # upload, and the old residency can never serve the new generation
+    extra = [base[2].copy(), rng.integers(0, 30, 50).astype(np.int64)]
+    for t in extra:
+        live.add_text(t)
+    live.compact()
+    assert live.generation == 1
+    live.batch_query(qs, 0.5, options=opts)
+    live.batch_query(qs, 0.5, options=opts)
+    assert transfer_stats()["arena_uploads"] == 2
+
+    oracle = IndexBuilder(scheme=scheme).build(base + extra)
+    assert _batch_blocks(live.batch_query(qs, 0.5, options=opts)) == \
+        _batch_blocks(batch_query(oracle, qs, 0.5))
+    assert _batch_blocks(first) == \
+        _batch_blocks(batch_query(IndexBuilder(scheme=scheme).build(base),
+                                  qs, 0.5))
+
+
+def test_oversized_arena_caches_host_fallback(monkeypatch):
+    rng = np.random.default_rng(5)
+    docs = _corpus(rng)
+    frozen = _frozen("multiset", docs)
+    qs = _queries(rng, docs)
+    cpu = _batch_blocks(batch_query(frozen, qs, 0.5,
+                                    options=QueryOptions(plan="cpu")))
+    # pretend the CSR extent overflows the kernel's int32 offsets
+    monkeypatch.setattr(dp, "_I32_MAX", -1)
+    reset_transfer_stats()
+    opts = QueryOptions(plan="device")
+    for _ in range(2):
+        got = _batch_blocks(batch_query(frozen, qs, 0.5, options=opts))
+        assert got == cpu                         # host fallback, same blocks
+    st = transfer_stats()
+    assert st["arena_uploads"] == 0
+    assert st["h2d_bytes"] == 0 and st["d2h_bytes"] == 0
+    # the None outcome is cached: no rebuild attempt per batch
+    assert frozen._device_arena == (frozen.arena(), None)
+
+
+# --------------------------------------------------------------------------
+# live delta level: host probe fallback under writes
+# --------------------------------------------------------------------------
+
+def test_live_delta_serves_device_plan_via_host_fallback(tmp_path):
+    rng = np.random.default_rng(6)
+    base = _corpus(rng, n_docs=8)
+    scheme = MultisetScheme(seed=13, k=8)
+    save_index(IndexBuilder(scheme=scheme).build(base).freeze(),
+               tmp_path / "idx")
+    live = LiveIndex.open(tmp_path / "idx")
+    delta = [rng.integers(0, 30, 50).astype(np.int64) for _ in range(2)]
+    delta.append(base[2].copy())                  # near-dup lands in delta
+    for t in delta:
+        live.add_text(t)
+    assert live.delta.num_texts == len(delta)     # genuinely pre-compaction
+
+    qs = _queries(rng, base) + [delta[-1][:30]]
+    oracle = IndexBuilder(scheme=scheme).build(base + delta)
+    expected = _batch_blocks(batch_query(oracle, qs, 0.5))
+    got = _batch_blocks(live.batch_query(
+        qs, 0.5, options=QueryOptions(plan="device")))
+    assert got == expected
+    # results include hits resolved from the mutable delta level (high
+    # text ids), proving the host-probed delta merged into the device scan
+    assert any(tid >= len(base) for r in got for tid, _ in r)
+
+
+# --------------------------------------------------------------------------
+# plan resolution: auto downgrade + pin validation
+# --------------------------------------------------------------------------
+
+def test_auto_plan_downgrades_without_accelerator():
+    xp = resolve_plan(QueryOptions(plan="auto"),
+                      capabilities={"device": False})
+    assert xp.name == "cpu" and not xp.fused
+    xp = resolve_plan(QueryOptions(plan="auto"),
+                      capabilities={"device": True})
+    assert xp.name == "device" and xp.fused
+    # no capability override: follows the real backend probe, silently
+    assert resolve_plan(QueryOptions(plan="auto")).name in ("cpu", "device")
+
+
+def test_resolved_device_plan_keeps_exact_sketching():
+    xp = resolve_plan(QueryOptions(plan="device"))
+    assert xp.sketch_backend == "exact"           # bit parity by default
+    assert xp.probe_backend == "device" and xp.sweep == "device"
+
+
+def test_stage_pins_override_plan_defaults():
+    xp = resolve_plan(QueryOptions(plan="device", sweep="grouped"))
+    assert xp.sweep == "grouped" and not xp.fused
+    assert xp.probe_backend == "device"
+
+
+def test_unknown_plan_and_invalid_pin_are_errors():
+    with pytest.raises(ValueError, match="unknown execution plan"):
+        resolve_plan(QueryOptions(plan="gpu"))
+    with pytest.raises(TypeError, match="cannot execute"):
+        resolve_plan(QueryOptions(plan="cpu", probe_backend="device"))
+
+
+# --------------------------------------------------------------------------
+# deprecation shims: one release of grace, loudly
+# --------------------------------------------------------------------------
+
+def test_legacy_kwargs_warn_name_release_and_round_trip():
+    rng = np.random.default_rng(7)
+    docs = _corpus(rng)
+    frozen = _frozen("multiset", docs)
+    qs = _queries(rng, docs)
+    new = batch_query(frozen, qs, 0.5,
+                      options=QueryOptions(probe_backend="percoord",
+                                           sweep="loop"))
+    with pytest.warns(DeprecationWarning, match=r"removed in release 0\.3"):
+        old = batch_query(frozen, qs, 0.5,                      # repro: allow[RPR404]
+                          probe_backend="percoord", sweep="loop")
+    assert _batch_blocks(old) == _batch_blocks(new)
+
+
+def test_aligner_legacy_backend_kwarg_warns_and_matches():
+    rng = np.random.default_rng(8)
+    docs = _corpus(rng)
+    a = Aligner.build(docs, similarity="multiset", k=8)
+    qs = _queries(rng, docs)
+    new = a.find_batch(qs, 0.5, options=QueryOptions(sketch_backend="exact"))
+    with pytest.warns(DeprecationWarning, match=r"options=QueryOptions"):
+        old = a.find_batch(qs, 0.5, backend="exact")            # repro: allow[RPR401]
+    assert _batch_blocks(old) == _batch_blocks(new)
+
+
+def test_mixing_options_and_legacy_kwargs_is_an_error():
+    rng = np.random.default_rng(9)
+    docs = _corpus(rng)
+    frozen = _frozen("multiset", docs)
+    with pytest.raises(TypeError, match="both"):
+        batch_query(frozen, [docs[0][:20]], 0.5,    # repro: allow[RPR404]
+                    options=QueryOptions(plan="cpu"), sweep="loop")

@@ -6,8 +6,8 @@ import numpy as np
 import pytest
 
 from repro.core import (FrozenTable, IndexBuilder, MultisetScheme,
-                        SearchIndex, ShardedAlignmentIndex, WeightedScheme,
-                        WeightFn, batch_query, query)
+                        QueryOptions, SearchIndex, ShardedAlignmentIndex,
+                        WeightedScheme, WeightFn, batch_query, query)
 
 
 def _corpus(rng, n_docs=6, vocab=30, n=50):
@@ -170,7 +170,7 @@ def test_pallas_sketch_backend_end_to_end():
     scheme = WeightedScheme(weight=WeightFn(tf="raw"), seed=9, k=8)
     idx = IndexBuilder(scheme=scheme).build(docs).freeze()
     res = batch_query(idx, [docs[2][10:60].copy()], 0.5,
-                      sketch_backend="pallas")
+                      options=QueryOptions(sketch_backend="pallas"))
     assert any(a.text_id == 2 for a in res[0])
 
 

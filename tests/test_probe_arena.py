@@ -171,7 +171,9 @@ def test_batch_query_backends_equal_looped_query(kind, theta):
     for probe_backend in ("numpy", "pallas", "percoord"):
         for sweep in ("grouped", "loop"):
             got = [_blocks(r) for r in batch_query(
-                frozen, qs, theta, probe_backend=probe_backend, sweep=sweep)]
+                frozen, qs, theta,
+                options=QueryOptions(probe_backend=probe_backend,
+                                     sweep=sweep))]
             assert got == looped, (probe_backend, sweep)
 
 

@@ -173,6 +173,51 @@ def test_batcher_splits_incompatible_options():
     assert len(set(seen)) == 3
 
 
+def test_execution_plan_rides_the_wire_and_keys_batches():
+    """``options.plan`` survives the request envelope and partitions the
+    batcher's coalescing key, so mixed-plan traffic never shares a
+    ``find_batch`` call (a cpu request must not ride a device batch)."""
+    from repro.serve.protocol import ProtocolError, parse_query_request
+    req = parse_query_request(
+        {"text": [1, 2, 3], "theta": 0.6, "options": {"plan": "device"}})
+    assert req.options.plan == "device"
+    assert req.options.batch_key() != QueryOptions().batch_key()
+    # same plan, same pins -> same key: coalescable
+    assert req.options.batch_key() == \
+        QueryOptions(plan="device").batch_key()
+    # server-side sketching means client-supplied sketches stay rejected
+    with pytest.raises(ProtocolError, match="sketches"):
+        parse_query_request({"text": [1], "options": {"sketches": []}})
+
+    aligner, docs = _mk_aligner()
+    seen = []
+    orig = aligner.find_batch
+
+    def spy(texts, theta, *, options=None, **kw):
+        seen.append(options.batch_key())
+        return orig(texts, theta, options=options, **kw)
+
+    aligner.find_batch = spy
+
+    async def main():
+        batcher = DynamicBatcher(aligner, max_batch=32,
+                                 max_linger_us=50_000.0)
+        q = [int(t) for t in docs[0][:60]]
+        futs = [batcher.submit_query(q, 0.5),
+                batcher.submit_query(q, 0.5),
+                batcher.submit_query(q, 0.5,
+                                     options=QueryOptions(plan="device"))]
+        res = await asyncio.gather(*futs)
+        await batcher.close()
+        return res
+
+    res = asyncio.run(main())
+    assert len(seen) == 2                 # 2 cpu coalesced + 1 device
+    assert len(set(seen)) == 2
+    # and the device-plan result matches the coalesced cpu results
+    assert res[2].to_dict() == res[0].to_dict()
+
+
 def test_deadline_expired_skips_probe():
     """A request whose deadline passes while queued is failed with
     DeadlineExceeded and must never reach the engine."""
